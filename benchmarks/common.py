@@ -1,0 +1,128 @@
+"""Shared benchmark driver: the §6 protocol with QPS-at-recall measurement.
+
+Scaled to CPU budgets (defaults ~3k base vs the paper's 900k) — relative
+orderings are the claims under test, and hop counts (hardware-independent)
+are reported alongside wall-clock QPS.
+
+QPS at 0.8 recall follows the paper: per batch, walk a pool-size ladder
+until recall@10 ≥ 0.8, then report QPS at that setting (compiled fns are
+cached per pool size across batches/strategies).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.core import IPGMIndex, IndexParams, SearchParams
+from repro.core import metrics as metrics_mod
+from repro.core import search as search_mod
+from repro.data.workload import UpdateWorkload, make_workload
+
+POOL_LADDER = (8, 16, 24, 32, 48, 64, 96)
+RECALL_TARGET = 0.8
+K = 10
+
+STRATEGIES = ("pure", "mask", "local", "global")
+
+
+@dataclasses.dataclass
+class BatchRecord:
+    step: int
+    strategy: str
+    recall: float
+    qps: float
+    pool_used: int
+    avg_hops: float
+    update_s: float
+    query_s: float
+
+
+def _copy_state(state):
+    return jax.tree.map(lambda x: x.copy() if hasattr(x, "copy") else x, state)
+
+
+def measure_query_at_recall(
+    index: IPGMIndex, queries: np.ndarray, true_ids, *, ladder=POOL_LADDER,
+    target=RECALL_TARGET,
+) -> tuple[float, float, int, float]:
+    """(recall, qps, pool_used, avg_hops) at the first ladder rung hitting
+    the target (or the last rung)."""
+    import jax.numpy as jnp
+
+    q = jnp.asarray(queries)
+    for pool in ladder:
+        sp = SearchParams(pool_size=max(pool, K), max_steps=3 * pool,
+                          num_starts=2)
+        key = jax.random.PRNGKey(0)
+        res = search_mod.search_batch(index.state, q, key, sp)
+        jax.block_until_ready(res.ids)
+        t0 = time.perf_counter()
+        res = search_mod.search_batch(index.state, q, key, sp)
+        jax.block_until_ready(res.ids)
+        dt = time.perf_counter() - t0
+        rec = float(metrics_mod.recall_at_k(res.ids, true_ids, K))
+        hops = float(np.mean(np.asarray(res.n_expanded)))
+        if rec >= target or pool == ladder[-1]:
+            return rec, queries.shape[0] / dt, pool, hops
+    raise AssertionError
+
+
+def run_strategy_workload(
+    wl: UpdateWorkload,
+    strategy: str,
+    *,
+    d_out: int = 12,
+    seed: int = 0,
+    rebuild_each_batch: bool = False,
+    query_subset: int = 256,
+) -> list[BatchRecord]:
+    dim = wl.base.shape[1]
+    total = wl.base.shape[0] + sum(x.shape[0] for x in wl.step_inserts) + 16
+    params = IndexParams(
+        capacity=total, dim=dim, d_out=d_out,
+        search=SearchParams(pool_size=32, max_steps=96, num_starts=2),
+    )
+    index = IPGMIndex(params, strategy=strategy, seed=seed, delete_chunk=64)
+    ids = index.insert(wl.base)
+    id_map = list(np.asarray(ids))
+    queries = wl.queries[:query_subset]
+
+    records = []
+    # batch 0: base set, no updates (the paper's common starting point)
+    _, true_ids = index.ground_truth(queries, K)
+    rec, qps, pool, hops = measure_query_at_recall(index, queries, true_ids)
+    records.append(BatchRecord(0, strategy, rec, qps, pool, hops, 0.0, 0.0))
+
+    for step in range(wl.n_steps):
+        t0 = time.perf_counter()
+        gids = [id_map[p] for p in wl.step_deletes[step]]
+        if rebuild_each_batch:
+            # ReBuild baseline: drop (cheap PURE) + full reconstruction
+            index.strategy = "pure"
+            index.delete(np.asarray(gids))
+            new = index.insert(wl.step_inserts[step])
+            id_map.extend(np.asarray(new))
+            alive_before = np.flatnonzero(np.asarray(index.state.alive))
+            index.rebuild_from_alive()  # compacts alive slots → 0..n-1
+            remap = {int(old): new_id
+                     for new_id, old in enumerate(alive_before)}
+            id_map = [remap.get(int(g), -1) if g is not None else -1
+                      for g in id_map]
+        else:
+            index.delete(np.asarray(gids))
+            new = index.insert(wl.step_inserts[step])
+            id_map.extend(np.asarray(new))
+        update_s = time.perf_counter() - t0
+
+        _, true_ids = index.ground_truth(queries, K)
+        t0 = time.perf_counter()
+        rec, qps, pool, hops = measure_query_at_recall(index, queries, true_ids)
+        query_s = time.perf_counter() - t0
+        records.append(
+            BatchRecord(step + 1, strategy, rec, qps, pool, hops,
+                        update_s, query_s)
+        )
+    return records

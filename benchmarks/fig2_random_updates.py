@@ -1,0 +1,51 @@
+"""Figure 2: relative QPS (vs ReBuild) at 0.8 recall per update batch —
+random update pattern. One curve per strategy, per dataset surrogate."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import STRATEGIES, run_strategy_workload
+from repro.data.workload import make_workload
+
+RESULTS = Path(__file__).resolve().parents[1] / "results"
+
+
+def run(
+    *,
+    datasets=("sift", "glove200"),
+    n_base=3000,
+    n_steps=5,
+    batch_size=300,
+    n_queries=512,
+    pattern="random",
+    out_name="fig2_random.json",
+    dim_override=None,
+) -> dict:
+    out = {}
+    for ds in datasets:
+        wl = make_workload(ds, n_base=n_base, n_steps=n_steps,
+                           batch_size=batch_size, n_queries=n_queries,
+                           pattern=pattern, dim=dim_override)
+        ds_out = {}
+        rebuild = run_strategy_workload(wl, "pure", rebuild_each_batch=True)
+        ds_out["rebuild"] = [r.__dict__ for r in rebuild]
+        for strat in STRATEGIES:
+            recs = run_strategy_workload(wl, strat)
+            ds_out[strat] = [r.__dict__ for r in recs]
+            rel = [
+                r.qps / max(b.qps, 1e-9)
+                for r, b in zip(recs, rebuild)
+            ]
+            print(f"[{pattern}:{ds}] {strat:7s} rel-QPS/batch: "
+                  + " ".join(f"{x:.2f}" for x in rel)
+                  + f" | recall last={recs[-1].recall:.3f}"
+                  + f" hops last={recs[-1].avg_hops:.1f}")
+        out[ds] = ds_out
+    RESULTS.mkdir(exist_ok=True)
+    (RESULTS / out_name).write_text(json.dumps(out, indent=1))
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,16 @@
+"""Figure 3: same as Fig 2 under the clustered update pattern — whole
+k-means clusters expire together (the hard case for edge repair)."""
+from __future__ import annotations
+
+from benchmarks import fig2_random_updates as fig2
+
+
+def run(**kw):
+    kw.setdefault("pattern", "clustered")
+    kw.setdefault("out_name", "fig3_clustered.json")
+    kw.setdefault("datasets", ("sift", "glove200"))
+    return fig2.run(**kw)
+
+
+if __name__ == "__main__":
+    run()

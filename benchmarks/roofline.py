@@ -1,0 +1,189 @@
+"""Roofline assembler (deliverable g).
+
+Per (arch × shape) on the single-pod mesh:
+    compute    = jaxpr_FLOPs / (chips × 197e12)           [s]
+    memory     = jaxpr_HBM_bytes / (chips × 819e9)        [s]
+    collective = analytic collective bytes / (chips × 50e9) [s]
+plus the dominant term, MODEL_FLOPS / HLO_FLOPs utilization ratio, and the
+per-device fit from the dry-run manifest.
+
+FLOPs/bytes come from the trip-count-aware jaxpr walker
+(launch/analysis.py) — XLA CPU's cost_analysis counts loop bodies once and
+is only used as a cross-check on loop-free cells. Collective bytes come
+from the sharding-rule model (launch/collectives.py); the manifest's
+one-shot HLO counts bound the non-looped part.
+
+Writes results/roofline.json + a markdown table for EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+PEAK_FLOPS = 197e12      # bf16 / chip (TPU v5e)
+HBM_BW = 819e9           # bytes/s / chip
+ICI_BW = 50e9            # bytes/s / link
+CHIPS = 256              # single-pod 16×16
+
+RESULTS = Path(__file__).resolve().parents[1] / "results"
+MANIFEST = RESULTS / "dryrun_manifest.json"
+
+
+def analyze_cell(arch_id: str, shape: str, mesh) -> dict:
+    import jax
+
+    from repro.configs import registry as reg
+    from repro.launch.analysis import cost_of
+    from repro.launch.cells import build_cell
+    from repro.launch.collectives import collectives_for
+
+    spec = reg.get_arch(arch_id)
+    cell_meta = spec.shapes[shape]
+    with jax.set_mesh(mesh):
+        cell = build_cell(arch_id, shape, mesh)
+        # raw python callable behind the jit wrapper
+        raw = getattr(cell.fn, "__wrapped__", cell.fn)
+        while_trip = 1
+        if spec.family == "ipgm":
+            while_trip = spec.config_for_shape(shape).search.max_steps
+        cost = cost_of(raw, *cell.args, while_trip=while_trip, io_bytes=False)
+        cfg = spec.config_for_shape(shape)
+        params_sds = cell.args[0]
+        from repro.launch import sharding as shr
+        p_specs = cell.param_specs
+        coll = collectives_for(spec.family, cfg, cell_meta, mesh,
+                               params_sds=params_sds, p_specs=p_specs)
+        # program-IO per device at the ACTUAL sharding (params replicated
+        # over an axis cost full reads; FSDP params cost 1/chips)
+        import numpy as np
+
+        def _b(x):
+            try:
+                return float(np.prod(x.shape, dtype=np.float64)) * np.dtype(
+                    x.dtype).itemsize
+            except TypeError:
+                return float(np.prod(x.shape, dtype=np.float64)) * 4
+
+        io_per_dev = shr.sharded_bytes_per_dev(params_sds, p_specs, mesh)
+        param_global = sum(_b(x) for x in jax.tree.leaves(params_sds))
+    # shard_map (ipgm) jaxprs carry PER-SHARD shapes: costs are already
+    # per-device; pjit jaxprs carry GLOBAL shapes: divide by chip count
+    per_dev = 1.0 if spec.family == "ipgm" else float(CHIPS)
+    comm_total = sum(coll.values()) + cost.comm_bytes / per_dev
+
+    # the jaxpr walker counts weight reads at global shapes (≈ /chips when
+    # fully sharded); correct for replicated/TP-only placements
+    io_correction = max(0.0, io_per_dev - param_global / per_dev)
+    compute_s = cost.flops / per_dev / PEAK_FLOPS
+    memory_s = (cost.hbm_bytes / per_dev + io_correction) / HBM_BW
+    collective_s = comm_total / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    model_flops = cell.meta.get("model_flops", 0)
+    if spec.family != "ipgm":
+        model_flops = model_flops / CHIPS  # per-chip useful work
+    return {
+        "arch": arch_id,
+        "shape": shape,
+        "kind": cell.kind,
+        "flops": cost.flops,
+        "hbm_bytes": cost.hbm_bytes,
+        "collective_bytes_per_dev": comm_total,
+        "collectives_detail": coll,
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "model_flops_per_dev": model_flops,
+        "useful_ratio": (
+            model_flops / (cost.flops / per_dev) if cost.flops else 0.0
+        ),
+        "step_s_bound": max(terms.values()),
+        "roofline_fraction": (
+            model_flops / PEAK_FLOPS / max(terms.values())
+            if max(terms.values()) > 0 else 0.0
+        ),
+    }
+
+
+def run(arch: str | None = None, shape: str | None = None) -> list[dict]:
+    import os
+    os.environ.setdefault(
+        "XLA_FLAGS", "--xla_force_host_platform_device_count=512"
+    )
+    from repro.configs import registry as reg
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=False)
+    rows = []
+    existing = {}
+    out_path = RESULTS / "roofline.json"
+    if out_path.exists():
+        existing = {(r["arch"], r["shape"]): r
+                    for r in json.loads(out_path.read_text())}
+    for arch_id, spec in reg.all_archs().items():
+        if arch and arch_id != arch:
+            continue
+        for shape_name, cell in spec.shapes.items():
+            if shape and shape_name != shape:
+                continue
+            if cell.skip:
+                rows.append({"arch": arch_id, "shape": shape_name,
+                             "skipped": cell.skip})
+                continue
+            try:
+                r = analyze_cell(arch_id, shape_name, mesh)
+            except Exception as e:  # pragma: no cover
+                r = {"arch": arch_id, "shape": shape_name,
+                     "error": f"{type(e).__name__}: {e}"}
+            rows.append(r)
+            if "error" not in r and "skipped" not in r:
+                print(f"{arch_id:25s} {shape_name:14s} "
+                      f"C={r['compute_s']*1e3:9.2f}ms "
+                      f"M={r['memory_s']*1e3:9.2f}ms "
+                      f"X={r['collective_s']*1e3:9.2f}ms "
+                      f"dom={r['dominant']:10s} "
+                      f"useful={r['useful_ratio']:.2f} "
+                      f"roofline={r['roofline_fraction']:.2f}")
+            else:
+                print(f"{arch_id:25s} {shape_name:14s} "
+                      f"{r.get('error', r.get('skipped'))}")
+    merged = {**existing, **{(r["arch"], r["shape"]): r for r in rows}}
+    RESULTS.mkdir(exist_ok=True)
+    out_path.write_text(json.dumps(list(merged.values()), indent=1))
+    return rows
+
+
+def to_markdown(rows: list[dict]) -> str:
+    lines = [
+        "| arch | shape | kind | compute (ms) | memory (ms) | collective (ms)"
+        " | dominant | useful FLOP ratio | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if "skipped" in r:
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | — | skipped |"
+                f" {r['skipped'][:40]}… | — |")
+            continue
+        if "error" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | ERROR | — | — | — |"
+                         f" — | {r['error'][:40]} | — |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['kind']} "
+            f"| {r['compute_s']*1e3:.2f} | {r['memory_s']*1e3:.2f} "
+            f"| {r['collective_s']*1e3:.2f} | **{r['dominant']}** "
+            f"| {r['useful_ratio']:.2f} | {r['roofline_fraction']:.2f} |"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    import sys
+    a = sys.argv[1] if len(sys.argv) > 1 else None
+    s = sys.argv[2] if len(sys.argv) > 2 else None
+    rows = run(a, s)
+    print()
+    print(to_markdown(rows))

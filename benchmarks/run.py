@@ -1,0 +1,89 @@
+"""Benchmark entry point — one harness per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows per the repo convention and
+writes JSON artifacts under results/. Scaled to single-core CPU budgets
+(--fast shrinks further for CI-style runs).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller workloads (sanity run)")
+    ap.add_argument("--only", default=None,
+                    choices=[None, "fig2", "fig3", "fig4", "kernels",
+                             "summary", "roofline"])
+    args = ap.parse_args()
+
+    rows: list[tuple[str, float, str]] = []
+
+    def record(name: str, seconds: float, derived: str):
+        rows.append((name, seconds * 1e6, derived))
+
+    scale = (
+        dict(n_base=1200, n_steps=3, batch_size=150, n_queries=256)
+        if args.fast else
+        dict(n_base=3000, n_steps=5, batch_size=300, n_queries=512)
+    )
+
+    if args.only in (None, "fig2"):
+        from benchmarks import fig2_random_updates as fig2
+        t0 = time.perf_counter()
+        out = fig2.run(datasets=("sift", "glove200"), **scale)
+        for ds, per in out.items():
+            for strat, recs in per.items():
+                qps = recs[-1]["qps"]
+                record(f"fig2/{ds}/{strat}", 1.0 / max(qps, 1e-9),
+                       f"recall={recs[-1]['recall']:.3f}")
+        print(f"[fig2 done in {time.perf_counter()-t0:.0f}s]")
+
+    if args.only in (None, "fig3"):
+        from benchmarks import fig3_clustered_updates as fig3
+        t0 = time.perf_counter()
+        out = fig3.run(**scale)
+        for ds, per in out.items():
+            for strat, recs in per.items():
+                qps = recs[-1]["qps"]
+                record(f"fig3/{ds}/{strat}", 1.0 / max(qps, 1e-9),
+                       f"recall={recs[-1]['recall']:.3f}")
+        print(f"[fig3 done in {time.perf_counter()-t0:.0f}s]")
+
+    if args.only in (None, "fig4"):
+        from benchmarks import fig4_total_time as fig4
+        out = fig4.run(
+            n_base=scale["n_base"] // 2, n_steps=3,
+            batch_size=scale["batch_size"] // 2,
+        )
+        for ratio, per in out.items():
+            for strat, curve in per.items():
+                record(f"fig4/ratio{ratio}/{strat}",
+                       curve[-1]["total_s"] / max(curve[-1]["n_ops"], 1),
+                       f"total_s={curve[-1]['total_s']:.2f}")
+
+    if args.only in (None, "kernels"):
+        from benchmarks import kernel_bench
+        for r in kernel_bench.run():
+            record(f"kernel/{r['name']}",
+                   r["us_per_call_xla_matrix"] / 1e6,
+                   f"traffic_saving={r['fusion_traffic_saving']:.2f}x")
+
+    if args.only in (None, "summary"):
+        from benchmarks.summary import summarize
+        summarize()
+
+    if args.only == "roofline":
+        from benchmarks import roofline
+        roofline.run()
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""§6.3 summary table: strategy ordering + GLOBAL-vs-ReBuild factors,
+computed from the Fig2/Fig3 result JSONs."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[1] / "results"
+
+
+def summarize() -> dict:
+    out = {}
+    for name, path in (("random", "fig2_random.json"),
+                       ("clustered", "fig3_clustered.json")):
+        p = RESULTS / path
+        if not p.exists():
+            continue
+        data = json.loads(p.read_text())
+        pattern_out = {}
+        for ds, per_strat in data.items():
+            reb = per_strat["rebuild"]
+            stats = {}
+            for strat, recs in per_strat.items():
+                if strat == "rebuild":
+                    continue
+                # skip batch 0 (identical starting point)
+                rel = [r["qps"] / max(b["qps"], 1e-9)
+                       for r, b in zip(recs[1:], reb[1:])]
+                hops_rel = [b["avg_hops"] / max(r["avg_hops"], 1e-9)
+                            for r, b in zip(recs[1:], reb[1:])]
+                stats[strat] = {
+                    "mean_rel_qps": sum(rel) / len(rel),
+                    "max_rel_qps": max(rel),
+                    "mean_rel_hops_advantage": sum(hops_rel) / len(hops_rel),
+                    "final_recall": recs[-1]["recall"],
+                }
+            pattern_out[ds] = stats
+        out[name] = pattern_out
+
+    print(f"{'pattern':10s} {'dataset':10s} {'strategy':8s} "
+          f"{'rel-QPS µ':>10s} {'rel-QPS max':>12s} {'recall':>7s}")
+    for pat, per_ds in out.items():
+        for ds, stats in per_ds.items():
+            for strat, s in stats.items():
+                print(f"{pat:10s} {ds:10s} {strat:8s} "
+                      f"{s['mean_rel_qps']:10.2f} {s['max_rel_qps']:12.2f} "
+                      f"{s['final_recall']:7.3f}")
+    (RESULTS / "summary.json").write_text(json.dumps(out, indent=1))
+    return out
+
+
+if __name__ == "__main__":
+    summarize()

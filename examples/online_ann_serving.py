@@ -1,0 +1,28 @@
+"""End-to-end driver (the paper's kind: online ANN serving).
+
+Runs the full GRAPH-MAINTENANCE workload — batched deletes, inserts and
+queries streaming against a live index — with per-phase latency accounting,
+comparing the GLOBAL strategy against MASK on the same stream.
+
+    PYTHONPATH=src python examples/online_ann_serving.py [--scale 2000]
+"""
+import argparse
+
+from repro.launch.serve import serve_online
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=1500)
+    ap.add_argument("--steps", type=int, default=3)
+    args = ap.parse_args()
+
+    for strategy in ("global", "mask"):
+        print(f"\n=== strategy: {strategy} ===")
+        serve_online(
+            dataset="sift",
+            strategy=strategy,
+            n_base=args.scale,
+            n_steps=args.steps,
+            batch_size=max(args.scale // 10, 10),
+            n_queries=min(256, args.scale),
+        )

@@ -1,0 +1,27 @@
+"""Train a registry LM end-to-end with checkpoint/restart fault tolerance.
+
+Smoke config trains in ~a minute on CPU; pass --full for the real
+qwen3-1.7b config (needs accelerators).
+
+    PYTHONPATH=src python examples/train_lm.py --steps 60
+"""
+import argparse
+import tempfile
+
+from repro.launch.train import train_lm
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+
+    with tempfile.TemporaryDirectory() as ckpt:
+        print("=== phase 1: train with a simulated preemption ===")
+        train_lm(args.arch, smoke=not args.full, steps=args.steps,
+                 ckpt_dir=ckpt, ckpt_every=20, preempt_at=args.steps // 2)
+        print("=== phase 2: resume from the checkpoint ===")
+        out = train_lm(args.arch, smoke=not args.full, steps=args.steps,
+                       ckpt_dir=ckpt, resume=True)
+        print(f"final loss: {out['final_loss']:.4f}")

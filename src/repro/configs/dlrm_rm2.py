@@ -1,0 +1,69 @@
+"""dlrm-rm2 — n_dense=13 n_sparse=26 embed_dim=64 bot 13-512-256-64
+top 512-512-256-1 dot interaction.  [arXiv:1906.00091]"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.registry import ArchSpec, ShapeCell, register, sds
+from repro.models.dlrm import DLRMConfig
+
+ARCH_ID = "dlrm-rm2"
+NNZ = 4  # multi-hot ids per sparse field (padded; mask carries true counts)
+
+
+def config() -> DLRMConfig:
+    return DLRMConfig(
+        name=ARCH_ID, n_dense=13, n_sparse=26, embed_dim=64,
+        n_rows=1_048_576,  # 2^20 ≈ the paper's 1e6, divisible by 512 shards
+        nnz=NNZ,
+        bot_mlp=(512, 256, 64), top_mlp=(512, 512, 256, 1),
+    )
+
+
+def smoke_config() -> DLRMConfig:
+    return DLRMConfig(
+        name=ARCH_ID, n_dense=13, n_sparse=26, embed_dim=8, n_rows=512,
+        nnz=NNZ, bot_mlp=(32, 16, 8), top_mlp=(32, 16, 1),
+    )
+
+
+SHAPES = {
+    "train_batch": ShapeCell("train_batch", "train", {"batch": 65_536}),
+    "serve_p99": ShapeCell("serve_p99", "serve", {"batch": 512}),
+    "serve_bulk": ShapeCell("serve_bulk", "serve", {"batch": 262_144}),
+    "retrieval_cand": ShapeCell(
+        "retrieval_cand", "retrieval", {"batch": 1, "n_candidates": 1_000_000}
+    ),
+}
+
+
+def input_specs(cfg: DLRMConfig, shape: str) -> dict:
+    cell = SHAPES[shape]
+    B = cell.sizes["batch"]
+    if cell.kind == "retrieval":
+        return {
+            "dense": sds((B, cfg.n_dense), jnp.float32),
+            "candidates": sds(
+                (cell.sizes["n_candidates"], cfg.bot_mlp[-1]), jnp.float32
+            ),
+        }
+    specs = {
+        "dense": sds((B, cfg.n_dense), jnp.float32),
+        "sparse_ids": sds((B, cfg.n_sparse, cfg.nnz), jnp.int32),
+        "sparse_mask": sds((B, cfg.n_sparse, cfg.nnz), jnp.bool_),
+    }
+    if cell.kind == "train":
+        specs["labels"] = sds((B,), jnp.int32)
+    return specs
+
+
+SPEC = register(ArchSpec(
+    arch_id=ARCH_ID,
+    family="recsys",
+    config_for_shape=lambda shape: config(),
+    smoke_config=smoke_config,
+    shapes=SHAPES,
+    input_specs=input_specs,
+    notes="embedding bag = take + masked mean (no native EmbeddingBag in "
+          "JAX); retrieval_cand scores via the Pallas score_topk kernel",
+))

@@ -1,0 +1,70 @@
+"""Shared LM-family shape cells + input-spec builders."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.registry import ShapeCell, sds
+from repro.models import transformer as tfm
+
+
+def lm_shapes(*, long_skip: str | None = None) -> dict[str, ShapeCell]:
+    cells = {
+        "train_4k": ShapeCell("train_4k", "train",
+                              {"seq": 4096, "batch": 256}),
+        "prefill_32k": ShapeCell("prefill_32k", "prefill",
+                                 {"seq": 32768, "batch": 32}),
+        "decode_32k": ShapeCell("decode_32k", "decode",
+                                {"seq": 32768, "batch": 128}),
+        "long_500k": ShapeCell("long_500k", "decode",
+                               {"seq": 524288, "batch": 1}, skip=long_skip),
+    }
+    return cells
+
+
+def lm_input_specs(cfg: tfm.TransformerConfig, cell: ShapeCell) -> dict:
+    B, S = cell.sizes["batch"], cell.sizes["seq"]
+    if cell.kind == "train":
+        return {
+            "tokens": sds((B, S), jnp.int32),
+            "labels": sds((B, S), jnp.int32),
+            "mask": sds((B, S), jnp.bool_),
+        }
+    if cell.kind == "prefill":
+        return {"tokens": sds((B, S), jnp.int32)}
+    if cell.kind == "decode":
+        return {"tokens": sds((B, 1), jnp.int32)}
+    raise ValueError(cell.kind)
+
+
+def lm_cache_specs(cfg: tfm.TransformerConfig, cell: ShapeCell) -> dict:
+    """ShapeDtypeStruct KV cache for decode cells."""
+    B, S = cell.sizes["batch"], cell.sizes["seq"]
+    shape = (cfg.n_groups, B, S, cfg.n_kv_heads, cfg.d_head)
+    return {
+        "kv": [
+            (sds(shape, cfg.compute_dtype), sds(shape, cfg.compute_dtype))
+            for _ in range(cfg.period)
+        ],
+        "len": sds((B,), jnp.int32),
+    }
+
+
+def smoke_lm(cfg: tfm.TransformerConfig) -> tfm.TransformerConfig:
+    """Family-preserving reduction for CPU smoke tests."""
+    import dataclasses
+
+    from repro.models.moe import MoEConfig
+
+    moe = None
+    if cfg.moe is not None:
+        moe = MoEConfig(
+            n_experts=4, top_k=cfg.moe.top_k, d_model=64, d_ff=96,
+            capacity_factor=2.0, n_shared=cfg.moe.n_shared, gated=cfg.moe.gated,
+        )
+    return dataclasses.replace(
+        cfg,
+        n_layers=2 * cfg.period, d_model=64, n_heads=4, n_kv_heads=2,
+        d_head=16, d_ff=96, vocab=128, moe=moe,
+        window=8 if cfg.window else None,
+        compute_dtype=jnp.float32, block_q=16, block_kv=16, xent_chunk=16,
+    )

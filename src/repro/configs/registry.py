@@ -1,0 +1,84 @@
+"""Architecture registry: arch-id → (configs, shapes, step kinds, input specs).
+
+Every assigned architecture registers an :class:`ArchSpec`; the dry-run,
+smoke tests, benchmarks and launchers all consume this single source of
+truth. ``input_specs`` returns ShapeDtypeStructs only — nothing allocates.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+f32 = jnp.float32
+i32 = jnp.int32
+bf16 = jnp.bfloat16
+
+
+def sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str                    # train | prefill | decode | serve | retrieval | forward
+    sizes: dict[str, int]
+    skip: str | None = None      # reason when this (arch, shape) is skipped
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    arch_id: str
+    family: str                  # lm | gnn | recsys | ipgm
+    config_for_shape: Callable[[str], Any]
+    smoke_config: Callable[[], Any]
+    shapes: dict[str, ShapeCell]
+    input_specs: Callable[[Any, str], dict]   # (cfg, shape) → batch SDS pytree
+    notes: str = ""
+
+
+_REGISTRY: dict[str, ArchSpec] = {}
+
+
+def register(spec: ArchSpec) -> ArchSpec:
+    _REGISTRY[spec.arch_id] = spec
+    return spec
+
+
+def get_arch(arch_id: str) -> ArchSpec:
+    _ensure_loaded()
+    if arch_id not in _REGISTRY:
+        raise KeyError(f"unknown arch {arch_id!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[arch_id]
+
+
+def all_archs() -> dict[str, ArchSpec]:
+    _ensure_loaded()
+    return dict(_REGISTRY)
+
+
+_LOADED = False
+
+
+def _ensure_loaded() -> None:
+    global _LOADED
+    if _LOADED:
+        return
+    # import side-effect registration
+    from repro.configs import (  # noqa: F401
+        dimenet as _a,
+        dlrm_rm2 as _b,
+        gat_cora as _c,
+        gatedgcn as _d,
+        gemma2_27b as _e,
+        graphsage_reddit as _f,
+        ipgm_ann as _k,
+        llama4_scout as _g,
+        mistral_nemo_12b as _h,
+        phi35_moe as _i,
+        qwen3_1p7b as _j,
+    )
+    _LOADED = True

@@ -1,0 +1,15 @@
+"""IPGM core — the paper's contribution as a composable JAX module."""
+from repro.core.graph import NULL, GraphState, graph_stats, init_graph
+from repro.core.maintenance import IPGMIndex, run_workload
+from repro.core.params import IndexParams, SearchParams
+
+__all__ = [
+    "NULL",
+    "GraphState",
+    "graph_stats",
+    "init_graph",
+    "IPGMIndex",
+    "run_workload",
+    "IndexParams",
+    "SearchParams",
+]

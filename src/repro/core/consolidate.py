@@ -1,0 +1,63 @@
+"""Tombstone consolidation — fixes MASK's unbounded growth (§5.2).
+
+The paper observes that MASK "space grows continuously as the stream
+performs, which may cause inevitable memory issues". Production systems
+(FreshDiskANN's streaming merge) periodically *consolidate*: physically
+remove tombstoned vertices while repairing connectivity with the best
+available strategy. This module implements that pass — MASK's cheap O(1)
+deletes between consolidations, GLOBAL-quality graph afterwards — giving
+the latency/quality trade-off knob a deployment actually runs.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import delete as delete_mod
+from repro.core.graph import GraphState
+from repro.core.maintenance import IPGMIndex
+
+
+def masked_fraction(state: GraphState) -> float:
+    import jax.numpy as jnp
+    n_masked = float(jnp.sum(state.masked))
+    n_present = float(jnp.sum(state.present))
+    return n_masked / max(n_present, 1.0)
+
+
+def consolidate(index: IPGMIndex, *, strategy: str = "global",
+                chunk: int | None = None) -> int:
+    """Physically remove every tombstone, repairing edges with ``strategy``.
+
+    Returns the number of consolidated vertices. Tombstones are temporarily
+    revived (alive=True) so the repair delete path's precheck accepts them;
+    their in/out edges are then rewired exactly as a fresh delete would.
+    """
+    import dataclasses
+
+    import jax.numpy as jnp
+
+    state = index.state
+    masked_ids = np.flatnonzero(np.asarray(state.masked))
+    if masked_ids.size == 0:
+        return 0
+    # revive → alive so the strategy's precheck accepts the batch
+    alive = state.alive.at[jnp.asarray(masked_ids)].set(True)
+    index.state = dataclasses.replace(
+        state, alive=alive,
+        size=state.size + jnp.asarray(masked_ids.size, jnp.int32),
+    )
+    old_strategy = index.strategy
+    index.strategy = strategy
+    try:
+        index.delete(masked_ids)
+    finally:
+        index.strategy = old_strategy
+    return int(masked_ids.size)
+
+
+def maybe_consolidate(index: IPGMIndex, *, threshold: float = 0.2,
+                      strategy: str = "global") -> int:
+    """Consolidate when tombstones exceed ``threshold`` of the graph."""
+    if masked_fraction(index.state) >= threshold:
+        return consolidate(index, strategy=strategy)
+    return 0

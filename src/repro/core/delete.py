@@ -1,0 +1,234 @@
+"""DELETE-UPDATE-EDGES — the paper's four strategies (Alg 4–6, §5), batched.
+
+All strategies are implemented over a *batch* of deletions (the paper's
+workloads delete 10k vectors per step), with each strategy expressed as
+vectorized gathers/scatters + (for GLOBAL) a batched repair search that
+reuses the exact query path — so on TPU the repair cost is literally
+denominated in "equivalent queries", which is the amortization argument of
+§6.2.
+
+  PURE   (Alg 4): drop vertex + incident edges (vectorized edge scrub).
+  MASK   (§5.2) : tombstone — traversable, not reportable, edges untouched.
+  LOCAL  (Alg 5): each in-neighbor u of deleted x splices ONE diverse edge
+                  chosen from x's out-neighbors (candidates local to x).
+  GLOBAL (Alg 6): each in-neighbor u is re-inserted: full greedy search from
+                  u's vector, SELECT-NEIGHBORS over the global candidates,
+                  out-edges replaced wholesale.
+
+Ordering subtlety shared by LOCAL/GLOBAL: the deleted batch is first marked
+dead (``alive=False``) but kept *present* so repair searches can still route
+through it (Alg 6 searches on the not-yet-updated graph); edges are scrubbed
+and slots freed only after all repairs are computed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import search, select
+from repro.core.graph import (
+    NULL,
+    GraphState,
+    add_edge,
+    remove_edge,
+    scrub_edges_to,
+    set_out_edges,
+)
+from repro.core.params import IndexParams
+
+STRATEGIES = ("pure", "mask", "local", "global")
+
+
+def _dead_mask(state: GraphState, ids: jax.Array, valid: jax.Array) -> jax.Array:
+    m = jnp.zeros((state.capacity,), bool)
+    return m.at[jnp.where(valid, ids, 0)].max(valid)
+
+
+def _precheck(state: GraphState, ids: jax.Array, valid: jax.Array) -> jax.Array:
+    """Only alive vertices can be deleted."""
+    safe = jnp.where(valid, ids, 0)
+    return valid & (ids != NULL) & state.alive[safe]
+
+
+def _mark_dead(state: GraphState, ids: jax.Array, valid: jax.Array) -> GraphState:
+    """alive=False (not reportable) while still present (traversable).
+
+    Invalid lanes park at index 0 — the ``.min`` combine makes their write a
+    no-op (min(x, True) == x), so duplicate-index scatters stay exact.
+    """
+    safe = jnp.where(valid, ids, 0)
+    alive = state.alive.at[safe].min(~valid)
+    return dataclasses.replace(
+        state, alive=alive, size=state.size - jnp.sum(valid).astype(jnp.int32)
+    )
+
+
+def _finalize_removal(
+    state: GraphState, ids: jax.Array, valid: jax.Array
+) -> GraphState:
+    dead = _dead_mask(state, ids, valid)
+    state = scrub_edges_to(state, dead)
+    # slots already counted out of `size` by _mark_dead; free presence only
+    safe = jnp.where(valid, ids, 0)
+    present = state.present.at[safe].min(~valid)  # collision-safe scatter
+    return dataclasses.replace(state, present=present)
+
+
+# ---------------------------------------------------------------------------
+# PURE (Alg 4)
+# ---------------------------------------------------------------------------
+
+def delete_pure(
+    state: GraphState, ids: jax.Array, valid: jax.Array, key, params: IndexParams
+) -> GraphState:
+    del key
+    valid = _precheck(state, ids, valid)
+    state = _mark_dead(state, ids, valid)
+    return _finalize_removal(state, ids, valid)
+
+
+# ---------------------------------------------------------------------------
+# MASK (§5.2)
+# ---------------------------------------------------------------------------
+
+def delete_mask(
+    state: GraphState, ids: jax.Array, valid: jax.Array, key, params: IndexParams
+) -> GraphState:
+    del key
+    valid = _precheck(state, ids, valid)
+    return _mark_dead(state, ids, valid)  # present stays True: tombstone
+
+
+# ---------------------------------------------------------------------------
+# LOCAL (Alg 5)
+# ---------------------------------------------------------------------------
+
+def delete_local(
+    state: GraphState, ids: jax.Array, valid: jax.Array, key, params: IndexParams
+) -> GraphState:
+    del key
+    valid = _precheck(state, ids, valid)
+    state = _mark_dead(state, ids, valid)
+    dead = _dead_mask(state, ids, valid)
+    B, d_in, d_out = ids.shape[0], state.d_in, state.d_out
+
+    safe_ids = jnp.where(valid, ids, 0)
+    in_nbrs = state.radj[safe_ids]                     # i32[B, d_in]  the u's
+    out_nbrs = state.adj[safe_ids]                     # i32[B, d_out] candidates
+
+    u_flat = in_nbrs.reshape(-1)                       # [B*d_in]
+    x_flat = jnp.repeat(safe_ids, d_in)                # deleted vertex per unit
+    # each deletion's candidate row, repeated once per its d_in in-neighbor slot
+    c_flat = jnp.broadcast_to(
+        out_nbrs[:, None, :], (B, d_in, d_out)
+    ).reshape(B * d_in, d_out)
+    u_valid = (u_flat != NULL) & jnp.repeat(valid, d_in)
+    su = jnp.where(u_valid, u_flat, 0)
+    # u must itself survive (not in the delete batch)
+    u_valid = u_valid & ~dead[su] & state.present[su]
+
+    def pick_one(u, cands, uv):
+        """SELECT-NEIGHBORS(u, N(x), 1, N(u) ∪ {u}) — Alg 5 line 6."""
+        exclude = jnp.concatenate([state.adj[u], u[None]])
+        cv = (cands != NULL) & ~dead[jnp.maximum(cands, 0)]
+        cv = cv & state.alive[jnp.maximum(cands, 0)]
+        cv = cv & ~jnp.any(cands[:, None] == exclude[None, :], axis=1)
+        picked = select.select_neighbors(
+            state.vectors[u], cands, state.vectors[jnp.maximum(cands, 0)],
+            cv & uv, 1, state.metric,
+        )
+        return picked[0]
+
+    z_flat = jax.vmap(pick_one)(su, c_flat, u_valid)   # i32[B*d_in]
+
+    # apply: remove (u → x) first (frees the row slot), then add (u → z)
+    def body(i, st):
+        def splice(s):
+            s = remove_edge(s, u_flat[i], x_flat[i])
+            return jax.lax.cond(
+                z_flat[i] != NULL,
+                lambda s2: add_edge(s2, u_flat[i], z_flat[i]),
+                lambda s2: s2,
+                s,
+            )
+        return jax.lax.cond(u_valid[i], splice, lambda s: s, st)
+
+    state = jax.lax.fori_loop(0, B * d_in, body, state)
+    return _finalize_removal(state, ids, valid)
+
+
+# ---------------------------------------------------------------------------
+# GLOBAL (Alg 6) — the paper's recommended strategy
+# ---------------------------------------------------------------------------
+
+def delete_global(
+    state: GraphState, ids: jax.Array, valid: jax.Array, key, params: IndexParams
+) -> GraphState:
+    valid = _precheck(state, ids, valid)
+    state = _mark_dead(state, ids, valid)
+    dead = _dead_mask(state, ids, valid)
+    B, d_in = ids.shape[0], state.d_in
+
+    # ---- collect the unique surviving in-neighbors of the whole batch ----
+    safe_ids = jnp.where(valid, ids, 0)
+    u_flat = state.radj[safe_ids].reshape(-1)          # [B*d_in]
+    u_valid = (u_flat != NULL) & jnp.repeat(valid, d_in)
+    su = jnp.where(u_valid, u_flat, 0)
+    u_valid = u_valid & ~dead[su] & state.alive[su]
+    # dedupe (first occurrence wins) — a u may point at several deleted x's
+    eq = u_flat[:, None] == u_flat[None, :]
+    eq = eq & u_valid[None, :] & u_valid[:, None]
+    first = jnp.argmax(eq, axis=1) == jnp.arange(u_flat.shape[0])
+    u_valid = u_valid & first
+    su = jnp.where(u_valid, u_flat, 0)
+
+    # ---- batched repair search: GREEDY-SEARCH(u, G, k) on the marked graph ----
+    sp = params.eff_insert_search
+    u_vecs = state.vectors[su]
+    keys = jax.random.split(key, u_flat.shape[0])
+    starts = jax.vmap(lambda kk: search.entry_points(state, kk, sp.num_starts))(
+        keys
+    )
+    res = jax.vmap(lambda q, s: search.search_one(state, q, s, sp))(
+        u_vecs, starts
+    )  # alive-only candidates — deleted batch is already non-alive
+
+    # ---- SELECT-NEIGHBORS(u, C, d, {x_i}) and wholesale edge replacement ----
+    new_nbrs = jax.vmap(
+        lambda u, vec, cids: select.select_from_pool(
+            state, vec, cids, params.d_out, exclude=u[None]
+        )
+    )(su, u_vecs, res.ids)                              # i32[B*d_in, d_out]
+
+    def body(i, st):
+        def repair(s):
+            return set_out_edges(s, u_flat[i], new_nbrs[i])
+        return jax.lax.cond(u_valid[i], repair, lambda s: s, st)
+
+    state = jax.lax.fori_loop(0, B * d_in, body, state)
+    return _finalize_removal(state, ids, valid)
+
+
+_STRATEGY_FNS = {
+    "pure": delete_pure,
+    "mask": delete_mask,
+    "local": delete_local,
+    "global": delete_global,
+}
+
+
+@functools.partial(
+    jax.jit, static_argnames=("strategy", "params"), donate_argnums=(0,)
+)
+def delete_batch(
+    state: GraphState,
+    ids: jax.Array,       # i32[B]
+    valid: jax.Array,     # bool[B]
+    key: jax.Array,
+    strategy: str,
+    params: IndexParams,
+) -> GraphState:
+    return _STRATEGY_FNS[strategy](state, ids, valid, key, params)

@@ -1,0 +1,216 @@
+"""Fixed-capacity proximity-graph state — the TPU-native index layout.
+
+The paper's adjacency lists / reverse graph become dense, fixed-degree
+``int32`` arrays so every operation is a gather/scatter (no pointer chasing).
+
+Invariants maintained by every public op (property-tested in
+``tests/test_graph_invariants.py``):
+
+  I1  G' == reverse(G): edge (u→v) is in ``adj[u]`` iff u is in ``radj[v]``.
+      Edge insertion REFUSES (drops the edge) when ``radj[v]`` is full, so
+      the invariant never breaks (see DESIGN.md §2, bounded in-degree).
+  I2  adjacency entries are either -1 or the id of a *present* slot.
+  I3  a slot is ``alive`` ⇒ it is ``present``; MASK-deleted slots are
+      present but not alive (traversable, never reported).
+  I4  no self-edges, no duplicate entries within a row.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+NULL = -1  # padding id for empty adjacency entries
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=[
+        "vectors", "sqnorms", "adj", "radj", "alive", "present", "size",
+    ],
+    meta_fields=["capacity", "dim", "d_out", "d_in", "metric"],
+)
+@dataclasses.dataclass(frozen=True)
+class GraphState:
+    """Pytree holding the full index (one shard of it when distributed)."""
+
+    # --- data ---
+    vectors: jax.Array   # f32[capacity, dim]
+    sqnorms: jax.Array   # f32[capacity]            ||x||^2 cache (L2 metric)
+    adj: jax.Array       # i32[capacity, d_out]     out-neighbors, NULL padded
+    radj: jax.Array      # i32[capacity, d_in]      in-neighbors,  NULL padded
+    alive: jax.Array     # bool[capacity]           reportable as a result
+    present: jax.Array   # bool[capacity]           traversable (alive | masked)
+    size: jax.Array      # i32                      number of alive slots
+    # --- static metadata ---
+    capacity: int
+    dim: int
+    d_out: int
+    d_in: int
+    metric: str          # "l2" | "ip" | "cos"
+
+    @property
+    def masked(self) -> jax.Array:
+        """MASK-tombstoned slots: traversable but not reportable."""
+        return self.present & ~self.alive
+
+
+def init_graph(
+    capacity: int,
+    dim: int,
+    *,
+    d_out: int = 16,
+    d_in: int | None = None,
+    metric: str = "l2",
+    dtype: Any = jnp.float32,
+) -> GraphState:
+    if metric not in ("l2", "ip", "cos"):
+        raise ValueError(f"unknown metric {metric!r}")
+    d_in = 2 * d_out if d_in is None else d_in
+    return GraphState(
+        vectors=jnp.zeros((capacity, dim), dtype),
+        sqnorms=jnp.zeros((capacity,), jnp.float32),
+        adj=jnp.full((capacity, d_out), NULL, jnp.int32),
+        radj=jnp.full((capacity, d_in), NULL, jnp.int32),
+        alive=jnp.zeros((capacity,), bool),
+        present=jnp.zeros((capacity,), bool),
+        size=jnp.asarray(0, jnp.int32),
+        capacity=capacity,
+        dim=dim,
+        d_out=d_out,
+        d_in=d_in,
+        metric=metric,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Row-level edge surgery. All helpers are jit-safe (static shapes) and keep
+# rows compact-from-the-left is NOT required: rows may have NULL holes; every
+# consumer masks on ``entry != NULL``.
+# ---------------------------------------------------------------------------
+
+def row_insert(row: jax.Array, value: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Insert ``value`` into the first NULL hole of ``row``.
+
+    Returns (new_row, inserted?). Refuses (inserted=False) when the row is
+    full or the value is already there (keeps I1/I4 cheaply).
+    """
+    already = jnp.any(row == value)
+    holes = row == NULL
+    has_hole = jnp.any(holes)
+    pos = jnp.argmax(holes)  # first hole
+    do = has_hole & ~already
+    new_row = jnp.where(
+        do & (jnp.arange(row.shape[0]) == pos), value, row
+    )
+    return new_row, do | already  # "already present" counts as success
+
+
+def row_remove(row: jax.Array, value: jax.Array) -> jax.Array:
+    """Remove every occurrence of ``value`` from ``row`` (→ NULL)."""
+    return jnp.where(row == value, NULL, row)
+
+
+def add_edge(state: GraphState, u: jax.Array, v: jax.Array) -> GraphState:
+    """Add directed edge u→v, updating radj; refuses if either row is full.
+
+    The refusal is atomic: the edge lands in both adj[u] and radj[v] or in
+    neither (invariant I1).
+    """
+    new_adj_row, ok_a = row_insert(state.adj[u], v)
+    new_radj_row, ok_r = row_insert(state.radj[v], u)
+    ok = ok_a & ok_r & (u != v) & (u != NULL) & (v != NULL)
+    adj = state.adj.at[u].set(jnp.where(ok, new_adj_row, state.adj[u]))
+    radj = state.radj.at[v].set(jnp.where(ok, new_radj_row, state.radj[v]))
+    return dataclasses.replace(state, adj=adj, radj=radj)
+
+
+def remove_edge(state: GraphState, u: jax.Array, v: jax.Array) -> GraphState:
+    adj = state.adj.at[u].set(row_remove(state.adj[u], v))
+    radj = state.radj.at[v].set(row_remove(state.radj[v], u))
+    return dataclasses.replace(state, adj=adj, radj=radj)
+
+
+def set_out_edges(state: GraphState, u: jax.Array, targets: jax.Array) -> GraphState:
+    """Replace the full out-neighborhood of ``u`` with ``targets``.
+
+    ``targets`` is i32[d_out], NULL padded. Reverse rows of both the old and
+    new targets are fixed up. Edges whose reverse row is full are dropped
+    (refused) to keep I1. Implemented as remove-all + loop of add_edge over
+    the (small, static) degree — executes inside jit.
+    """
+    d_out = state.d_out
+
+    def rm_one(i, st):
+        old = st.adj[u, i]
+        return jax.lax.cond(
+            old != NULL, lambda s: remove_edge(s, u, old), lambda s: s, st
+        )
+
+    state = jax.lax.fori_loop(0, d_out, rm_one, state)
+
+    def add_one(i, st):
+        tgt = targets[i]
+        return jax.lax.cond(
+            tgt != NULL, lambda s: add_edge(s, u, tgt), lambda s: s, st
+        )
+
+    return jax.lax.fori_loop(0, min(d_out, targets.shape[0]), add_one, state)
+
+
+# ---------------------------------------------------------------------------
+# Whole-graph vectorized edge scrubbing — used by batched deletes. O(cap·deg)
+# but a single fused gather/where, no per-edge loop.
+# ---------------------------------------------------------------------------
+
+def scrub_edges_to(state: GraphState, dead: jax.Array) -> GraphState:
+    """NULL-out every adjacency entry pointing into the ``dead`` mask.
+
+    ``dead``: bool[capacity]. Clears both directions plus the dead rows
+    themselves, preserving I1 globally.
+    """
+    safe_adj = jnp.where(state.adj == NULL, 0, state.adj)
+    adj = jnp.where((state.adj != NULL) & dead[safe_adj], NULL, state.adj)
+    safe_radj = jnp.where(state.radj == NULL, 0, state.radj)
+    radj = jnp.where((state.radj != NULL) & dead[safe_radj], NULL, state.radj)
+    # dead rows lose all their edges too
+    adj = jnp.where(dead[:, None], NULL, adj)
+    radj = jnp.where(dead[:, None], NULL, radj)
+    return dataclasses.replace(state, adj=adj, radj=radj)
+
+
+def free_slots(state: GraphState, ids: jax.Array, valid: jax.Array) -> GraphState:
+    """Mark slots fully removed (not present, not alive).
+
+    ``.min`` combine keeps duplicate-index scatters exact: invalid lanes park
+    at index 0 writing True, which can never flip a slot.
+    """
+    safe = jnp.where(valid, ids, 0)
+    n_freed = jnp.sum(valid & state.alive[safe])
+    alive = state.alive.at[safe].min(~valid)
+    present = state.present.at[safe].min(~valid)
+    return dataclasses.replace(
+        state, alive=alive, present=present, size=state.size - n_freed.astype(jnp.int32)
+    )
+
+
+def next_free_slot(state: GraphState) -> jax.Array:
+    """First non-present slot (freelist head). capacity if full."""
+    return jnp.argmin(state.present)  # False < True; full graph → 0 (caller checks)
+
+
+def graph_stats(state: GraphState) -> dict[str, jax.Array]:
+    out_deg = jnp.sum(state.adj != NULL, axis=1)
+    in_deg = jnp.sum(state.radj != NULL, axis=1)
+    p = state.present
+    return {
+        "n_alive": jnp.sum(state.alive),
+        "n_present": jnp.sum(p),
+        "n_masked": jnp.sum(state.masked),
+        "avg_out_degree": jnp.sum(jnp.where(p, out_deg, 0)) / jnp.maximum(jnp.sum(p), 1),
+        "avg_in_degree": jnp.sum(jnp.where(p, in_deg, 0)) / jnp.maximum(jnp.sum(p), 1),
+        "max_in_degree": jnp.max(jnp.where(p, in_deg, 0)),
+    }

@@ -1,0 +1,132 @@
+"""Vertex insertion (Alg 3, Insert branch): search → select → connect.
+
+Deviation from the literal pseudocode (documented in DESIGN.md §2): Alg 3
+line 10 only adds out-edges from the new vertex, which would leave fresh
+vertices unreachable by greedy search. Following NSW/HNSW practice (which the
+paper adapts its edge selection from), ``bidirectional_insert=True`` (default)
+also links each selected neighbor back to the new vertex, re-running
+SELECT-NEIGHBORS on the neighbor when its row is full ("shrink"). The
+strict-paper variant is available via ``bidirectional_insert=False``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import distances, search, select
+from repro.core.graph import (
+    NULL,
+    GraphState,
+    add_edge,
+    next_free_slot,
+    row_insert,
+    set_out_edges,
+)
+from repro.core.params import IndexParams
+
+
+def _connect_backward(state: GraphState, z: jax.Array, new_id: jax.Array) -> GraphState:
+    """Add edge z→new, shrinking z's neighborhood if its row is full."""
+
+    def simple(st: GraphState) -> GraphState:
+        return add_edge(st, z, new_id)
+
+    def shrink(st: GraphState) -> GraphState:
+        cands = jnp.concatenate([st.adj[z], new_id[None]])
+        picked = select.select_from_pool(
+            st, st.vectors[z], cands, st.d_out, exclude=z[None],
+            require_alive=False,  # keep existing (possibly masked) neighbors eligible
+        )
+        return set_out_edges(st, z, picked)
+
+    row_full = ~jnp.any(state.adj[z] == NULL)
+    return jax.lax.cond(row_full, shrink, simple, state)
+
+
+def insert_one(
+    state: GraphState,
+    vec: jax.Array,        # f32[dim]
+    key: jax.Array,
+    params: IndexParams,
+) -> tuple[GraphState, jax.Array]:
+    """Insert one vector. Returns (state, new_id) — new_id == NULL if full."""
+    sp = params.eff_insert_search
+    slot = next_free_slot(state).astype(jnp.int32)
+    ok = ~state.present[slot]
+
+    # ---- greedy search for nearest candidates (alive-only results) ----
+    starts = search.entry_points(state, key, sp.num_starts)
+    res = search.search_one(state, vec, starts, sp)
+
+    # ---- select diverse out-neighbors ----
+    nbrs = select.select_from_pool(
+        state, vec, res.ids, params.d_out, exclude=slot[None]
+    )
+
+    # ---- write the vertex ----
+    vec_cast = vec.astype(state.vectors.dtype)
+    if params.metric == "cos":
+        vec_cast = distances.normalize(vec_cast)
+    new_vectors = state.vectors.at[slot].set(
+        jnp.where(ok, vec_cast, state.vectors[slot])
+    )
+    new_sqnorms = state.sqnorms.at[slot].set(
+        jnp.where(ok, distances.sqnorm(vec_cast), state.sqnorms[slot])
+    )
+    state = dataclasses.replace(
+        state,
+        vectors=new_vectors,
+        sqnorms=new_sqnorms,
+        alive=state.alive.at[slot].set(jnp.where(ok, True, state.alive[slot])),
+        present=state.present.at[slot].set(
+            jnp.where(ok, True, state.present[slot])
+        ),
+        size=state.size + ok.astype(jnp.int32),
+    )
+
+    def do_connect(st: GraphState) -> GraphState:
+        st = set_out_edges(st, slot, nbrs)
+        if params.bidirectional_insert:
+            def back(i, s):
+                z = nbrs[i]
+                return jax.lax.cond(
+                    z != NULL,
+                    lambda ss: _connect_backward(ss, z, slot),
+                    lambda ss: ss,
+                    s,
+                )
+            st = jax.lax.fori_loop(0, params.d_out, back, st)
+        return st
+
+    state = jax.lax.cond(ok, do_connect, lambda st: st, state)
+    return state, jnp.where(ok, slot, NULL)
+
+
+@functools.partial(jax.jit, static_argnames=("params",), donate_argnums=(0,))
+def insert_batch(
+    state: GraphState,
+    vecs: jax.Array,      # f32[B, dim]
+    valid: jax.Array,     # bool[B] — rows to actually insert
+    key: jax.Array,
+    params: IndexParams,
+) -> tuple[GraphState, jax.Array]:
+    """Sequential insertion of a batch (insert i+1 may link to insert i)."""
+    B = vecs.shape[0]
+    ids = jnp.full((B,), NULL, jnp.int32)
+
+    def body(i, carry):
+        st, out = carry
+        k = jax.random.fold_in(key, i)
+
+        def do(args):
+            st_, out_ = args
+            st2, nid = insert_one(st_, vecs[i], k, params)
+            return st2, out_.at[i].set(nid)
+
+        return jax.lax.cond(valid[i], do, lambda a: a, (st, out))
+
+    state, ids = jax.lax.fori_loop(0, B, body, (state, ids))
+    return state, ids

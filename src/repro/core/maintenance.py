@@ -1,0 +1,192 @@
+"""GRAPH-MAINTENANCE (Alg 3) — the public online-index API.
+
+``IPGMIndex`` is the host-level driver: it owns a jitted GraphState, chunks
+workload operations into device-sized micro-batches, dispatches the delete
+strategy, and keeps per-phase timing books (the paper's QPS / total-time
+accounting). Everything device-side is functional and jit-compiled once per
+(shape, params) combination.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Iterable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import delete as delete_mod
+from repro.core import insert as insert_mod
+from repro.core import metrics, rebuild, search
+from repro.core.graph import NULL, GraphState, graph_stats, init_graph
+from repro.core.params import IndexParams
+
+
+@dataclasses.dataclass
+class PhaseTimers:
+    query_s: float = 0.0
+    insert_s: float = 0.0
+    delete_s: float = 0.0
+    rebuild_s: float = 0.0
+    n_queries: int = 0
+    n_inserts: int = 0
+    n_deletes: int = 0
+
+    def total(self) -> float:
+        return self.query_s + self.insert_s + self.delete_s + self.rebuild_s
+
+
+def _pad_to(x: np.ndarray, n: int, fill) -> np.ndarray:
+    if x.shape[0] == n:
+        return x
+    pad = np.full((n - x.shape[0],) + x.shape[1:], fill, dtype=x.dtype)
+    return np.concatenate([x, pad], axis=0)
+
+
+class IPGMIndex:
+    """Online proximity-graph index with pluggable delete strategy."""
+
+    def __init__(
+        self,
+        params: IndexParams,
+        *,
+        strategy: str = "global",
+        seed: int = 0,
+        delete_chunk: int = 64,
+        state: GraphState | None = None,
+    ):
+        if strategy not in delete_mod.STRATEGIES:
+            raise ValueError(f"strategy must be one of {delete_mod.STRATEGIES}")
+        self.params = params
+        self.strategy = strategy
+        self.delete_chunk = delete_chunk
+        self._key = jax.random.PRNGKey(seed)
+        self.state = state if state is not None else init_graph(
+            params.capacity, params.dim, d_out=params.d_out,
+            d_in=params.eff_d_in, metric=params.metric,
+        )
+        self.timers = PhaseTimers()
+
+    # -- key plumbing ------------------------------------------------------
+    def _next_key(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    # -- operations (Alg 3 branches) --------------------------------------
+    def query(self, queries, k: int | None = None):
+        """Batched ANN query. Returns (ids i32[B,k], scores f32[B,k])."""
+        q = jnp.asarray(queries)
+        chunk = self.params.query_chunk
+        k = k if k is not None else self.params.search.pool_size
+        ids_out, scores_out = [], []
+        t0 = time.perf_counter()
+        for lo in range(0, q.shape[0], chunk):
+            part = q[lo:lo + chunk]
+            res = search.search_batch(
+                self.state, part, self._next_key(), self.params.search
+            )
+            ids_out.append(res.ids[:, :k])
+            scores_out.append(res.scores[:, :k])
+        ids = jnp.concatenate(ids_out) if len(ids_out) > 1 else ids_out[0]
+        scores = (
+            jnp.concatenate(scores_out) if len(scores_out) > 1 else scores_out[0]
+        )
+        ids.block_until_ready()
+        self.timers.query_s += time.perf_counter() - t0
+        self.timers.n_queries += int(q.shape[0])
+        return ids, scores
+
+    def insert(self, vectors) -> jax.Array:
+        """Insert a batch of vectors; returns their assigned ids."""
+        v = np.asarray(vectors)
+        t0 = time.perf_counter()
+        valid = jnp.ones((v.shape[0],), bool)
+        self.state, ids = insert_mod.insert_batch(
+            self.state, jnp.asarray(v), valid, self._next_key(), self.params
+        )
+        ids.block_until_ready()
+        self.timers.insert_s += time.perf_counter() - t0
+        self.timers.n_inserts += int(v.shape[0])
+        return ids
+
+    def delete(self, ids) -> None:
+        """Delete a batch of vertex ids with the configured strategy."""
+        arr = np.asarray(ids, dtype=np.int32)
+        chunk = self.delete_chunk
+        t0 = time.perf_counter()
+        for lo in range(0, arr.shape[0], chunk):
+            part = arr[lo:lo + chunk]
+            n = part.shape[0]
+            padded = _pad_to(part, chunk, NULL)
+            valid = jnp.arange(chunk) < n
+            self.state = delete_mod.delete_batch(
+                self.state, jnp.asarray(padded), valid, self._next_key(),
+                self.strategy, self.params,
+            )
+        jax.block_until_ready(self.state.adj)
+        self.timers.delete_s += time.perf_counter() - t0
+        self.timers.n_deletes += int(arr.shape[0])
+
+    def rebuild_from_alive(self) -> None:
+        """ReBuild baseline: reconstruct the whole graph from alive vectors."""
+        t0 = time.perf_counter()
+        alive = np.asarray(self.state.alive)
+        vecs = np.asarray(self.state.vectors)[alive]
+        n = vecs.shape[0]
+        padded = np.zeros((self.params.capacity, self.params.dim), vecs.dtype)
+        padded[:n] = vecs
+        valid = jnp.arange(self.params.capacity) < n
+        self.state = rebuild.bulk_knn_build(
+            jnp.asarray(padded), valid, self.params
+        )
+        jax.block_until_ready(self.state.adj)
+        self.timers.rebuild_s += time.perf_counter() - t0
+
+    # -- reporting ---------------------------------------------------------
+    def ground_truth(self, queries, k: int):
+        return metrics.brute_force_topk(self.state, jnp.asarray(queries), k)
+
+    def recall(self, queries, k: int) -> float:
+        ids, _ = self.query(queries, k=k)
+        _, true_ids = self.ground_truth(queries, k)
+        return float(metrics.recall_at_k(ids, true_ids, k))
+
+    def stats(self) -> dict:
+        return {k: np.asarray(v).item() for k, v in graph_stats(self.state).items()}
+
+
+def run_workload(
+    index: IPGMIndex,
+    workload: Iterable[tuple[str, object]],
+    k: int = 10,
+) -> list[dict]:
+    """Drive a (op, payload) stream through the index — Alg 3's outer loop.
+
+    ops: ("query", Q[B,dim]) | ("insert", X[B,dim]) | ("delete", ids[B])
+       | ("rebuild", None)
+    Returns one record per op with latency + (for queries) recall.
+    """
+    records = []
+    for op, payload in workload:
+        t0 = time.perf_counter()
+        rec: dict = {"op": op}
+        if op == "query":
+            ids, _ = index.query(payload, k=k)
+            _, true_ids = index.ground_truth(payload, k)
+            rec["recall"] = float(metrics.recall_at_k(ids, true_ids, k))
+            rec["n"] = int(np.asarray(payload).shape[0])
+        elif op == "insert":
+            index.insert(payload)
+            rec["n"] = int(np.asarray(payload).shape[0])
+        elif op == "delete":
+            index.delete(payload)
+            rec["n"] = int(np.asarray(payload).shape[0])
+        elif op == "rebuild":
+            index.rebuild_from_alive()
+            rec["n"] = 1
+        else:
+            raise ValueError(op)
+        rec["seconds"] = time.perf_counter() - t0
+        records.append(rec)
+    return records

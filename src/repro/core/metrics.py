@@ -1,0 +1,41 @@
+"""Recall + ground truth (§6 "Retrieval Recall")."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import distances
+from repro.core.graph import NULL, GraphState
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def brute_force_topk(
+    state: GraphState, queries: jax.Array, k: int
+) -> tuple[jax.Array, jax.Array]:
+    """Exact top-k over alive vertices via the MXU score matrix.
+
+    Returns (scores f32[B,k], ids i32[B,k]). Chunk queries at the call site
+    if B·capacity is large.
+    """
+    s = distances.score_matrix(
+        state.vectors, state.sqnorms, queries, state.metric
+    )  # [B, capacity]
+    s = jnp.where(state.alive[None, :], s, -jnp.inf)
+    top_s, top_i = jax.lax.top_k(s, k)
+    ids = jnp.where(top_s > -jnp.inf, top_i, NULL).astype(jnp.int32)
+    return top_s, ids
+
+
+def recall_at_k(
+    found_ids: jax.Array,   # i32[B, >=k] search results (NULL padded)
+    true_ids: jax.Array,    # i32[B, k]   ground truth
+    k: int,
+) -> jax.Array:
+    """Mean |found ∩ true| / |true| over the batch (paper's recall)."""
+    f = found_ids[:, :k]
+    hits = (f[:, :, None] == true_ids[:, None, :]) & (true_ids[:, None, :] != NULL)
+    n_hits = jnp.sum(jnp.any(hits, axis=1), axis=1)
+    n_true = jnp.maximum(jnp.sum(true_ids != NULL, axis=1), 1)
+    return jnp.mean(n_hits / n_true)

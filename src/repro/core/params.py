@@ -1,0 +1,44 @@
+"""Static hyper-parameters of the index (paper's k, d, plus TPU knobs)."""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchParams:
+    """Parameters of GREEDY-SEARCH (Alg 1) and the TPU execution model."""
+
+    pool_size: int = 32      # paper's k: candidate priority-queue length (ef)
+    max_steps: int = 96      # hard cap on while_loop expansions (TPU bound)
+    num_starts: int = 2      # random entry points seeding the pool
+
+    def __post_init__(self):
+        assert self.pool_size >= 1 and self.max_steps >= 1
+        assert 1 <= self.num_starts <= self.pool_size
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexParams:
+    """Full index configuration (graph + search + maintenance)."""
+
+    capacity: int
+    dim: int
+    d_out: int = 16            # paper's d: out-degree threshold
+    d_in: int | None = None    # bounded in-degree (DESIGN.md §2); None → 2*d_out
+    metric: str = "l2"
+    search: SearchParams = SearchParams()
+    insert_search: SearchParams | None = None  # ef_construction; None → search
+    bidirectional_insert: bool = True  # NSW/HNSW practice; strict-paper = False
+    query_chunk: int = 256     # queries per vmapped micro-batch (bitmap memory)
+
+    @property
+    def eff_d_in(self) -> int:
+        if self.d_in is not None:
+            return self.d_in
+        # MIPS concentrates in-edges on large-norm hubs (the ip-NSW hub
+        # problem) — give inner-product graphs more reverse headroom
+        return (4 if self.metric in ("ip", "cos") else 2) * self.d_out
+
+    @property
+    def eff_insert_search(self) -> SearchParams:
+        return self.insert_search if self.insert_search is not None else self.search

@@ -1,0 +1,169 @@
+"""GREEDY-SEARCH (Alg 1) — TPU-native batched best-first beam search.
+
+The paper's ``std::priority_queue`` becomes a fixed-size score-sorted pool;
+each loop step expands the best not-yet-expanded pool entry, gathers its
+``d_out`` neighbors, scores them in one fused gather+dot, and merges with
+``lax.top_k``. A dense per-query visited bitmap replaces the hash set
+(exact dedup; memory = capacity bytes/query, so callers chunk query batches).
+
+MASK semantics (§5.2): tombstoned vertices are *traversable* — they enter the
+pool and steer the walk — but are never reported (``alive`` filter at the
+end). This is exactly why MASK degrades QPS, which the benchmarks reproduce.
+
+Termination: the classic ef-search criterion — stop when no unexpanded pool
+entry remains (every frontier candidate is already worse than the current
+top-k) — plus a hard ``max_steps`` cap to bound the TPU while_loop.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import distances
+from repro.core.graph import NULL, GraphState
+from repro.core.params import SearchParams
+
+NEG_INF = distances.NEG_INF
+
+
+class SearchResult(NamedTuple):
+    ids: jax.Array         # i32[..., k]  NULL padded, score-descending
+    scores: jax.Array      # f32[..., k]  -inf padded
+    n_expanded: jax.Array  # i32[...]  hop count (profiling / paper's QPS story)
+
+
+class _LoopState(NamedTuple):
+    pool_ids: jax.Array       # i32[k]
+    pool_scores: jax.Array    # f32[k]
+    pool_expanded: jax.Array  # bool[k]
+    bitmap: jax.Array         # bool[capacity] — pushed-at-least-once
+    steps: jax.Array          # i32
+
+
+def entry_points(state: GraphState, key: jax.Array, num_starts: int) -> jax.Array:
+    """Sample ``num_starts`` distinct present slots (Gumbel top-k trick)."""
+    g = jax.random.gumbel(key, (state.capacity,))
+    score = jnp.where(state.present, g, -jnp.inf)
+    _, ids = jax.lax.top_k(score, num_starts)
+    ok = state.present[ids]  # fewer present than num_starts → NULL out
+    return jnp.where(ok, ids, NULL).astype(jnp.int32)
+
+
+def _merge_pool(
+    pool: _LoopState, new_ids: jax.Array, new_scores: jax.Array, k: int
+) -> _LoopState:
+    all_ids = jnp.concatenate([pool.pool_ids, new_ids])
+    all_scores = jnp.concatenate([pool.pool_scores, new_scores])
+    all_expanded = jnp.concatenate(
+        [pool.pool_expanded, jnp.zeros(new_ids.shape, bool)]
+    )
+    top_scores, idx = jax.lax.top_k(all_scores, k)
+    return pool._replace(
+        pool_ids=all_ids[idx],
+        pool_scores=top_scores,
+        pool_expanded=all_expanded[idx],
+    )
+
+
+def _score_new(
+    state: GraphState, q: jax.Array, ids: jax.Array, valid: jax.Array
+) -> jax.Array:
+    safe = jnp.where(valid, ids, 0)
+    rows = state.vectors[safe]
+    s = distances.scores_vs_rows(rows, state.sqnorms[safe], q, state.metric)
+    return jnp.where(valid, s, NEG_INF)
+
+
+def _run_loop(
+    state: GraphState, q: jax.Array, start_ids: jax.Array, params: SearchParams
+) -> _LoopState:
+    k = params.pool_size
+
+    # ---- seed the pool with the entry points ----
+    sv = start_ids != NULL
+    sv = sv & state.present[jnp.where(sv, start_ids, 0)]
+    seed_scores = _score_new(state, q, start_ids, sv)
+    bitmap = jnp.zeros((state.capacity,), bool)
+    bitmap = bitmap.at[jnp.where(sv, start_ids, 0)].max(sv)
+    pool = _LoopState(
+        pool_ids=jnp.full((k,), NULL, jnp.int32),
+        pool_scores=jnp.full((k,), NEG_INF, jnp.float32),
+        pool_expanded=jnp.zeros((k,), bool),
+        bitmap=bitmap,
+        steps=jnp.asarray(0, jnp.int32),
+    )
+    pool = _merge_pool(pool, jnp.where(sv, start_ids, NULL), seed_scores, k)
+
+    def cond(p: _LoopState) -> jax.Array:
+        has_frontier = jnp.any((p.pool_ids != NULL) & ~p.pool_expanded)
+        return has_frontier & (p.steps < params.max_steps)
+
+    def body(p: _LoopState) -> _LoopState:
+        frontier = jnp.where(
+            (p.pool_ids != NULL) & ~p.pool_expanded, p.pool_scores, NEG_INF
+        )
+        best = jnp.argmax(frontier)
+        cur = p.pool_ids[best]
+        expanded = p.pool_expanded.at[best].set(True)
+
+        nbrs = state.adj[jnp.maximum(cur, 0)]  # i32[d_out]
+        nv = nbrs != NULL
+        safe = jnp.where(nv, nbrs, 0)
+        nv = nv & state.present[safe] & ~p.bitmap[safe]
+        nscores = _score_new(state, q, nbrs, nv)
+        bitmap = p.bitmap.at[safe].max(nv)
+
+        p = p._replace(pool_expanded=expanded, bitmap=bitmap, steps=p.steps + 1)
+        return _merge_pool(p, jnp.where(nv, nbrs, NULL), nscores, k)
+
+    return jax.lax.while_loop(cond, body, pool)
+
+
+def search_one(
+    state: GraphState,
+    q: jax.Array,
+    start_ids: jax.Array,
+    params: SearchParams,
+) -> SearchResult:
+    """Single-query greedy search reporting alive vertices only."""
+    pool = _run_loop(state, q, start_ids, params)
+    ids = pool.pool_ids
+    ok = (ids != NULL) & state.alive[jnp.maximum(ids, 0)]
+    rep_scores = jnp.where(ok, pool.pool_scores, NEG_INF)
+    top_scores, idx = jax.lax.top_k(rep_scores, params.pool_size)
+    rep_ids = jnp.where(top_scores > NEG_INF, ids[idx], NULL)
+    return SearchResult(rep_ids, top_scores, pool.steps)
+
+
+def search_one_raw(
+    state: GraphState,
+    q: jax.Array,
+    start_ids: jax.Array,
+    params: SearchParams,
+) -> SearchResult:
+    """Unfiltered traversal pool (incl. masked) — insertion/repair internals."""
+    pool = _run_loop(state, q, start_ids, params)
+    return SearchResult(pool.pool_ids, pool.pool_scores, pool.steps)
+
+
+def _batched(search_fn):
+    @functools.partial(jax.jit, static_argnames=("params",))
+    def run(
+        state: GraphState, queries: jax.Array, key: jax.Array, params: SearchParams
+    ) -> SearchResult:
+        keys = jax.random.split(key, queries.shape[0])
+        starts = jax.vmap(
+            lambda kk: entry_points(state, kk, params.num_starts)
+        )(keys)
+        return jax.vmap(lambda q, s: search_fn(state, q, s, params))(
+            queries, starts
+        )
+
+    return run
+
+
+search_batch = _batched(search_one)
+search_batch_raw = _batched(search_one_raw)

@@ -1,0 +1,4 @@
+from repro.data.synthetic import make_dataset
+from repro.data.workload import UpdateWorkload, make_workload
+
+__all__ = ["make_dataset", "UpdateWorkload", "make_workload"]

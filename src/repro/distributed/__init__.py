@@ -1,0 +1,15 @@
+from repro.distributed.ann import (
+    DistParams,
+    distributed_delete,
+    distributed_insert,
+    distributed_query,
+    init_sharded_state,
+)
+
+__all__ = [
+    "DistParams",
+    "distributed_delete",
+    "distributed_insert",
+    "distributed_query",
+    "init_sharded_state",
+]

@@ -1,0 +1,216 @@
+"""Sharded online ANN index — the paper's system at 256–512+ chips.
+
+Layout (DESIGN.md §4): shard-per-device subgraphs. Each device on the
+flattened ('data','model') axes owns ``cap_local`` slots and an independent
+proximity graph over them; there are NO cross-shard edges, so the paper's
+delete/repair algorithms run unmodified (and fully parallel) inside every
+shard. The 'pod' axis holds index replicas and shards the query stream
+(fault-tolerance + QPS scaling).
+
+  query : queries replicated within a pod → every shard beam-searches its
+          subgraph → all_gather(k per shard) → top-k merge. Collective bytes
+          per query = P·k·8 — independent of index size.
+  insert: routed by hash → SPMD masked insert (only the owner's mask is hot).
+  delete: global id = shard·cap_local + local id → owner-masked
+          delete_batch with the configured strategy (GLOBAL repair searches
+          are shard-local by construction).
+
+Straggler/fault story: the merge consumes per-shard partial top-k, so a lost
+shard degrades recall by ~1/P instead of failing the query; the checkpoint
+manager (checkpoint/manager.py) restores per-shard states independently and
+supports re-sharding to a different device count.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import delete as delete_mod
+from repro.core import insert as insert_mod
+from repro.core import search as search_mod
+from repro.core.graph import NULL, GraphState, init_graph
+from repro.core.params import IndexParams
+
+
+@dataclasses.dataclass(frozen=True)
+class DistParams:
+    """Distribution config for the sharded index."""
+    index: IndexParams           # per-shard params (capacity = cap_local)
+    shard_axes: tuple[str, ...] = ("data", "model")
+    pod_axis: str | None = None  # set for multi-pod meshes
+    hierarchical_merge: bool = True  # §Perf C: two-stage top-k fan-in —
+                                     # merge within 'model' first, then
+                                     # across 'data': AG bytes drop from
+                                     # P·B·k to (m+n)·B·k per device
+    vec_dtype: str = "float32"       # "bfloat16" halves gather traffic
+
+    @property
+    def axes(self) -> tuple[str, ...]:
+        return self.shard_axes
+
+
+def init_sharded_state(dp: DistParams, mesh) -> GraphState:
+    """Host-side init of the stacked per-shard states [P, cap_local, ...]."""
+    n_shards = 1
+    for a in dp.shard_axes:
+        n_shards *= mesh.shape[a]
+    one = init_graph(
+        dp.index.capacity, dp.index.dim, d_out=dp.index.d_out,
+        d_in=dp.index.eff_d_in, metric=dp.index.metric,
+        dtype=jnp.dtype(dp.vec_dtype),
+    )
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (n_shards,) + x.shape), one
+    )
+
+
+def _local(state_stacked: GraphState) -> GraphState:
+    """Drop the (length-1 after shard_map) shard axis."""
+    return jax.tree.map(lambda x: x[0], state_stacked)
+
+
+def _restack(state: GraphState) -> GraphState:
+    return jax.tree.map(lambda x: x[None], state)
+
+
+def _shard_index(axes) -> jax.Array:
+    idx = jnp.int32(0)
+    for a in axes:
+        idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+    return idx
+
+
+def make_query_step(dp: DistParams, mesh):
+    """Build the jitted distributed query step.
+
+    queries f32[B, dim] (replicated intra-pod / sharded over pod) →
+    (gids i32[B, k], scores f32[B, k]).
+    """
+    sp = dp.index.search
+    axes = dp.axes
+    state_spec = jax.tree.map(lambda _: P(axes), init_specs_tree(dp))
+    q_spec = P(dp.pod_axis) if dp.pod_axis else P()
+
+    def _merge(scores, ids, axis, k):
+        all_s = jax.lax.all_gather(scores, axis)            # [m, B, k]
+        all_i = jax.lax.all_gather(ids, axis)
+        m, B, _ = all_s.shape
+        flat_s = jnp.transpose(all_s, (1, 0, 2)).reshape(B, -1)
+        flat_i = jnp.transpose(all_i, (1, 0, 2)).reshape(B, -1)
+        top_s, idx = jax.lax.top_k(flat_s, k)
+        return top_s, jnp.take_along_axis(flat_i, idx, axis=1)
+
+    def _step(state_stacked: GraphState, queries, key):
+        state = _local(state_stacked)
+        shard = _shard_index(axes)
+        key = jax.random.fold_in(key, shard)
+        res = search_mod.search_batch(state, queries, key, sp)
+        gids = jnp.where(
+            res.ids != NULL, res.ids + shard * dp.index.capacity, NULL
+        )
+        k = sp.pool_size
+        if dp.hierarchical_merge and len(axes) > 1:
+            # two-stage fan-in (§Perf C): intra-'model' merge shrinks the
+            # candidate set 16× before it crosses the 'data' axis
+            s, i = _merge(res.scores, gids, axes[-1], k)
+            top_s, top_i = _merge(s, i, axes[:-1], k)
+        else:
+            top_s, top_i = _merge(res.scores, gids, axes, k)
+        return top_i, top_s
+
+    smapped = jax.shard_map(
+        _step, mesh=mesh,
+        in_specs=(state_spec, q_spec, P()),
+        out_specs=(q_spec, q_spec),
+        check_vma=False,
+    )
+    return jax.jit(smapped)
+
+
+def make_insert_step(dp: DistParams, mesh):
+    """Routed batch insert: vectors f32[B, dim] + router ids i32[B]."""
+    axes = dp.axes
+    state_spec = jax.tree.map(lambda _: P(axes), init_specs_tree(dp))
+
+    def _step(state_stacked, vecs, route, key):
+        state = _local(state_stacked)
+        shard = _shard_index(axes)
+        n_shards = 1
+        for a in axes:
+            n_shards *= jax.lax.axis_size(a)
+        mine = (route % n_shards) == shard
+        key = jax.random.fold_in(key, shard)
+        state, ids = insert_mod.insert_batch(state, vecs, mine, key, dp.index)
+        gids = jnp.where(ids != NULL, ids + shard * dp.index.capacity, NULL)
+        # owner announces its assigned gid; everyone else holds NULL(-1);
+        # pmax is exact since real gids are >= 0
+        gids = jax.lax.pmax(jnp.where(mine, gids, NULL), axes)
+        return _restack(state), gids
+
+    smapped = jax.shard_map(
+        _step, mesh=mesh,
+        in_specs=(state_spec, P(), P(), P()),
+        out_specs=(state_spec, P()),
+        check_vma=False,
+    )
+    return jax.jit(smapped, donate_argnums=(0,))
+
+
+def make_delete_step(dp: DistParams, mesh, strategy: str):
+    """Owner-masked distributed delete over global ids i32[B]."""
+    axes = dp.axes
+    state_spec = jax.tree.map(lambda _: P(axes), init_specs_tree(dp))
+
+    def _step(state_stacked, gids, key):
+        state = _local(state_stacked)
+        shard = _shard_index(axes)
+        cap = dp.index.capacity
+        owner = gids // cap
+        lids = (gids % cap).astype(jnp.int32)
+        valid = (gids != NULL) & (owner == shard)
+        key = jax.random.fold_in(key, shard)
+        state = delete_mod.delete_batch(
+            state, lids, valid, key, strategy, dp.index
+        )
+        return _restack(state)
+
+    smapped = jax.shard_map(
+        _step, mesh=mesh,
+        in_specs=(state_spec, P(), P()),
+        out_specs=state_spec,
+        check_vma=False,
+    )
+    return jax.jit(smapped, donate_argnums=(0,))
+
+
+def init_specs_tree(dp: DistParams) -> GraphState:
+    """A GraphState-shaped tree of placeholders (for building spec pytrees)."""
+    import numpy as np
+
+    cap, dim = dp.index.capacity, dp.index.dim
+    z = lambda *s: np.zeros(s, np.int8)  # noqa: E731 — structure only
+    return GraphState(
+        vectors=z(1, cap, dim), sqnorms=z(1, cap),
+        adj=z(1, cap, dp.index.d_out), radj=z(1, cap, dp.index.eff_d_in),
+        alive=z(1, cap), present=z(1, cap), size=z(1),
+        capacity=cap, dim=dim, d_out=dp.index.d_out,
+        d_in=dp.index.eff_d_in, metric=dp.index.metric,
+    )
+
+
+# convenience host-level wrappers -------------------------------------------
+
+def distributed_query(state, queries, key, dp, mesh):
+    return make_query_step(dp, mesh)(state, queries, key)
+
+
+def distributed_insert(state, vecs, route, key, dp, mesh):
+    return make_insert_step(dp, mesh)(state, vecs, route, key)
+
+
+def distributed_delete(state, gids, key, dp, mesh, strategy="global"):
+    return make_delete_step(dp, mesh, strategy)(state, gids, key)

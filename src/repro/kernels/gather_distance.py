@@ -1,0 +1,63 @@
+"""Fused gather + distance Pallas kernel — the beam-expansion hot loop.
+
+Greedy search expands ``C`` candidate ids per query per step; XLA's gather
+materializes ``[B, C, d]`` in HBM before the dot. This kernel instead drives
+the table row DMA *from scalar-prefetched ids* (the paged-attention /
+embedding-lookup TPU pattern): the BlockSpec index_map of the vector table
+reads ``ids_ref[b, c]``, so each grid step pipelines exactly one needed row
+HBM→VMEM, fuses the dot + norm correction, and writes a single score.
+
+HBM traffic: ``B·C·d`` reads + ``B·C`` writes (vs ``2·B·C·d + B·C`` for the
+unfused gather-then-einsum), and no intermediate buffer.
+
+Caller contract (ops.py enforces): ids are pre-clamped to [0, N); invalid
+lanes are fixed up outside (scores → -inf).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gd_kernel(ids_ref, x_ref, xsq_ref, q_ref, o_ref, *, metric: str):
+    del ids_ref  # consumed by the index_maps
+    row = x_ref[0, :].astype(jnp.float32)
+    qv = q_ref[0, :].astype(jnp.float32)
+    dot = jnp.sum(row * qv)
+    if metric == "l2":
+        o_ref[0, 0] = 2.0 * dot - xsq_ref[0]
+    else:
+        o_ref[0, 0] = dot
+
+
+def gather_scores_pallas(
+    table: jax.Array,   # [N, d]  (d padded to 128 lanes by ops.py)
+    tsq: jax.Array,     # f32[N]
+    ids: jax.Array,     # i32[B, C]  pre-clamped to [0, N)
+    q: jax.Array,       # [B, d]
+    *,
+    metric: str = "l2",
+    interpret: bool = True,
+) -> jax.Array:
+    B, C = ids.shape
+    d = table.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, C),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda b, c, ids_ref: (ids_ref[b, c], 0)),
+            pl.BlockSpec((1,), lambda b, c, ids_ref: (ids_ref[b, c],)),
+            pl.BlockSpec((1, d), lambda b, c, ids_ref: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda b, c, ids_ref: (b, c)),
+    )
+    return pl.pallas_call(
+        functools.partial(_gd_kernel, metric=metric),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, C), jnp.float32),
+        interpret=interpret,
+    )(ids, table, tsq, q)

@@ -1,0 +1,119 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Handles padding to block multiples, invalid-id fixup, dtype policy (bf16/f32
+inputs, fp32 accumulation), and the interpret-mode switch (interpret=True on
+CPU — the container target; False when an actual TPU backend is present).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import distance_matrix as _dm
+from repro.kernels import gather_distance as _gd
+
+NEG_INF = float("-inf")
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except Exception:  # pragma: no cover
+        return False
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int, value=0.0) -> jax.Array:
+    n = x.shape[axis]
+    rem = (-n) % mult
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads, constant_values=value)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("metric", "block_b", "block_m", "block_d", "interpret")
+)
+def score_matrix(
+    x: jax.Array,
+    xsq: jax.Array,
+    q: jax.Array,
+    *,
+    metric: str = "l2",
+    block_b: int = 128,
+    block_m: int = 256,
+    block_d: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """[B, M] fp32 scores via the tiled Pallas kernel (padded + cropped)."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    B, M = q.shape[0], x.shape[0]
+    block_b = min(block_b, max(8, B))
+    block_m = min(block_m, max(8, M))
+    xp = _pad_to(_pad_to(x, 0, block_m), 1, block_d)
+    qp = _pad_to(_pad_to(q, 0, block_b), 1, block_d)
+    xsqp = _pad_to(xsq, 0, block_m)
+    out = _dm.score_matrix_pallas(
+        xp, xsqp, qp, metric=metric, block_b=block_b, block_m=block_m,
+        block_d=block_d, interpret=interpret,
+    )
+    return out[:B, :M]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "metric", "block_b", "block_m", "interpret")
+)
+def score_topk(
+    x: jax.Array,
+    xsq: jax.Array,
+    q: jax.Array,
+    k: int,
+    *,
+    metric: str = "l2",
+    block_b: int = 64,
+    block_m: int = 256,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused brute-force top-k: (scores f32[B,k], ids i32[B,k])."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    B, M = q.shape[0], x.shape[0]
+    block_b = min(block_b, max(8, B))
+    block_m = min(block_m, max(k, 8, M))
+    # pad M with -inf norms so padded rows can never win
+    xp = _pad_to(_pad_to(x, 0, block_m), 1, 128)
+    qp = _pad_to(_pad_to(q, 0, block_b), 1, 128)
+    xsqp = _pad_to(xsq, 0, block_m)
+    s, i = _dm.score_topk_pallas(
+        xp, xsqp, qp, k, metric=metric, block_b=block_b, block_m=block_m,
+        n_valid=M, interpret=interpret,
+    )
+    s, i = s[:B], i[:B]
+    ok = (i >= 0) & (i < M)
+    return jnp.where(ok, s, NEG_INF), jnp.where(ok, i, -1)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "interpret"))
+def gather_scores(
+    table: jax.Array,
+    tsq: jax.Array,
+    ids: jax.Array,
+    q: jax.Array,
+    *,
+    metric: str = "l2",
+    interpret: bool | None = None,
+) -> jax.Array:
+    """[B, C] fused gather+distance; invalid ids (< 0 or >= N) → -inf."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    N = table.shape[0]
+    valid = (ids >= 0) & (ids < N)
+    safe = jnp.where(valid, ids, 0).astype(jnp.int32)
+    tp = _pad_to(table, 1, 128)
+    qp = _pad_to(q, 1, 128)
+    s = _gd.gather_scores_pallas(
+        tp, tsq.astype(jnp.float32), safe, qp, metric=metric,
+        interpret=interpret,
+    )
+    return jnp.where(valid, s, NEG_INF)

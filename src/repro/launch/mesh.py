@@ -1,0 +1,31 @@
+"""Production mesh builders.
+
+Functions (not module constants) so importing never touches jax device
+state — the dry-run must set XLA_FLAGS before any jax initialization.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips per pod; 2 pods = 512 chips for the multi-pod pass."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_data: int = 4, n_model: int = 2, *, multi_pod: bool = False):
+    """Small mesh for CPU tests (requires host device count ≥ product)."""
+    if multi_pod:
+        return jax.make_mesh((2, n_data, n_model), ("pod", "data", "model"))
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def batch_axes(mesh) -> tuple[str, ...]:
+    """Axes the batch/token dim shards over (pod extends data when present)."""
+    return (("pod", "data") if "pod" in mesh.axis_names else ("data",))
+
+
+def all_axes(mesh) -> tuple[str, ...]:
+    return tuple(mesh.axis_names)

@@ -1,0 +1,94 @@
+"""Online ANN serving driver — the paper's production loop (Alg 3 at scale).
+
+Consumes an (op, payload) stream against a (optionally sharded) IPGM index
+with request batching, per-phase latency books, and quorum degradation: a
+straggling/lost shard only costs its own partial results (DESIGN.md §4).
+
+    PYTHONPATH=src python -m repro.launch.serve --scale 2000 --steps 3
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core import IPGMIndex, IndexParams, SearchParams
+from repro.data.workload import make_workload
+
+
+def serve_online(
+    *,
+    dataset: str = "sift",
+    strategy: str = "global",
+    n_base: int = 2000,
+    n_steps: int = 3,
+    batch_size: int = 200,
+    n_queries: int = 256,
+    d_out: int = 12,
+    pool: int = 32,
+    seed: int = 0,
+    k: int = 10,
+) -> list[dict]:
+    wl = make_workload(
+        dataset, n_base=n_base, n_steps=n_steps, batch_size=batch_size,
+        n_queries=n_queries, pattern="random", seed=seed,
+    )
+    dim = wl.base.shape[1]
+    capacity = n_base + n_steps * batch_size + 16
+    params = IndexParams(
+        capacity=capacity, dim=dim, d_out=d_out,
+        search=SearchParams(pool_size=pool, max_steps=3 * pool, num_starts=2),
+    )
+    index = IPGMIndex(params, strategy=strategy, seed=seed)
+
+    print(f"building base index ({n_base} × d={dim}) ...")
+    t0 = time.perf_counter()
+    ids = index.insert(wl.base)
+    id_map = list(np.asarray(ids))       # pool position → graph id
+    print(f"  built in {time.perf_counter() - t0:.1f}s")
+
+    records = []
+    for step in range(wl.n_steps):
+        rec = {"step": step}
+        dele_pos = wl.step_deletes[step]
+        gids = [id_map[p] for p in dele_pos]
+        t0 = time.perf_counter()
+        index.delete(np.asarray(gids))
+        rec["delete_s"] = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        new_ids = index.insert(wl.step_inserts[step])
+        id_map.extend(np.asarray(new_ids))
+        rec["insert_s"] = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        rec["recall@10"] = index.recall(wl.queries, k=k)
+        rec["query_s"] = time.perf_counter() - t0
+        rec["qps"] = n_queries / rec["query_s"]
+        rec.update(index.stats())
+        records.append(rec)
+        print(
+            f"step {step}: recall@{k}={rec['recall@10']:.3f} "
+            f"qps={rec['qps']:.1f} del={rec['delete_s']:.2f}s "
+            f"ins={rec['insert_s']:.2f}s alive={rec['n_alive']}"
+        )
+    return records
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="sift")
+    ap.add_argument("--strategy", default="global")
+    ap.add_argument("--scale", type=int, default=2000)
+    ap.add_argument("--steps", type=int, default=3)
+    args = ap.parse_args()
+    serve_online(
+        dataset=args.dataset, strategy=args.strategy, n_base=args.scale,
+        n_steps=args.steps, batch_size=max(args.scale // 10, 10),
+        n_queries=min(256, args.scale),
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,190 @@
+"""Sharding rules per family — FSDP('data') × TP('model') (+ DP over 'pod').
+
+Parameter rules are name-based tree maps; every rule is divisibility-checked
+against the assigned configs in tests/test_sharding.py. Optimizer moments
+shard identically to their parameter.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import all_axes, batch_axes
+
+FSDP, TP = "data", "model"
+
+
+# ---------------------------------------------------------------------------
+# LM family
+# ---------------------------------------------------------------------------
+
+def _lm_rule(path: tuple, leaf) -> P:
+    keys = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+    name = keys[-1] if keys else ""
+    joined = "/".join(str(k) for k in keys)
+    if "embed" in joined:
+        return P(FSDP, TP)
+    if name == "w":  # dense layers inside stacked blocks: [G, d_in, d_out]
+        if any(f"/{k}/" in f"/{joined}/" for k in ("wq", "wk", "wv", "w_gate", "w_up")):
+            return P(None, FSDP, TP)
+        if any(f"/{k}/" in f"/{joined}/" for k in ("wo", "w_down")):
+            return P(None, TP, FSDP)
+    if name == "router":            # [G, d, E]
+        return P(None, FSDP, None)
+    if name == "w_in":              # [G, E, d, n_in]
+        return P(None, FSDP, None, TP)
+    if name == "w_out":             # [G, E, f, d]
+        return P(None, FSDP, TP, None)
+    if name == "shared_in":         # [G, d, n_in]
+        return P(None, FSDP, TP)
+    if name == "shared_out":        # [G, f*, d]
+        return P(None, TP, FSDP)
+    return P()  # norms, scalars → replicated
+
+
+def lm_param_specs(params_shape: Any) -> Any:
+    return jax.tree_util.tree_map_with_path(_lm_rule, params_shape)
+
+
+def _lm_rule_inference(path: tuple, leaf) -> P:
+    """Serving sharding (§Perf hillclimb B): params replicated over 'data'
+    (no per-step FSDP all-gather), TP over 'model'; MoE experts stay EP over
+    'data' (stationary weights, token a2a)."""
+    keys = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+    name = keys[-1] if keys else ""
+    joined = "/".join(str(k) for k in keys)
+    if "embed" in joined:
+        return P(TP, None)
+    if name == "w":
+        if any(f"/{k}/" in f"/{joined}/" for k in ("wq", "wk", "wv", "w_gate", "w_up")):
+            return P(None, None, TP)
+        if any(f"/{k}/" in f"/{joined}/" for k in ("wo", "w_down")):
+            return P(None, TP, None)
+    if name == "router":
+        return P()
+    if name == "w_in":              # [G, E, d, n_in] — EP: E stays on data
+        return P(None, FSDP, None, TP)
+    if name == "w_out":
+        return P(None, FSDP, TP, None)
+    if name == "shared_in":
+        return P(None, None, TP)
+    if name == "shared_out":
+        return P(None, TP, None)
+    return P()
+
+
+def lm_param_specs_inference(params_shape: Any) -> Any:
+    return jax.tree_util.tree_map_with_path(_lm_rule_inference, params_shape)
+
+
+def sharded_bytes_per_dev(sds_tree: Any, spec_tree: Any, mesh) -> float:
+    """Per-device bytes of a sharded pytree — the roofline's HBM-IO term."""
+    import numpy as np
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    leaves = jax.tree.leaves(sds_tree)
+    specs = jax.tree.leaves(
+        spec_tree, is_leaf=lambda x: x is None or type(x).__name__ == "PartitionSpec")
+    total = 0.0
+    for leaf, sp in zip(leaves, specs, strict=True):
+        try:
+            itemsize = np.dtype(leaf.dtype).itemsize
+        except TypeError:
+            itemsize = 4
+        n = float(np.prod(leaf.shape, dtype=np.float64)) * itemsize
+        div = 1
+        if sp is not None:
+            for part in tuple(sp):
+                if part is None:
+                    continue
+                names = (part,) if isinstance(part, str) else tuple(part)
+                for nm in names:
+                    div *= axes.get(nm, 1)
+        total += n / div
+    return total
+
+
+def lm_batch_specs(cell_kind: str, mesh, specs: dict) -> dict:
+    ba = batch_axes(mesh)
+    if cell_kind == "train":
+        return {k: P(ba) for k in specs}
+    if cell_kind == "prefill":
+        return {"tokens": P(ba)}
+    if cell_kind == "decode":
+        return {"tokens": P(ba)}
+    raise ValueError(cell_kind)
+
+
+def lm_cache_specs_sharding(cell, mesh) -> dict:
+    """KV cache [G, B, S, Hkv, dh]: batch over data axes, seq over model —
+    except long_500k (B=1) where seq shards over everything."""
+    ba = batch_axes(mesh)
+    B = cell.sizes["batch"]
+    if B == 1:
+        kv = P(None, None, all_axes(mesh), None, None)
+        tok = P()
+    else:
+        kv = P(None, ba, TP, None, None)
+        tok = P(ba)
+    return {"kv_spec": kv, "len_spec": P(ba) if B > 1 else P(), "tok_spec": tok}
+
+
+# ---------------------------------------------------------------------------
+# GNN family — small params replicated; graph data sharded over all axes
+# ---------------------------------------------------------------------------
+
+def gnn_param_specs(params_shape: Any) -> Any:
+    return jax.tree.map(lambda _: P(), params_shape)
+
+
+def gnn_batch_specs(batch_specs: Any, mesh) -> Any:
+    ax = all_axes(mesh)
+
+    def rule(leaf):
+        # shard the leading (node/edge/triplet/block) dim over all axes;
+        # small leaves (graph targets, odd block sizes) stay replicated
+        if (hasattr(leaf, "shape") and len(leaf.shape) >= 1
+                and leaf.shape[0] % 512 == 0 and leaf.shape[0] > 0):
+            return P(ax)
+        return P()
+
+    return jax.tree.map(rule, batch_specs)
+
+
+# ---------------------------------------------------------------------------
+# RecSys family
+# ---------------------------------------------------------------------------
+
+def dlrm_param_specs(params_shape: Any) -> Any:
+    def rule(path, leaf):
+        keys = "/".join(str(getattr(k, "key", k)) for k in path)
+        if "tables" in keys:        # [F, R, D]: rows sharded over everything
+            return P(None, ("data", "model"), None)
+        return P()
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+def dlrm_batch_specs(cell_kind: str, specs: dict, mesh) -> dict:
+    ba = batch_axes(mesh)
+    out = {}
+    for k, v in specs.items():
+        if k == "candidates":       # [M, D] candidate store (M = exactly 1e6,
+            out[k] = P(ba, None)    # divisible by data axes, not by model)
+        elif v.shape[0] == 1:       # retrieval query batch B=1
+            out[k] = P()
+        else:
+            out[k] = P(ba)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# optimizer state
+# ---------------------------------------------------------------------------
+
+def opt_specs(param_specs: Any) -> dict:
+    return {
+        "m": param_specs,
+        "v": param_specs,
+        "step": P(),
+    }

@@ -1,0 +1,108 @@
+"""End-to-end training driver: data → step → checkpoint → restart.
+
+Runs any registry LM arch (smoke or full config) with AdamW, periodic
+atomic checkpoints, preemption simulation (--preempt-at) and exact resume —
+the fault-tolerance path exercised by tests/test_checkpoint.py and
+examples/train_lm.py.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b --smoke \
+        --steps 50 --ckpt-dir /tmp/ckpt [--resume]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import registry as reg
+from repro.data.tokens import TokenStream
+from repro.models import transformer as tfm
+from repro.train.optimizer import AdamWConfig, adamw_init
+from repro.train.steps import make_lm_train_step
+
+
+def train_lm(
+    arch: str = "qwen3-1.7b",
+    *,
+    smoke: bool = True,
+    steps: int = 50,
+    batch: int = 8,
+    seq: int = 64,
+    ckpt_dir: str | None = None,
+    ckpt_every: int = 20,
+    resume: bool = False,
+    preempt_at: int | None = None,
+    seed: int = 0,
+    log_every: int = 10,
+) -> dict:
+    spec = reg.get_arch(arch)
+    cfg = spec.smoke_config() if smoke else spec.config_for_shape("train_4k")
+    opt_cfg = AdamWConfig(lr=1e-3, warmup_steps=10, total_steps=steps)
+
+    params = tfm.init_params(jax.random.PRNGKey(seed), cfg)
+    opt_state = adamw_init(params)
+    stream = TokenStream(vocab=cfg.vocab, batch=batch, seq=seq, seed=seed)
+    start = 0
+
+    mgr = CheckpointManager(ckpt_dir) if ckpt_dir else None
+    if resume and mgr and mgr.latest_step() is not None:
+        (params, opt_state), extra = mgr.restore(
+            None, (params, opt_state)
+        )
+        stream.load_state_dict(extra["stream"])
+        start = int(extra["host_step"])
+        print(f"resumed from step {start}")
+
+    step_fn = jax.jit(make_lm_train_step(cfg, opt_cfg), donate_argnums=(0, 1))
+
+    losses = []
+    t0 = time.perf_counter()
+    for step in range(start, steps):
+        batch_np = stream.next_batch()
+        batch_dev = jax.tree.map(jax.numpy.asarray, batch_np)
+        params, opt_state, metrics = step_fn(params, opt_state, batch_dev)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if step % log_every == 0 or step == steps - 1:
+            print(f"step {step:5d} loss {loss:.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"lr {float(metrics['lr']):.2e}")
+        if mgr and (step + 1) % ckpt_every == 0:
+            mgr.save(step + 1, (params, opt_state),
+                     extra={"stream": stream.state_dict(),
+                            "host_step": step + 1})
+        if preempt_at is not None and step + 1 >= preempt_at:
+            print(f"simulated preemption at step {step + 1}")
+            return {"losses": losses, "preempted_at": step + 1,
+                    "params": params}
+    dt = time.perf_counter() - t0
+    return {"losses": losses, "seconds": dt, "params": params,
+            "final_loss": losses[-1] if losses else None}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--preempt-at", type=int, default=None)
+    args = ap.parse_args()
+    out = train_lm(
+        args.arch, smoke=args.smoke, steps=args.steps, batch=args.batch,
+        seq=args.seq, ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+        resume=args.resume, preempt_at=args.preempt_at,
+    )
+    if "final_loss" in out and out["final_loss"] is not None:
+        print(f"final loss {out['final_loss']:.4f} in {out['seconds']:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

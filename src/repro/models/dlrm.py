@@ -1,0 +1,120 @@
+"""DLRM RM2 (Naumov et al. 2019) — embedding bags + dot interaction + MLPs.
+
+JAX has no native EmbeddingBag: lookups are ``jnp.take`` over stacked tables
++ masked mean pooling (multi-hot), which IS the system's embedding layer
+(kernel_taxonomy §RecSys). Tables are stacked ``[n_sparse, rows, dim]`` so
+table-wise model parallelism is a single sharding annotation on axis 0.
+
+``retrieval_cand`` (1 query × 10⁶ candidates) routes through the Pallas
+``score_topk`` kernel — the same brute-force scorer the ANN index uses,
+which is exactly the paper's serving integration (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+@dataclasses.dataclass(frozen=True)
+class DLRMConfig:
+    name: str = "dlrm-rm2"
+    n_dense: int = 13
+    n_sparse: int = 26
+    embed_dim: int = 64
+    n_rows: int = 1_000_000        # rows per table
+    nnz: int = 1                   # multi-hot ids per field (padded)
+    bot_mlp: tuple[int, ...] = (512, 256, 64)
+    top_mlp: tuple[int, ...] = (512, 512, 256, 1)
+
+    @property
+    def n_interact(self) -> int:
+        f = self.n_sparse + 1
+        return f * (f - 1) // 2
+
+
+def _mlp_init(key, d_in, widths):
+    layers = []
+    for w in widths:
+        k, key = jax.random.split(key)
+        layers.append(dense_init(k, d_in, w))
+        d_in = w
+    return layers
+
+
+def _mlp(layers, x, *, final_act=False):
+    for i, lp in enumerate(layers):
+        x = x @ lp["w"]
+        if i < len(layers) - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+def init_params(key, cfg: DLRMConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    top_in = cfg.n_interact + cfg.bot_mlp[-1]
+    return {
+        "tables": jax.random.normal(
+            k1, (cfg.n_sparse, cfg.n_rows, cfg.embed_dim), jnp.float32
+        ) * (1.0 / cfg.embed_dim**0.5),
+        "bot": _mlp_init(k2, cfg.n_dense, cfg.bot_mlp),
+        "top": _mlp_init(k3, top_in, cfg.top_mlp),
+    }
+
+
+def embedding_bag(
+    tables: jax.Array,   # [F, R, D]
+    ids: jax.Array,      # i32[B, F, nnz]
+    mask: jax.Array,     # bool[B, F, nnz]
+) -> jax.Array:
+    """Mean-pooled multi-hot lookup → [B, F, D] (manual EmbeddingBag)."""
+    F = tables.shape[0]
+    f_idx = jnp.arange(F)[None, :, None]                     # [1, F, 1]
+    rows = tables[f_idx, ids]                                # [B, F, nnz, D]
+    rows = jnp.where(mask[..., None], rows, 0.0)
+    cnt = jnp.maximum(jnp.sum(mask, axis=-1, keepdims=True), 1)
+    return jnp.sum(rows, axis=2) / cnt
+
+
+def forward(params, batch: dict, cfg: DLRMConfig) -> jax.Array:
+    """batch = {dense f32[B,13], sparse_ids i32[B,F,nnz], sparse_mask bool}
+    → logits f32[B]."""
+    dense_feat = batch["dense"]
+    emb = embedding_bag(params["tables"], batch["sparse_ids"],
+                        batch["sparse_mask"])                # [B, F, D]
+    bot = _mlp(params["bot"], dense_feat, final_act=True)    # [B, D]
+    z = jnp.concatenate([bot[:, None, :], emb], axis=1)      # [B, F+1, D]
+    # dot-product feature interaction (lower triangle, no diagonal)
+    zz = jnp.einsum("bfd,bgd->bfg", z, z)                    # [B, F+1, F+1]
+    f = z.shape[1]
+    iu, ju = jnp.tril_indices(f, k=-1)
+    inter = zz[:, iu, ju]                                    # [B, f(f-1)/2]
+    top_in = jnp.concatenate([inter, bot], axis=1)
+    return _mlp(params["top"], top_in)[:, 0]
+
+
+def bce_loss(params, batch: dict, cfg: DLRMConfig) -> jax.Array:
+    logits = forward(params, batch, cfg)
+    y = batch["labels"].astype(jnp.float32)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+
+
+def retrieval_scores(
+    query_emb: jax.Array,       # f32[B, D] user/query tower output
+    candidates: jax.Array,      # f32[M, D] item embeddings
+    k: int,
+    *,
+    use_pallas: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Top-k candidate scoring — the ANN-serving hot path (ties into IPGM)."""
+    csq = jnp.sum(candidates.astype(jnp.float32) ** 2, axis=-1)
+    if use_pallas:
+        from repro.kernels import ops
+        return ops.score_topk(candidates, csq, query_emb, k, metric="ip")
+    from repro.kernels.ref import ref_score_topk
+    return ref_score_topk(candidates, csq, query_emb, k, "ip")

@@ -1,0 +1,3 @@
+from repro.models.gnn.common import GraphData, segment_mean, segment_softmax
+
+__all__ = ["GraphData", "segment_mean", "segment_softmax"]

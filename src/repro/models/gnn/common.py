@@ -1,0 +1,108 @@
+"""GNN substrate: static-shape graph batches + segment message passing.
+
+JAX sparse is BCOO-only, so message passing is implemented directly over an
+edge list with ``jax.ops.segment_sum`` / ``segment_max`` — this IS the
+system's SpMM/SDDMM layer (kernel_taxonomy §GNN). All shapes are static:
+graphs are padded to (n_nodes, n_edges[, n_triplets]) with validity masks;
+padded edges point at node 0 with mask=False and contribute zeros.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=[
+        "x", "senders", "receivers", "node_mask", "edge_mask", "labels",
+        "label_mask", "positions", "edge_attr", "graph_ids", "targets",
+    ],
+    meta_fields=[],
+)
+@dataclasses.dataclass(frozen=True)
+class GraphData:
+    """One (possibly merged/padded) graph batch."""
+
+    x: jax.Array            # f32[N, F] node features
+    senders: jax.Array      # i32[E]
+    receivers: jax.Array    # i32[E]
+    node_mask: jax.Array    # bool[N]
+    edge_mask: jax.Array    # bool[E]
+    labels: jax.Array       # i32[N] node labels (classification) or zeros
+    label_mask: jax.Array   # bool[N] which nodes are supervised
+    positions: jax.Array    # f32[N, 3] (geometric models; zeros otherwise)
+    edge_attr: jax.Array    # f32[E, De] (gatedgcn; zeros otherwise)
+    graph_ids: jax.Array    # i32[N] graph membership (batched small graphs)
+    targets: jax.Array      # f32[G] graph-level regression targets
+
+    @property
+    def n_nodes(self) -> int:
+        return self.x.shape[0]
+
+    @property
+    def n_edges(self) -> int:
+        return self.senders.shape[0]
+
+
+def make_graph(
+    x, senders, receivers, *, labels=None, label_mask=None, node_mask=None,
+    edge_mask=None, positions=None, edge_attr=None, d_edge=8, graph_ids=None,
+    targets=None, n_graphs=1,
+) -> GraphData:
+    N = x.shape[0]
+    E = senders.shape[0]
+    return GraphData(
+        x=jnp.asarray(x, jnp.float32),
+        senders=jnp.asarray(senders, jnp.int32),
+        receivers=jnp.asarray(receivers, jnp.int32),
+        node_mask=(jnp.ones(N, bool) if node_mask is None
+                   else jnp.asarray(node_mask)),
+        edge_mask=(jnp.ones(E, bool) if edge_mask is None
+                   else jnp.asarray(edge_mask)),
+        labels=(jnp.zeros(N, jnp.int32) if labels is None
+                else jnp.asarray(labels, jnp.int32)),
+        label_mask=(jnp.ones(N, bool) if label_mask is None
+                    else jnp.asarray(label_mask)),
+        positions=(jnp.zeros((N, 3), jnp.float32) if positions is None
+                   else jnp.asarray(positions, jnp.float32)),
+        edge_attr=(jnp.zeros((E, d_edge), jnp.float32) if edge_attr is None
+                   else jnp.asarray(edge_attr, jnp.float32)),
+        graph_ids=(jnp.zeros(N, jnp.int32) if graph_ids is None
+                   else jnp.asarray(graph_ids, jnp.int32)),
+        targets=(jnp.zeros((n_graphs,), jnp.float32) if targets is None
+                 else jnp.asarray(targets, jnp.float32)),
+    )
+
+
+def scatter_sum(messages: jax.Array, dst: jax.Array, n: int) -> jax.Array:
+    """Σ over incoming edges — the message-passing primitive."""
+    return jax.ops.segment_sum(messages, dst, num_segments=n)
+
+
+def segment_mean(messages, dst, mask, n) -> jax.Array:
+    m = jnp.where(mask[:, None], messages, 0.0)
+    tot = jax.ops.segment_sum(m, dst, num_segments=n)
+    cnt = jax.ops.segment_sum(mask.astype(jnp.float32), dst, num_segments=n)
+    return tot / jnp.maximum(cnt, 1.0)[:, None]
+
+
+def segment_softmax(scores, dst, mask, n) -> jax.Array:
+    """Edge softmax per receiving node (GAT): numerically stable.
+
+    scores: [E] or [E, H]; mask: bool[E].
+    """
+    m = mask if scores.ndim == 1 else mask[:, None]
+    s = jnp.where(m, scores, -jnp.inf)
+    smax = jax.ops.segment_max(s, dst, num_segments=n)
+    smax = jnp.where(jnp.isfinite(smax), smax, 0.0)
+    e = jnp.where(m, jnp.exp(s - smax[dst]), 0.0)
+    z = jax.ops.segment_sum(e, dst, num_segments=n)
+    return e / jnp.maximum(z[dst], 1e-16)
+
+
+def degree(dst, mask, n) -> jax.Array:
+    return jax.ops.segment_sum(mask.astype(jnp.float32), dst, num_segments=n)

@@ -1,0 +1,65 @@
+"""GAT (Veličković et al. 2018) — SDDMM edge scores → segment softmax → SpMM.
+
+Cora config: 2 layers, 8 heads × d=8 hidden (ELU), single-head output layer.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.gnn.common import GraphData, scatter_sum, segment_softmax
+from repro.models.layers import dense_init
+
+
+@dataclasses.dataclass(frozen=True)
+class GATConfig:
+    name: str = "gat-cora"
+    n_layers: int = 2
+    d_in: int = 1433
+    d_hidden: int = 8
+    n_heads: int = 8
+    n_classes: int = 7
+    negative_slope: float = 0.2
+
+
+def init_params(key, cfg: GATConfig):
+    layers = []
+    d_in = cfg.d_in
+    for i in range(cfg.n_layers):
+        last = i == cfg.n_layers - 1
+        H = 1 if last else cfg.n_heads
+        d_out = cfg.n_classes if last else cfg.d_hidden
+        k1, k2, k3, key = jax.random.split(key, 4)
+        layers.append({
+            "w": dense_init(k1, d_in, H * d_out)["w"].reshape(d_in, H, d_out),
+            "a_src": jax.random.normal(k2, (H, d_out)) * 0.1,
+            "a_dst": jax.random.normal(k3, (H, d_out)) * 0.1,
+        })
+        d_in = d_out if last else H * d_out
+    return {"layers": layers}
+
+
+def forward(params, g: GraphData, cfg: GATConfig) -> jax.Array:
+    h = g.x
+    N = g.n_nodes
+    for i, lp in enumerate(params["layers"]):
+        last = i == cfg.n_layers - 1
+        hp = jnp.einsum("nf,fhd->nhd", h, lp["w"])            # [N, H, d]
+        # SDDMM-style edge scores from source/dest attention vectors
+        s_src = jnp.sum(hp * lp["a_src"][None], axis=-1)      # [N, H]
+        s_dst = jnp.sum(hp * lp["a_dst"][None], axis=-1)
+        e = s_src[g.senders] + s_dst[g.receivers]             # [E, H]
+        e = jax.nn.leaky_relu(e, cfg.negative_slope)
+        alpha = segment_softmax(e, g.receivers, g.edge_mask, N)  # [E, H]
+        msgs = hp[g.senders] * alpha[..., None]               # [E, H, d]
+        agg = scatter_sum(
+            jnp.where(g.edge_mask[:, None, None], msgs, 0.0), g.receivers, N
+        )                                                      # [N, H, d]
+        if last:
+            h = jnp.mean(agg, axis=1)                          # head average
+        else:
+            h = jax.nn.elu(agg).reshape(N, -1)                 # head concat
+        h = jnp.where(g.node_mask[:, None], h, 0.0)
+    return h

@@ -1,0 +1,68 @@
+"""GatedGCN (Bresson & Laurent 2018; Dwivedi et al. benchmark config).
+
+16 layers, d=70, gated edge aggregation with residuals. The benchmark's
+BatchNorm is replaced by LayerNorm (masked-static-shape friendly; noted in
+DESIGN.md §Arch-applicability).
+
+  e'_ij = e_ij + ReLU(LN(A h_i + B h_j + C e_ij))
+  h'_i  = h_i + ReLU(LN(U h_i + Σ_j σ(e'_ij) ⊙ (V h_j) / (Σ_j σ(e'_ij)+ε)))
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.gnn.common import GraphData, scatter_sum
+from repro.models.layers import dense, dense_init, layernorm, layernorm_init
+
+
+@dataclasses.dataclass(frozen=True)
+class GatedGCNConfig:
+    name: str = "gatedgcn"
+    n_layers: int = 16
+    d_in: int = 64
+    d_edge_in: int = 8
+    d_hidden: int = 70
+    n_classes: int = 10
+
+
+def init_params(key, cfg: GatedGCNConfig):
+    k_in, k_e, key = jax.random.split(key, 3)
+    d = cfg.d_hidden
+    layers = []
+    for _ in range(cfg.n_layers):
+        ks = jax.random.split(key, 6)
+        key = ks[5]
+        layers.append({
+            "A": dense_init(ks[0], d, d), "B": dense_init(ks[1], d, d),
+            "C": dense_init(ks[2], d, d), "U": dense_init(ks[3], d, d),
+            "V": dense_init(ks[4], d, d),
+            "ln_h": layernorm_init(d), "ln_e": layernorm_init(d),
+        })
+    k_out, _ = jax.random.split(key)
+    return {
+        "embed_h": dense_init(k_in, cfg.d_in, d),
+        "embed_e": dense_init(k_e, cfg.d_edge_in, d),
+        "out": dense_init(k_out, d, cfg.n_classes),
+        "layers": layers,
+    }
+
+
+def forward(params, g: GraphData, cfg: GatedGCNConfig) -> jax.Array:
+    N = g.n_nodes
+    h = dense(params["embed_h"], g.x)
+    e = dense(params["embed_e"], g.edge_attr)
+    for lp in params["layers"]:
+        hi, hj = h[g.senders], h[g.receivers]
+        e_new = dense(lp["A"], hi) + dense(lp["B"], hj) + dense(lp["C"], e)
+        e = e + jax.nn.relu(layernorm(lp["ln_e"], e_new))
+        gate = jax.nn.sigmoid(e)
+        gate = jnp.where(g.edge_mask[:, None], gate, 0.0)
+        num = scatter_sum(gate * dense(lp["V"], hi), g.receivers, N)
+        den = scatter_sum(gate, g.receivers, N)
+        agg = num / (den + 1e-6)
+        h = h + jax.nn.relu(layernorm(lp["ln_h"], dense(lp["U"], h) + agg))
+        h = jnp.where(g.node_mask[:, None], h, 0.0)
+    return dense(params["out"], h)

@@ -1,0 +1,85 @@
+"""GraphSAGE (Hamilton et al. 2017) — mean aggregator, full-graph + sampled.
+
+Full-graph: h'_i = act(W_self·h_i + W_nbr·mean_{j∈N(i)} h_j).
+Minibatch: layered fanout blocks from the neighbor sampler
+(data/graph_sampler.py) — hop-h features aggregated with a masked fixed-
+fanout mean (the padded-dense regime: [B, fanout, F] tensors, MXU-friendly).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.gnn.common import GraphData, segment_mean
+from repro.models.layers import dense, dense_init
+
+
+@dataclasses.dataclass(frozen=True)
+class SAGEConfig:
+    name: str = "graphsage-reddit"
+    n_layers: int = 2
+    d_in: int = 602
+    d_hidden: int = 128
+    n_classes: int = 41
+    sample_sizes: tuple[int, ...] = (25, 10)
+
+
+def init_params(key, cfg: SAGEConfig):
+    dims = [cfg.d_in] + [cfg.d_hidden] * (cfg.n_layers - 1) + [cfg.n_classes]
+    layers = []
+    for i in range(cfg.n_layers):
+        k1, k2, key = jax.random.split(key, 3)
+        layers.append({
+            "w_self": dense_init(k1, dims[i], dims[i + 1]),
+            "w_nbr": dense_init(k2, dims[i], dims[i + 1]),
+        })
+    return {"layers": layers}
+
+
+def forward(params, g: GraphData, cfg: SAGEConfig) -> jax.Array:
+    """Full-graph forward → logits [N, n_classes]."""
+    h = g.x
+    for i, lp in enumerate(params["layers"]):
+        msgs = h[g.senders]
+        agg = segment_mean(msgs, g.receivers, g.edge_mask, g.n_nodes)
+        h = dense(lp["w_self"], h) + dense(lp["w_nbr"], agg)
+        if i < cfg.n_layers - 1:
+            h = jax.nn.relu(h)
+        h = jnp.where(g.node_mask[:, None], h, 0.0)
+    return h
+
+
+def forward_sampled(params, blocks: dict, cfg: SAGEConfig) -> jax.Array:
+    """Sampled minibatch forward.
+
+    blocks = {
+      "feats":  [f32[B·Π(f_1..f_h), d_in] for h = n_layers .. 0]   hop feats
+      "masks":  [bool[...] matching]                                validity
+    }
+    hop ordering: feats[0] = deepest hop (B·f1·f2 nodes), feats[-1] = targets.
+    Aggregation folds the innermost fanout axis per layer.
+    """
+    feats = blocks["feats"]
+    masks = blocks["masks"]
+    fans = list(cfg.sample_sizes)
+    hs = [f for f in feats]  # hs[0] = deepest hop, hs[-1] = target nodes
+    for li, lp in enumerate(params["layers"]):
+        new_hs, new_masks = [], []
+        D = len(hs) - 1
+        for depth in range(len(hs) - 1):
+            # transition hop (D-depth) → (D-depth-1) uses fanout[D-depth-1]
+            fan = fans[D - depth - 1]
+            tgt, nbr = hs[depth + 1], hs[depth]
+            m = masks[depth].reshape(tgt.shape[0], fan)
+            nbrs = nbr.reshape(tgt.shape[0], fan, -1)
+            cnt = jnp.maximum(jnp.sum(m, axis=1, keepdims=True), 1.0)
+            agg = jnp.sum(jnp.where(m[..., None], nbrs, 0.0), axis=1) / cnt
+            h = dense(lp["w_self"], tgt) + dense(lp["w_nbr"], agg)
+            if li < cfg.n_layers - 1:
+                h = jax.nn.relu(h)
+            new_hs.append(h)
+            new_masks.append(masks[depth + 1])
+        hs, masks = new_hs, new_masks
+    return hs[0]  # [B, n_classes]

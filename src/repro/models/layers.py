@@ -1,0 +1,230 @@
+"""Shared neural-net layers for the architecture zoo (pure JAX, no flax).
+
+Parameters are plain nested dicts of arrays; every layer is a pair of
+``init(key, ...) -> params`` and a pure apply function. Initializers match
+standard practice (trunc-normal fan-in); dtype policy: params fp32 (cast at
+use), activations bf16-able via the ``compute_dtype`` argument of the model.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, d_in: int, d_out: int, *, scale: float | None = None):
+    scale = (1.0 / d_in) ** 0.5 if scale is None else scale
+    return {
+        "w": jax.random.truncated_normal(key, -2, 2, (d_in, d_out), jnp.float32)
+        * scale
+    }
+
+
+def dense(params, x, *, dtype=None):
+    w = params["w"]
+    if dtype is not None:
+        w = w.astype(dtype)
+        x = x.astype(dtype)
+    return x @ w
+
+
+def rmsnorm_init(d: int):
+    return {"scale": jnp.zeros((d,), jnp.float32)}  # (1 + scale) convention
+
+
+def rmsnorm(params, x, *, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps) * (1.0 + params["scale"])
+    return y.astype(x.dtype)
+
+
+def layernorm_init(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(params, x, *, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps) * params["scale"] + params["bias"]
+    return y.astype(x.dtype)
+
+
+def softcap(x, cap: float):
+    """Gemma-2 style tanh logit capping."""
+    return jnp.tanh(x / cap) * cap
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope_freqs(d_head: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, d_head]; positions: broadcastable to [..., S]."""
+    d_head = x.shape[-1]
+    freqs = rope_freqs(d_head, theta)                       # [d/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, d/2]
+    cos = jnp.cos(angles)[..., None, :]                     # [..., S, 1, d/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise (flash-style) attention — pure JAX, O(block) memory.
+# ---------------------------------------------------------------------------
+
+def _attn_block(q, k, v, qpos, kpos, *, scale, causal, window, attn_softcap):
+    """One (q-block, kv-block) tile with running-softmax statistics.
+
+    q: [B, bq, Hq, dh]  k/v: [B, bk, Hkv, dh]; GQA via head grouping.
+    Returns (scores-exp-sum m, l, o) update pieces handled by caller.
+    """
+    B, bq, Hq, dh = q.shape
+    Hkv = k.shape[2]
+    g = Hq // Hkv
+    qg = q.reshape(B, bq, Hkv, g, dh)
+    s = jnp.einsum(
+        "bqhgd,bkhd->bhgqk", qg.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale                                                # [B,Hkv,g,bq,bk]
+    if attn_softcap is not None:
+        s = softcap(s, attn_softcap)
+    mask = jnp.ones((bq, k.shape[1]), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= qpos[:, None] - kpos[None, :] < window
+    mask &= (kpos >= 0)[None, :]  # padding blocks
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    return s
+
+
+def blockwise_attention(
+    q: jax.Array,            # [B, Sq, Hq, dh]
+    k: jax.Array,            # [B, Sk, Hkv, dh]
+    v: jax.Array,            # [B, Sk, Hkv, dh]
+    *,
+    causal: bool = True,
+    window: int | None = None,   # local/sliding width (None = full)
+    q_offset: int | jax.Array = 0,  # absolute position of q[0]
+    block_q: int = 512,
+    block_kv: int = 512,
+    attn_softcap: float | None = None,
+    scale: float | None = None,
+) -> jax.Array:
+    """Memory-efficient attention: scan over q-blocks × kv-blocks with running
+    max/sum (never materializes [Sq, Sk]).
+
+    When ``window`` is static, only ceil((window+block_q)/block_kv)+1 kv
+    blocks are touched per q block (true sub-quadratic compute — this is the
+    gemma2/llama4 local path and the long-context enabler).
+    """
+    B, Sq0, Hq, dh = q.shape
+    Sk0 = k.shape[1]
+    Hkv = k.shape[2]
+    g = Hq // Hkv
+    scale = (dh ** -0.5) if scale is None else scale
+    block_q = min(block_q, Sq0)
+    block_kv = min(block_kv, Sk0)
+    # pad ragged tails; padded keys are masked via kpos = -1
+    pq, pk = (-Sq0) % block_q, (-Sk0) % block_kv
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    Sq, Sk = Sq0 + pq, Sk0 + pk
+    nq, nk = Sq // block_q, Sk // block_kv
+
+    if window is not None:
+        n_kv_blocks = min(nk, (window + block_q) // block_kv + 1)
+    else:
+        n_kv_blocks = nk
+
+    kpos_all = jnp.where(jnp.arange(Sk) < Sk0, jnp.arange(Sk), -1)
+    qpos_all = jnp.arange(Sq) + q_offset
+
+    def q_block_body(qi):
+        qb = jax.lax.dynamic_slice_in_dim(q, qi * block_q, block_q, axis=1)
+        qpos = jax.lax.dynamic_slice_in_dim(qpos_all, qi * block_q, block_q)
+
+        # kv block range: for windowed attention start near the diagonal
+        if window is not None:
+            # first kv position possibly visible to this q block
+            lo = qi * block_q + q_offset - window + 1
+            lo = jnp.clip(lo, 0, Sk - n_kv_blocks * block_kv)
+            k0 = (lo // block_kv).astype(jnp.int32)
+        else:
+            k0 = jnp.asarray(0, jnp.int32)
+
+        def kv_step(carry, j):
+            m, l, o = carry
+            kj = k0 + j
+            kb = jax.lax.dynamic_slice_in_dim(k, kj * block_kv, block_kv, axis=1)
+            vb = jax.lax.dynamic_slice_in_dim(v, kj * block_kv, block_kv, axis=1)
+            kpos = jax.lax.dynamic_slice_in_dim(kpos_all, kj * block_kv, block_kv)
+            s = _attn_block(
+                qb, kb, vb, qpos, kpos, scale=scale, causal=causal,
+                window=window, attn_softcap=attn_softcap,
+            )                                                 # [B,Hkv,g,bq,bk]
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(jnp.isfinite(s), p, 0.0)
+            corr = jnp.where(
+                jnp.isfinite(m), jnp.exp(m - m_safe), jnp.zeros_like(m)
+            )
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p, vb.astype(jnp.float32))
+            o_new = o * corr[..., None] + pv
+            return (m_new, l_new, o_new), None
+
+        m0 = jnp.full((B, Hkv, g, block_q), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, g, block_q), jnp.float32)
+        o0 = jnp.zeros((B, Hkv, g, block_q, dh), jnp.float32)
+        (m, l, o), _ = jax.lax.scan(
+            jax.checkpoint(kv_step), (m0, l0, o0), jnp.arange(n_kv_blocks)
+        )
+        o = o / jnp.maximum(l[..., None], 1e-30)
+        # [B,Hkv,g,bq,dh] → [B,bq,Hq,dh]
+        return jnp.transpose(o, (0, 3, 1, 2, 4)).reshape(B, block_q, Hq, dh)
+
+    out = jax.lax.map(q_block_body, jnp.arange(nq))          # [nq,B,bq,Hq,dh]
+    out = jnp.transpose(out, (1, 0, 2, 3, 4)).reshape(B, Sq, Hq, dh)
+    return out[:, :Sq0].astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,        # [B, 1, Hq, dh]
+    k_cache: jax.Array,  # [B, S, Hkv, dh]
+    v_cache: jax.Array,  # [B, S, Hkv, dh]
+    cache_len: jax.Array,  # i32[B] — valid prefix length per sequence
+    *,
+    window: int | None = None,
+    attn_softcap: float | None = None,
+    scale: float | None = None,
+) -> jax.Array:
+    """Single-token attention against a (possibly windowed) KV cache."""
+    B, S, Hkv, dh = k_cache.shape
+    Hq = q.shape[2]
+    g = Hq // Hkv
+    scale = (dh ** -0.5) if scale is None else scale
+    qg = q.reshape(B, Hkv, g, dh)
+    s = jnp.einsum(
+        "bhgd,bkhd->bhgk", qg.astype(jnp.float32), k_cache.astype(jnp.float32)
+    ) * scale
+    if attn_softcap is not None:
+        s = softcap(s, attn_softcap)
+    kpos = jnp.arange(S)[None, :]                     # [1,S]
+    valid = kpos < cache_len[:, None]
+    if window is not None:
+        valid &= kpos >= (cache_len[:, None] - window)
+    s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, 1, Hq, dh).astype(q.dtype)

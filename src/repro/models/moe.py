@@ -1,0 +1,157 @@
+"""Routed mixture-of-experts FFN — capacity-based scatter dispatch.
+
+Dispatch mechanism: GShard/Switch *semantics* (top-k routing, capacity
+factor, token dropping) but implemented with scatter/gather instead of the
+classic one-hot dispatch einsum. The one-hot einsum costs
+``N·E·C·d`` MXU FLOPs (≈26× the useful expert FLOPs at 4k seq); the scatter
+implementation moves the same bytes (``N·topk·d``) with *zero* matmul
+amplification, so the roofline compute term stays honest and the dominant
+cost is the expert GEMMs themselves (``E·C·d·ff``), exactly
+``capacity_factor×`` the model FLOPs.
+
+Sharding: token/row dim sharded over (pod, data); expert hidden dim ``ff``
+sharded over model (TP inside each expert — every device holds a slice of
+every expert). EP (experts over model) is a config switch explored in the
+§Perf log.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_model: int
+    d_ff: int
+    capacity_factor: float = 1.25
+    n_shared: int = 0          # llama4-style always-on shared expert(s)
+    gated: bool = True         # SwiGLU experts
+    ep_axis: str | None = "data"  # §Perf A2: pin expert buffers to the axis
+                                  # the expert weights shard over, so GSPMD
+                                  # moves TOKENS (a2a) instead of gathering
+                                  # expert weights. None → let GSPMD choose.
+
+
+def _constrain(x, spec):
+    """with_sharding_constraint that degrades to a no-op outside a mesh."""
+    try:
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.PartitionSpec(*spec)
+        )
+    except (ValueError, RuntimeError, TypeError):
+        return x
+
+
+def init_moe(key, cfg: MoEConfig):
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    E, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    n_in = 2 * f if cfg.gated else f
+    p = {
+        "router": dense_init(k1, d, E)["w"],
+        "w_in": jax.random.truncated_normal(k2, -2, 2, (E, d, n_in), jnp.float32)
+        * (1.0 / d) ** 0.5,
+        "w_out": jax.random.truncated_normal(k3, -2, 2, (E, f, d), jnp.float32)
+        * (1.0 / f) ** 0.5,
+    }
+    if cfg.n_shared:
+        p["shared_in"] = (
+            jax.random.truncated_normal(k4, -2, 2, (d, n_in * cfg.n_shared),
+                                        jnp.float32) * (1.0 / d) ** 0.5
+        )
+        p["shared_out"] = (
+            jax.random.truncated_normal(k5, -2, 2, (f * cfg.n_shared, d),
+                                        jnp.float32) * (1.0 / f) ** 0.5
+        )
+    return p
+
+
+def _expert_ffn(x, w_in, w_out, gated: bool, dtype):
+    h = jnp.einsum("ecd,edf->ecf", x, w_in.astype(dtype))
+    if gated:
+        u, g = jnp.split(h, 2, axis=-1)
+        h = u * jax.nn.silu(g)
+    else:
+        h = jax.nn.gelu(h)
+    return jnp.einsum("ecf,efd->ecd", h, w_out.astype(dtype))
+
+
+def moe_ffn(params, x: jax.Array, cfg: MoEConfig) -> tuple[jax.Array, jax.Array]:
+    """x: [..., d] → (y: [..., d], aux_loss scalar).
+
+    Flattens leading dims to N tokens; capacity C = N·top_k·cf / E.
+    Over-capacity tokens are dropped (their residual passes through — the
+    GShard convention).
+    """
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    dtype = x.dtype
+    xf = x.reshape(-1, d)
+    N = xf.shape[0]
+    E, K = cfg.n_experts, cfg.top_k
+    C = max(1, int(N * K * cfg.capacity_factor) // E)
+
+    logits = (xf.astype(jnp.float32) @ params["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                   # [N, E]
+    gate_w, gate_e = jax.lax.top_k(probs, K)                  # [N, K]
+    if K > 1:
+        gate_w = gate_w / jnp.maximum(
+            jnp.sum(gate_w, axis=-1, keepdims=True), 1e-9
+        )
+
+    # load-balancing aux loss (Switch eq. 4)
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(gate_e[:, 0], E), axis=0) / N
+    ) * E if K == 1 else jnp.mean(
+        jnp.sum(jax.nn.one_hot(gate_e, E), axis=(0, 1)) / (N * K)
+    ) * E
+    aux = jnp.sum(me * ce) * E
+
+    # ---- position of each (token, k) within its expert buffer ----
+    flat_e = gate_e.reshape(-1)                               # [N*K]
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)       # [N*K, E]
+    pos_in_e = jnp.cumsum(onehot, axis=0) - onehot            # exclusive count
+    slot = jnp.take_along_axis(pos_in_e, flat_e[:, None], axis=1)[:, 0]
+    keep = slot < C
+
+    # ---- scatter tokens into per-expert buffers [E, C, d] ----
+    xs = jnp.repeat(xf, K, axis=0)                            # [N*K, d]
+    se = jnp.where(keep, flat_e, 0)
+    ss = jnp.where(keep, slot, 0)
+    buf = jnp.zeros((E, C, d), dtype)
+    buf = buf.at[se, ss].add(
+        jnp.where(keep[:, None], xs, 0).astype(dtype)
+    )
+    if cfg.ep_axis:
+        # expert-parallel placement: buffers co-located with the expert
+        # weights' shard axis → the scatter above becomes the token a2a and
+        # the expert GEMMs run with STATIONARY weights (no param all-gather)
+        buf = _constrain(buf, (cfg.ep_axis, None, None))
+
+    y = _expert_ffn(buf, params["w_in"], params["w_out"], cfg.gated, dtype)
+    if cfg.ep_axis:
+        y = _constrain(y, (cfg.ep_axis, None, None))
+
+    # ---- gather back + gate-weighted combine ----
+    out_rows = y[se, ss]                                      # [N*K, d]
+    out_rows = jnp.where(keep[:, None], out_rows, 0)
+    w = gate_w.reshape(-1)[:, None].astype(dtype)
+    combined = jnp.sum((out_rows * w).reshape(N, K, d), axis=1)
+
+    if cfg.n_shared:
+        h = xf.astype(dtype) @ params["shared_in"].astype(dtype)
+        if cfg.gated:
+            u, g = jnp.split(h, 2, axis=-1)
+            h = u * jax.nn.silu(g)
+        else:
+            h = jax.nn.gelu(h)
+        combined = combined + h @ params["shared_out"].astype(dtype)
+
+    return combined.reshape(orig_shape), aux

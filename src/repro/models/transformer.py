@@ -1,0 +1,346 @@
+"""Decoder-only LM family — one config covers all 5 assigned transformers.
+
+Features (per-arch knobs in configs/):
+  GQA (n_kv_heads < n_heads), decoupled d_head, RoPE w/ per-arch theta,
+  qk-norm (qwen3), attention + final logit softcaps (gemma2), alternating
+  local/global layer patterns (gemma2 sliding window, llama4 chunked iRoPE
+  with NoPE-on-global), MoE FFN (phi3.5-moe top-2, llama4-scout top-1 +
+  shared expert), sandwich norms (gemma2), tied embeddings.
+
+Execution model: layers are stacked per *pattern position* and scanned over
+period groups (HLO stays O(period), not O(L)); attention is blockwise
+flash-style (O(block) memory — see layers.py) so 32k prefill and 500k decode
+lower within per-device HBM; the LM head loss is sequence-chunked so
+[B, S, vocab] logits are never materialized.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import moe as moe_mod
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    # attention
+    rope_theta: float = 10_000.0
+    qk_norm: bool = False
+    attn_scale: float | None = None                # None → d_head ** -0.5
+    attn_softcap: float | None = None
+    final_softcap: float | None = None
+    window: int | None = None                      # local attention width
+    layer_pattern: tuple[str, ...] = ("global",)   # period pattern
+    rope_on_global: bool = True                    # False → NoPE on global (iRoPE)
+    sandwich_norm: bool = False                    # gemma2 post-norms
+    embed_scale: bool = False                      # gemma scales by sqrt(d)
+    # ffn
+    moe: moe_mod.MoEConfig | None = None
+    # execution
+    compute_dtype: Any = jnp.bfloat16
+    block_q: int = 512
+    block_kv: int = 512
+    xent_chunk: int = 1024
+    scan_layers: bool = True
+
+    @property
+    def period(self) -> int:
+        return len(self.layer_pattern)
+
+    @property
+    def n_groups(self) -> int:
+        assert self.n_layers % self.period == 0
+        return self.n_layers // self.period
+
+    def n_params(self) -> int:
+        """Total parameter count (for MODEL_FLOPS = 6·N·D roofline)."""
+        d, f, H, Hkv, dh = (
+            self.d_model, self.d_ff, self.n_heads, self.n_kv_heads, self.d_head
+        )
+        attn = d * H * dh + 2 * d * Hkv * dh + H * dh * d
+        if self.moe is not None:
+            m = self.moe
+            n_in = 2 * f if m.gated else f
+            ffn = d * m.n_experts + m.n_experts * (d * n_in + f * d)
+            if m.n_shared:
+                ffn += d * n_in * m.n_shared + f * m.n_shared * d
+        else:
+            ffn = 3 * d * f  # SwiGLU
+        return self.n_layers * (attn + ffn) + self.vocab * d
+
+    def n_active_params(self) -> int:
+        """Activated parameters per token (MoE top-k) — 6·N_active·D."""
+        if self.moe is None:
+            return self.n_params()
+        d, f = self.d_model, self.d_ff
+        m = self.moe
+        H, Hkv, dh = self.n_heads, self.n_kv_heads, self.d_head
+        attn = d * H * dh + 2 * d * Hkv * dh + H * dh * d
+        n_in = 2 * f if m.gated else f
+        ffn = d * m.n_experts + m.top_k * (d * n_in + f * d)
+        if m.n_shared:
+            ffn += d * n_in * m.n_shared + f * m.n_shared * d
+        return self.n_layers * (attn + ffn) + self.vocab * d
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+def _init_layer(key, cfg: TransformerConfig):
+    ks = jax.random.split(key, 8)
+    d, H, Hkv, dh, f = (
+        cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head, cfg.d_ff
+    )
+    p = {
+        "ln_attn": L.rmsnorm_init(d),
+        "wq": L.dense_init(ks[0], d, H * dh),
+        "wk": L.dense_init(ks[1], d, Hkv * dh),
+        "wv": L.dense_init(ks[2], d, Hkv * dh),
+        "wo": L.dense_init(ks[3], H * dh, d),
+        "ln_ffn": L.rmsnorm_init(d),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = L.rmsnorm_init(dh)
+        p["k_norm"] = L.rmsnorm_init(dh)
+    if cfg.sandwich_norm:
+        p["ln_attn_post"] = L.rmsnorm_init(d)
+        p["ln_ffn_post"] = L.rmsnorm_init(d)
+    if cfg.moe is not None:
+        p["moe"] = moe_mod.init_moe(ks[4], cfg.moe)
+    else:
+        p["w_gate"] = L.dense_init(ks[4], d, f)
+        p["w_up"] = L.dense_init(ks[5], d, f)
+        p["w_down"] = L.dense_init(ks[6], f, d)
+    return p
+
+
+def init_params(key, cfg: TransformerConfig):
+    ke, kl, kf = jax.random.split(key, 3)
+    # stack layers per pattern position: [n_groups, ...] pytrees
+    def stack_for_position(p_idx):
+        keys = jax.random.split(jax.random.fold_in(kl, p_idx), cfg.n_groups)
+        return jax.vmap(lambda k: _init_layer(k, cfg))(keys)
+
+    return {
+        "embed": jax.random.truncated_normal(
+            ke, -2, 2, (cfg.vocab, cfg.d_model), jnp.float32
+        ) * (1.0 / cfg.d_model) ** 0.5,
+        "positions": {
+            f"p{i}": stack_for_position(i) for i in range(cfg.period)
+        },
+        "ln_final": L.rmsnorm_init(cfg.d_model),
+    }
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _attention(p, h, cfg: TransformerConfig, kind: str, *, q_offset=0,
+               kv_cache=None, cache_len=None):
+    """Self-attention sublayer. Returns (out, (k, v)) — k/v for cache build."""
+    B, S, d = h.shape
+    H, Hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    dt = cfg.compute_dtype
+    q = L.dense(p["wq"], h, dtype=dt).reshape(B, S, H, dh)
+    k = L.dense(p["wk"], h, dtype=dt).reshape(B, S, Hkv, dh)
+    v = L.dense(p["wv"], h, dtype=dt).reshape(B, S, Hkv, dh)
+    if cfg.qk_norm:
+        q = L.rmsnorm(p["q_norm"], q)
+        k = L.rmsnorm(p["k_norm"], k)
+    use_rope = cfg.rope_on_global or kind == "local"
+    if use_rope:
+        if kv_cache is not None:
+            pos = cache_len[:, None] + jnp.arange(S)[None, :]  # [B, S]
+        else:
+            pos = jnp.arange(S)[None, :] + q_offset
+        q = L.apply_rope(q, pos, cfg.rope_theta)
+        k = L.apply_rope(k, pos, cfg.rope_theta)
+
+    window = cfg.window if kind == "local" else None
+    if kv_cache is None:
+        o = L.blockwise_attention(
+            q, k, v, causal=True, window=window, q_offset=q_offset,
+            block_q=cfg.block_q, block_kv=cfg.block_kv,
+            attn_softcap=cfg.attn_softcap, scale=cfg.attn_scale,
+        )
+    else:
+        kc, vc = kv_cache  # [B, Smax, Hkv, dh]
+        b_idx = jnp.arange(B)
+        kc = kc.at[b_idx, cache_len].set(k[:, 0])
+        vc = vc.at[b_idx, cache_len].set(v[:, 0])
+        o = L.decode_attention(
+            q, kc, vc, cache_len + 1, window=window,
+            attn_softcap=cfg.attn_softcap, scale=cfg.attn_scale,
+        )
+        k, v = kc, vc
+    o = o.reshape(B, S, H * dh)
+    return L.dense(p["wo"], o, dtype=dt), (k, v)
+
+
+def _ffn(p, h, cfg: TransformerConfig):
+    dt = cfg.compute_dtype
+    if cfg.moe is not None:
+        return moe_mod.moe_ffn(p["moe"], h.astype(dt), cfg.moe)
+    g = L.dense(p["w_gate"], h, dtype=dt)
+    u = L.dense(p["w_up"], h, dtype=dt)
+    return L.dense(p["w_down"], jax.nn.silu(g) * u, dtype=dt), jnp.float32(0)
+
+
+def _block(p, h, cfg: TransformerConfig, kind: str, **kw):
+    a_in = L.rmsnorm(p["ln_attn"], h)
+    a_out, kv = _attention(p, a_in, cfg, kind, **kw)
+    if cfg.sandwich_norm:
+        a_out = L.rmsnorm(p["ln_attn_post"], a_out)
+    h = h + a_out
+    f_in = L.rmsnorm(p["ln_ffn"], h)
+    f_out, aux = _ffn(p, f_in, cfg)
+    if cfg.sandwich_norm:
+        f_out = L.rmsnorm(p["ln_ffn_post"], f_out)
+    return h + f_out, kv, aux
+
+
+# ---------------------------------------------------------------------------
+# full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def forward(params, tokens: jax.Array, cfg: TransformerConfig,
+            *, return_cache_pad: int = 0):
+    """tokens i32[B, S] → (hidden f32[B, S, d], aux_loss, cache | None).
+
+    ``return_cache_pad > 0`` allocates decode KV caches of that length and
+    fills the first S positions (prefill path).
+    """
+    B, S = tokens.shape
+    dt = cfg.compute_dtype
+    h = params["embed"][tokens].astype(dt)
+    if cfg.embed_scale:
+        h = h * jnp.asarray(cfg.d_model ** 0.5, dt)
+
+    def group_body(carry, group_params):
+        h, aux = carry
+        kvs = []
+        for i, kind in enumerate(cfg.layer_pattern):
+            h, kv, a = _block(group_params[f"p{i}"], h, cfg, kind)
+            aux = aux + a
+            kvs.append(kv)
+        return (h, aux), (kvs if return_cache_pad else None)
+
+    groups = params["positions"]
+    if cfg.scan_layers:
+        (h, aux), kv_stacked = jax.lax.scan(
+            group_body, (h, jnp.float32(0)), groups
+        )
+    else:
+        aux = jnp.float32(0)
+        kv_all = []
+        for g in range(cfg.n_groups):
+            gp = jax.tree.map(lambda x: x[g], groups)
+            (h, aux), kvs = group_body((h, aux), gp)
+            kv_all.append(kvs)
+        kv_stacked = kv_all
+
+    h = L.rmsnorm(params["ln_final"], h)
+
+    cache = None
+    if return_cache_pad:
+        pad = return_cache_pad
+
+        def to_cache(x):  # [G, B, S, Hkv, dh] → padded [G, B, pad, Hkv, dh]
+            return jnp.pad(x, ((0, 0), (0, 0), (0, pad - S), (0, 0), (0, 0)))
+
+        cache = {
+            "kv": jax.tree.map(to_cache, kv_stacked),
+            "len": jnp.full((B,), S, jnp.int32),
+        }
+    return h, aux, cache
+
+
+def logits_from_hidden(params, h: jax.Array, cfg: TransformerConfig):
+    logit = h.astype(jnp.float32) @ params["embed"].T.astype(jnp.float32)
+    if cfg.final_softcap is not None:
+        logit = L.softcap(logit, cfg.final_softcap)
+    return logit
+
+
+def chunked_xent(params, h, labels, mask, cfg: TransformerConfig):
+    """Sequence-chunked LM cross-entropy — never materializes [B,S,V]."""
+    B, S, d = h.shape
+    c = min(cfg.xent_chunk, S)
+    assert S % c == 0
+    hc = h.reshape(B, S // c, c, d).swapaxes(0, 1)        # [n, B, c, d]
+    lc = labels.reshape(B, S // c, c).swapaxes(0, 1)
+    mc = mask.reshape(B, S // c, c).swapaxes(0, 1)
+
+    def chunk_loss(carry, xs):
+        hh, ll, mm = xs
+        logits = logits_from_hidden(params, hh, cfg)      # [B, c, V]
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ll[..., None], axis=-1)[..., 0]
+        nll = jnp.where(mm, lse - gold, 0.0)
+        return carry + jnp.sum(nll), None
+
+    total, _ = jax.lax.scan(
+        jax.checkpoint(chunk_loss), jnp.float32(0), (hc, lc, mc)
+    )
+    return total / jnp.maximum(jnp.sum(mask), 1)
+
+
+# ---------------------------------------------------------------------------
+# decode (serve_step)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: TransformerConfig, batch: int, max_len: int):
+    """Decode KV cache pytree (used as ShapeDtypeStruct input in dry-runs)."""
+    shape = (cfg.n_groups, batch, max_len, cfg.n_kv_heads, cfg.d_head)
+    return {
+        "kv": [
+            (jnp.zeros(shape, cfg.compute_dtype), jnp.zeros(shape, cfg.compute_dtype))
+            for _ in range(cfg.period)
+        ],
+        "len": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def decode_step(params, cache, tokens: jax.Array, cfg: TransformerConfig):
+    """One-token decode: tokens i32[B, 1] → (logits f32[B, V], new cache)."""
+    B = tokens.shape[0]
+    dt = cfg.compute_dtype
+    h = params["embed"][tokens].astype(dt)
+    if cfg.embed_scale:
+        h = h * jnp.asarray(cfg.d_model ** 0.5, dt)
+    cache_len = cache["len"]
+
+    def group_body(h, xs):
+        group_params, kv_group = xs
+        new_kvs = []
+        for i, kind in enumerate(cfg.layer_pattern):
+            kv = kv_group[i]
+            hh, new_kv, _ = _block(
+                group_params[f"p{i}"], h, cfg, kind,
+                kv_cache=kv, cache_len=cache_len,
+            )
+            h = hh
+            new_kvs.append(new_kv)
+        return h, new_kvs
+
+    h, new_kv = jax.lax.scan(
+        group_body, h, (params["positions"], cache["kv"])
+    )
+    h = L.rmsnorm(params["ln_final"], h)
+    logits = logits_from_hidden(params, h[:, 0], cfg)
+    return logits, {"kv": new_kv, "len": cache_len + 1}

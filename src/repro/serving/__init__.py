@@ -1,0 +1,3 @@
+from repro.serving.batcher import BatchedServer, ServeConfig
+
+__all__ = ["BatchedServer", "ServeConfig"]

@@ -1,0 +1,100 @@
+"""Request batching + quorum degradation — the online serving front-end.
+
+Two production behaviours the 1000-node story needs (DESIGN.md §4):
+
+  · **adaptive batching** — requests accumulate until ``max_batch`` or
+    ``max_wait_s``; the device step always runs at a pad-stable shape so
+    one compiled program serves every batch size (no recompiles at p99).
+  · **quorum degradation** — the fan-out/merge query only *needs* all
+    shards for exact results; with ``quorum < 1.0`` the merge accepts the
+    first ⌈quorum·P⌉ shard results and degrades recall by ≤ (1-quorum)
+    instead of stalling on a straggler. Simulated here by masking shard
+    contributions (the merge math is identical to dropping late arrivals).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable
+
+import numpy as np
+
+from repro.core.graph import NULL
+from repro.core.maintenance import IPGMIndex
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_batch: int = 64
+    max_wait_s: float = 0.005
+    k: int = 10
+    quorum: float = 1.0        # fraction of shards required (sharded mode)
+
+
+class BatchedServer:
+    """Pad-stable batched front-end over an :class:`IPGMIndex`."""
+
+    def __init__(self, index: IPGMIndex, cfg: ServeConfig = ServeConfig()):
+        self.index = index
+        self.cfg = cfg
+        self._queue: deque[tuple[int, np.ndarray]] = deque()
+        self._next_id = 0
+        self.stats = {"batches": 0, "requests": 0, "pad_waste": 0.0}
+
+    def submit(self, query: np.ndarray) -> int:
+        rid = self._next_id
+        self._next_id += 1
+        self._queue.append((rid, np.asarray(query, np.float32)))
+        return rid
+
+    def _drain(self) -> list[tuple[int, np.ndarray]]:
+        out = []
+        t0 = time.perf_counter()
+        while (len(out) < self.cfg.max_batch
+               and (self._queue
+                    or time.perf_counter() - t0 < self.cfg.max_wait_s)):
+            if self._queue:
+                out.append(self._queue.popleft())
+            else:
+                break
+        return out
+
+    def step(self) -> dict[int, tuple[np.ndarray, np.ndarray]]:
+        """Serve one batch; returns {request_id: (ids, scores)}."""
+        batch = self._drain()
+        if not batch:
+            return {}
+        B = self.cfg.max_batch
+        dim = batch[0][1].shape[-1]
+        padded = np.zeros((B, dim), np.float32)
+        for i, (_, q) in enumerate(batch):
+            padded[i] = q
+        ids, scores = self.index.query(padded, k=self.cfg.k)
+        ids, scores = np.asarray(ids), np.asarray(scores)
+        self.stats["batches"] += 1
+        self.stats["requests"] += len(batch)
+        self.stats["pad_waste"] += 1.0 - len(batch) / B
+        return {rid: (ids[i], scores[i]) for i, (rid, _) in enumerate(batch)}
+
+
+def quorum_merge(
+    shard_ids: np.ndarray,     # i32[P, B, k] per-shard top-k (global ids)
+    shard_scores: np.ndarray,  # f32[P, B, k]
+    arrived: np.ndarray,       # bool[P] which shards answered in time
+    k: int,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Merge only the arrived shards — the straggler-tolerant fan-in.
+
+    Recall loss is bounded by the fraction of ground-truth neighbors living
+    on the missing shards (≤ (P-|arrived|)/P in expectation under hashing).
+    """
+    P, B, kk = shard_ids.shape
+    s = np.where(arrived[:, None, None], shard_scores, -np.inf)
+    flat_s = np.transpose(s, (1, 0, 2)).reshape(B, P * kk)
+    flat_i = np.transpose(shard_ids, (1, 0, 2)).reshape(B, P * kk)
+    order = np.argsort(-flat_s, axis=1)[:, :k]
+    top_s = np.take_along_axis(flat_s, order, axis=1)
+    top_i = np.take_along_axis(flat_i, order, axis=1)
+    top_i = np.where(np.isfinite(top_s), top_i, NULL)
+    return top_i, top_s

@@ -1,0 +1,165 @@
+"""Per-family train/serve step functions — the units the dry-run lowers.
+
+Every step is a pure function (params, opt_state, batch) → (params,
+opt_state, metrics) or (state..., outputs) suitable for ``jax.jit`` with
+explicit in/out shardings. Loss functions per family:
+
+  lm     : sequence-chunked causal cross-entropy (+ MoE aux loss)
+  gnn    : masked node cross-entropy (classification) or graph MSE (dimenet)
+  recsys : BCE on CTR logits
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import dlrm as dlrm_mod
+from repro.models import transformer as tfm
+from repro.models.gnn import dimenet as dimenet_mod
+from repro.models.gnn import gat as gat_mod
+from repro.models.gnn import gatedgcn as ggcn_mod
+from repro.models.gnn import graphsage as sage_mod
+from repro.train.optimizer import AdamWConfig, adamw_update
+
+AUX_WEIGHT = 0.01
+
+
+# ---------------------------------------------------------------------------
+# LM family
+# ---------------------------------------------------------------------------
+
+def _cast_params(params, dtype):
+    """bf16 compute cast at the step boundary so FSDP all-gathers (and the
+    matching grad reduce-scatters) move 2-byte payloads instead of fp32 —
+    §Perf hillclimb A1. Norm scales stay fp32 (cheap + precision-sensitive)."""
+    def cast(p):
+        if p.dtype == jnp.float32 and p.ndim >= 2:
+            return p.astype(dtype)
+        return p
+    return jax.tree.map(cast, params)
+
+
+def lm_loss(params, batch, cfg: tfm.TransformerConfig):
+    h, aux, _ = tfm.forward(params, batch["tokens"], cfg)
+    loss = tfm.chunked_xent(params, h, batch["labels"], batch["mask"], cfg)
+    return loss + AUX_WEIGHT * aux, {"xent": loss, "aux": aux}
+
+
+def make_lm_train_step(
+    cfg: tfm.TransformerConfig, opt: AdamWConfig, *, cast_bf16: bool = True
+) -> Callable:
+    def step(params, opt_state, batch):
+        def loss_fn(p):
+            pc = _cast_params(p, cfg.compute_dtype) if cast_bf16 else p
+            return lm_loss(pc, batch, cfg)
+        (loss, parts), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        params, opt_state, om = adamw_update(params, grads, opt_state, opt)
+        return params, opt_state, {"loss": loss, **parts, **om}
+    return step
+
+
+def make_lm_prefill_step(cfg: tfm.TransformerConfig, pad_to: int) -> Callable:
+    def step(params, batch):
+        h, _, cache = tfm.forward(
+            params, batch["tokens"], cfg, return_cache_pad=pad_to
+        )
+        logits = tfm.logits_from_hidden(params, h[:, -1], cfg)
+        return logits, cache
+    return step
+
+
+def make_lm_decode_step(cfg: tfm.TransformerConfig) -> Callable:
+    def step(params, cache, batch):
+        return tfm.decode_step(params, cache, batch["tokens"], cfg)
+    return step
+
+
+# ---------------------------------------------------------------------------
+# GNN family
+# ---------------------------------------------------------------------------
+
+def _node_xent(logits, labels, mask):
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    nll = jnp.where(mask, lse - gold, 0.0)
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1)
+
+
+def gnn_loss(params, batch, arch: str, cfg):
+    if arch == "graphsage" and "blocks" in batch:
+        logits = sage_mod.forward_sampled(params, batch["blocks"], cfg)
+        return _node_xent(logits, batch["block_labels"],
+                          batch["block_label_mask"]), {}
+    g = batch["graph"]
+    if arch == "graphsage":
+        logits = sage_mod.forward(params, g, cfg)
+    elif arch == "gat":
+        logits = gat_mod.forward(params, g, cfg)
+    elif arch == "gatedgcn":
+        logits = ggcn_mod.forward(params, g, cfg)
+    elif arch == "dimenet":
+        pred = dimenet_mod.forward(params, g, batch["triplets"], cfg)
+        return jnp.mean(jnp.square(pred - g.targets)), {}
+    else:
+        raise ValueError(arch)
+    return _node_xent(logits, g.labels, g.label_mask & g.node_mask), {}
+
+
+def make_gnn_train_step(arch: str, cfg, opt: AdamWConfig) -> Callable:
+    def step(params, opt_state, batch):
+        (loss, parts), grads = jax.value_and_grad(
+            gnn_loss, has_aux=True)(params, batch, arch, cfg)
+        params, opt_state, om = adamw_update(params, grads, opt_state, opt)
+        return params, opt_state, {"loss": loss, **parts, **om}
+    return step
+
+
+def make_gnn_forward(arch: str, cfg) -> Callable:
+    fwd = {
+        "graphsage": sage_mod.forward,
+        "gat": gat_mod.forward,
+        "gatedgcn": ggcn_mod.forward,
+    }
+    if arch == "dimenet":
+        def step(params, batch):
+            return dimenet_mod.forward(params, batch["graph"],
+                                       batch["triplets"], cfg)
+        return step
+
+    def step(params, batch):
+        return fwd[arch](params, batch["graph"], cfg)
+    return step
+
+
+# ---------------------------------------------------------------------------
+# RecSys family
+# ---------------------------------------------------------------------------
+
+def make_dlrm_train_step(cfg: dlrm_mod.DLRMConfig, opt: AdamWConfig) -> Callable:
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(dlrm_mod.bce_loss)(params, batch, cfg)
+        params, opt_state, om = adamw_update(params, grads, opt_state, opt)
+        return params, opt_state, {"loss": loss, **om}
+    return step
+
+
+def make_dlrm_serve_step(cfg: dlrm_mod.DLRMConfig) -> Callable:
+    def step(params, batch):
+        return jax.nn.sigmoid(dlrm_mod.forward(params, batch, cfg))
+    return step
+
+
+def make_dlrm_retrieval_step(cfg: dlrm_mod.DLRMConfig, k: int = 100) -> Callable:
+    def step(params, batch):
+        # bottom-MLP the query's dense features → query embedding; score the
+        # candidate store (use_pallas=False keeps the dry-run XLA-pure; the
+        # serving benchmark flips it on)
+        q = dlrm_mod._mlp(params["bot"], batch["dense"], final_act=True)
+        return dlrm_mod.retrieval_scores(
+            q, batch["candidates"], k, use_pallas=False
+        )
+    return step

@@ -1,0 +1,63 @@
+"""Test helpers: invariant checkers + tiny index builders."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import IPGMIndex, IndexParams, SearchParams
+from repro.core.graph import NULL
+
+
+def small_params(capacity=256, dim=8, d_out=6, pool=16) -> IndexParams:
+    return IndexParams(
+        capacity=capacity, dim=dim, d_out=d_out,
+        search=SearchParams(pool_size=pool, max_steps=3 * pool, num_starts=2),
+    )
+
+
+def build_index(X, strategy="global", capacity=None, **kw) -> IPGMIndex:
+    cap = capacity if capacity is not None else X.shape[0] + 64
+    p = small_params(capacity=cap, dim=X.shape[1], **kw)
+    idx = IPGMIndex(p, strategy=strategy, seed=0)
+    idx.insert(X)
+    return idx
+
+
+def check_invariants(state) -> list[str]:
+    """Returns a list of violated invariants (empty = healthy)."""
+    adj = np.asarray(state.adj)
+    radj = np.asarray(state.radj)
+    alive = np.asarray(state.alive)
+    present = np.asarray(state.present)
+    errors = []
+
+    # I3: alive ⇒ present
+    if (alive & ~present).any():
+        errors.append("alive slot not present")
+
+    cap = adj.shape[0]
+    for u in range(cap):
+        row = adj[u]
+        vals = row[row != NULL]
+        # I4: no dups / self-edges
+        if len(set(vals.tolist())) != len(vals):
+            errors.append(f"dup out-edges at {u}")
+        if (vals == u).any():
+            errors.append(f"self-edge at {u}")
+        if not present[u] and len(vals):
+            errors.append(f"edges from non-present {u}")
+        for v in vals:
+            # I2: edges point at present slots
+            if not present[v]:
+                errors.append(f"dangling edge {u}->{v}")
+            # I1: reverse entry exists
+            if u not in radj[v]:
+                errors.append(f"missing reverse {u}->{v}")
+    for v in range(cap):
+        row = radj[v]
+        vals = row[row != NULL]
+        if len(set(vals.tolist())) != len(vals):
+            errors.append(f"dup in-edges at {v}")
+        for u in vals:
+            if v not in adj[u]:
+                errors.append(f"stale reverse {u}->{v}")
+    return errors

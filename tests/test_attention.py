@@ -1,0 +1,119 @@
+"""Blockwise (flash-style) attention vs a naive softmax reference —
+the most numerics-sensitive layer in the zoo."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.layers import (
+    apply_rope,
+    blockwise_attention,
+    decode_attention,
+    softcap,
+)
+
+
+def naive_attention(q, k, v, *, causal, window, attn_softcap, scale=None):
+    B, Sq, Hq, dh = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    scale = dh ** -0.5 if scale is None else scale
+    qg = q.reshape(B, Sq, Hkv, g, dh)
+    s = np.einsum("bqhgd,bkhd->bhgqk", np.asarray(qg, np.float32),
+                  np.asarray(k, np.float32)) * scale
+    if attn_softcap is not None:
+        s = np.tanh(s / attn_softcap) * attn_softcap
+    qpos = np.arange(Sq)[:, None]
+    kpos = np.arange(Sk)[None, :]
+    mask = np.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= qpos - kpos < window
+    s = np.where(mask[None, None, None], s, -np.inf)
+    s = s - s.max(-1, keepdims=True)
+    p = np.exp(s)
+    p = p / np.maximum(p.sum(-1, keepdims=True), 1e-30)
+    o = np.einsum("bhgqk,bkhd->bhgqd", p, np.asarray(v, np.float32))
+    return np.transpose(o, (0, 3, 1, 2, 4)).reshape(B, Sq, Hq, dh)
+
+
+CASES = [
+    dict(causal=True, window=None, attn_softcap=None),
+    dict(causal=True, window=8, attn_softcap=None),
+    dict(causal=True, window=16, attn_softcap=50.0),
+    dict(causal=False, window=None, attn_softcap=None),
+]
+
+
+@pytest.mark.parametrize("case", CASES)
+@pytest.mark.parametrize("shape", [(2, 32, 4, 2, 16), (1, 40, 6, 6, 8)])
+def test_blockwise_matches_naive(case, shape):
+    B, S, Hq, Hkv, dh = shape
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(B, S, Hq, dh)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(B, S, Hkv, dh)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(B, S, Hkv, dh)).astype(np.float32))
+    got = blockwise_attention(q, k, v, block_q=8, block_kv=8, **case)
+    want = naive_attention(q, k, v, **case)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-4, atol=2e-4)
+
+
+def test_blockwise_grad_finite():
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.normal(size=(1, 16, 4, 8)).astype(np.float32))
+    kv = jnp.asarray(rng.normal(size=(1, 16, 2, 8)).astype(np.float32))
+
+    def loss(q, k, v):
+        return jnp.sum(blockwise_attention(q, k, v, block_q=8, block_kv=8))
+
+    gq, gk, gv = jax.grad(loss, argnums=(0, 1, 2))(q, kv, kv)
+    for g in (gq, gk, gv):
+        assert bool(jnp.all(jnp.isfinite(g)))
+        assert float(jnp.sum(jnp.abs(g))) > 0
+
+
+def test_decode_matches_last_row_of_full():
+    """decode_attention(q_last, cache) == last row of full attention."""
+    rng = np.random.default_rng(2)
+    B, S, Hq, Hkv, dh = 2, 24, 4, 2, 8
+    q = jnp.asarray(rng.normal(size=(B, S, Hq, dh)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(B, S, Hkv, dh)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(B, S, Hkv, dh)).astype(np.float32))
+    full = blockwise_attention(q, k, v, causal=True, block_q=8, block_kv=8)
+    dec = decode_attention(q[:, -1:], k, v, jnp.full((B,), S, jnp.int32))
+    np.testing.assert_allclose(np.asarray(dec[:, 0]), np.asarray(full[:, -1]),
+                               rtol=2e-4, atol=2e-4)
+    # windowed decode
+    dec_w = decode_attention(q[:, -1:], k, v, jnp.full((B,), S, jnp.int32),
+                             window=6)
+    full_w = blockwise_attention(q, k, v, causal=True, window=6,
+                                 block_q=8, block_kv=8)
+    np.testing.assert_allclose(np.asarray(dec_w[:, 0]),
+                               np.asarray(full_w[:, -1]), rtol=2e-4, atol=2e-4)
+
+
+def test_rope_properties():
+    """RoPE preserves norms and is relative: <R(p)q, R(p+δ)k> depends on δ."""
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(1, 8, 2, 16)).astype(np.float32))
+    pos = jnp.arange(8)[None, :]
+    y = apply_rope(x, pos, 10_000.0)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1), rtol=1e-5)
+    # relativity: dot of rotated pairs at equal offset is equal
+    q = jnp.asarray(rng.normal(size=(1, 1, 1, 16)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(1, 1, 1, 16)).astype(np.float32))
+    def dot_at(pq, pk):
+        qq = apply_rope(q, jnp.asarray([[pq]]), 10_000.0)
+        kk = apply_rope(k, jnp.asarray([[pk]]), 10_000.0)
+        return float(jnp.sum(qq * kk))
+    assert abs(dot_at(3, 5) - dot_at(10, 12)) < 1e-3
+
+
+def test_softcap_bounds():
+    x = jnp.asarray([-1e6, -3.0, 0.0, 3.0, 1e6])
+    y = softcap(x, 30.0)
+    assert float(jnp.max(jnp.abs(y))) <= 30.0
+    np.testing.assert_allclose(float(y[2]), 0.0, atol=1e-7)

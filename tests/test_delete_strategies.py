@@ -1,0 +1,85 @@
+"""DELETE-UPDATE-EDGES semantics per strategy (Alg 4–6)."""
+import numpy as np
+import pytest
+
+from helpers import build_index, check_invariants
+from repro.core.graph import NULL
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(0)
+    return rng.normal(size=(240, 12)).astype(np.float32), rng
+
+
+def _fresh(data, strategy):
+    X, _ = data
+    return build_index(X.copy(), strategy=strategy, capacity=320, d_out=8)
+
+
+def test_pure_removes_all_incident_edges(data):
+    idx = _fresh(data, "pure")
+    dele = np.arange(0, 60)
+    idx.delete(dele)
+    adj = np.asarray(idx.state.adj)
+    assert not np.isin(adj, dele).any()
+    assert not check_invariants(idx.state)
+
+
+def test_local_compensates_in_neighbors(data):
+    X, rng = data
+    pure = _fresh(data, "pure")
+    local = _fresh(data, "local")
+    dele = rng.choice(240, size=60, replace=False)
+    pure.delete(dele)
+    local.delete(dele)
+    deg_pure = pure.stats()["avg_out_degree"]
+    deg_local = local.stats()["avg_out_degree"]
+    assert deg_local >= deg_pure, (
+        "LOCAL must splice compensation edges that PURE drops"
+    )
+    assert not check_invariants(local.state)
+
+
+def test_global_reconnects_with_fresh_candidates(data):
+    X, rng = data
+    idx = _fresh(data, "global")
+    dele = rng.choice(240, size=60, replace=False)
+    # record an in-neighbor of a deleted vertex
+    radj = np.asarray(idx.state.radj)
+    target = int(dele[0])
+    in_nbrs = radj[target][radj[target] != NULL]
+    in_nbrs = [u for u in in_nbrs if u not in dele]
+    idx.delete(dele)
+    assert not check_invariants(idx.state)
+    adj = np.asarray(idx.state.adj)
+    alive = np.asarray(idx.state.alive)
+    for u in in_nbrs:
+        row = adj[u][adj[u] != NULL]
+        assert len(row) > 0, "repaired vertex must have edges"
+        assert alive[row].all()
+
+
+def test_strategies_preserve_recall_after_churn(data):
+    """After delete+insert churn every repair strategy keeps usable recall."""
+    X, rng = data
+    Q = rng.normal(size=(48, 12)).astype(np.float32)
+    for strategy in ("local", "global"):
+        idx = _fresh(data, strategy)
+        for _ in range(2):
+            alive_ids = np.flatnonzero(np.asarray(idx.state.alive))
+            idx.delete(rng.choice(alive_ids, size=40, replace=False))
+            idx.insert(rng.normal(size=(40, 12)).astype(np.float32))
+        r = idx.recall(Q, k=10)
+        assert r > 0.55, f"{strategy}: recall collapsed to {r}"
+
+
+def test_delete_nonexistent_is_noop(data):
+    idx = _fresh(data, "global")
+    before = idx.stats()
+    idx.delete(np.asarray([300, 301]))  # never-inserted slots
+    idx.delete(np.asarray([5]))
+    idx.delete(np.asarray([5]))         # double delete
+    after = idx.stats()
+    assert after["n_alive"] == before["n_alive"] - 1
+    assert not check_invariants(idx.state)

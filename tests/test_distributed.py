@@ -1,0 +1,87 @@
+"""Distributed sharded index — runs in a subprocess with 8 fake devices
+(XLA device count is locked at first jax init, so the multi-device tests
+must not share this process)."""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+SCRIPT = r"""
+import json
+import numpy as np, jax, jax.numpy as jnp
+from repro.distributed.ann import (DistParams, init_sharded_state,
+                                   make_query_step, make_insert_step,
+                                   make_delete_step)
+from repro.core.params import IndexParams, SearchParams
+
+out = {}
+mesh = jax.make_mesh((4, 2), ('data', 'model'))
+ip = IndexParams(capacity=64, dim=16, d_out=8,
+                 search=SearchParams(pool_size=16, max_steps=32, num_starts=2))
+dp = DistParams(index=ip)
+state = init_sharded_state(dp, mesh)
+rng = np.random.default_rng(0)
+X = rng.normal(size=(200, 16)).astype(np.float32)
+route = np.arange(200).astype(np.int32)
+with jax.set_mesh(mesh):
+    st, gids = make_insert_step(dp, mesh)(state, jnp.asarray(X),
+                                          jnp.asarray(route),
+                                          jax.random.PRNGKey(0))
+    g = np.asarray(gids)
+    out['n_inserted'] = int((g >= 0).sum())
+    out['gids_unique'] = len(set(g.tolist())) == 200
+
+    Q = jnp.asarray(rng.normal(size=(32, 16)).astype(np.float32))
+    ids, scores = make_query_step(dp, mesh)(st, Q, jax.random.PRNGKey(1))
+    allv = np.asarray(jax.device_get(st.vectors)).reshape(-1, 16)
+    alive = np.asarray(jax.device_get(st.alive)).reshape(-1)
+    d2 = ((allv[None] - np.asarray(Q)[:, None])**2).sum(-1)
+    d2[:, ~alive] = np.inf
+    true10 = np.argsort(d2, 1)[:, :10]
+    found = np.asarray(ids)[:, :10]
+    out['recall'] = float(np.mean([
+        len(set(found[i]) & set(true10[i])) / 10 for i in range(32)
+    ]))
+
+    dels = jnp.asarray(g[:50])
+    st2 = make_delete_step(dp, mesh, 'global')(st, dels, jax.random.PRNGKey(2))
+    out['alive_after_delete'] = int(np.asarray(jax.device_get(st2.alive)).sum())
+
+    # multi-pod replica mesh
+    mesh3 = jax.make_mesh((2, 2, 2), ('pod', 'data', 'model'))
+    dp3 = DistParams(index=ip, pod_axis='pod')
+with jax.set_mesh(mesh3):
+    st3 = init_sharded_state(dp3, mesh3)
+    st3, gids3 = make_insert_step(dp3, mesh3)(st3, jnp.asarray(X[:80]),
+                                              jnp.asarray(route[:80]),
+                                              jax.random.PRNGKey(0))
+    ids3, _ = make_query_step(dp3, mesh3)(st3, Q[:8], jax.random.PRNGKey(1))
+    out['multipod_inserted'] = int((np.asarray(gids3) >= 0).sum())
+    out['multipod_results_valid'] = bool((np.asarray(ids3)[:, 0] >= 0).all())
+
+print('RESULT ' + json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_sharded_index_8dev():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = str(Path(__file__).resolve().parents[1] / "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", SCRIPT], env=env, capture_output=True,
+        text=True, timeout=540,
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [ln for ln in proc.stdout.splitlines() if ln.startswith("RESULT ")]
+    assert line, proc.stdout
+    out = json.loads(line[-1][len("RESULT "):])
+    assert out["n_inserted"] == 200
+    assert out["gids_unique"]
+    assert out["recall"] > 0.9
+    assert out["alive_after_delete"] == 150
+    assert out["multipod_inserted"] == 80
+    assert out["multipod_results_valid"]

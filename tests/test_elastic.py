@@ -1,0 +1,67 @@
+"""Elastic re-shard: shrink 4 shards → 3, recall survives, ids remap."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import IndexParams, SearchParams
+from repro.core import search as search_mod
+from repro.core.graph import NULL
+from repro.distributed.elastic import gather_alive, reshard
+
+
+def _stacked_index(n_shards, cap, dim, n_vecs, rng):
+    """Build a stacked sharded state by hashing vectors to shards."""
+    from repro.core import IPGMIndex
+    params = IndexParams(
+        capacity=cap, dim=dim, d_out=6,
+        search=SearchParams(pool_size=16, max_steps=48, num_starts=2),
+    )
+    X = rng.normal(size=(n_vecs, dim)).astype(np.float32)
+    shards = []
+    for s in range(n_shards):
+        idx = IPGMIndex(params, strategy="pure", seed=s)
+        idx.insert(X[np.arange(n_vecs) % n_shards == s])
+        shards.append(idx.state)
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *shards)
+    return stacked, params, X
+
+
+def test_reshard_preserves_vectors_and_recall():
+    rng = np.random.default_rng(0)
+    stacked, params, X = _stacked_index(4, 64, 8, 120, rng)
+    vecs_before, _ = gather_alive(stacked)
+    assert vecs_before.shape[0] == 120
+
+    new_params = IndexParams(
+        capacity=64, dim=8, d_out=6,
+        search=SearchParams(pool_size=16, max_steps=48, num_starts=2),
+    )
+    new_stacked, remap = reshard(stacked, params, new_params, 3)
+    assert new_stacked.vectors.shape[0] == 3
+
+    vecs_after, _ = gather_alive(new_stacked)
+    assert vecs_after.shape[0] == 120
+    # every original vector survives (set equality via sorted bytes)
+    a = np.sort(vecs_before.round(5).view([("", vecs_before.dtype)] * 8), 0)
+    b = np.sort(vecs_after.round(5).view([("", vecs_after.dtype)] * 8), 0)
+    np.testing.assert_array_equal(a, b)
+
+    # per-shard search still works: query shard 0 for one of its vectors
+    shard0 = jax.tree.map(lambda x: x[0], new_stacked)
+    q = jnp.asarray(vecs_after[:1])
+    res = search_mod.search_one(
+        shard0, q[0], jnp.asarray([0, 1], jnp.int32), new_params.search
+    )
+    assert int(res.ids[0]) != NULL
+
+
+def test_reshard_capacity_guard():
+    rng = np.random.default_rng(1)
+    stacked, params, _ = _stacked_index(4, 64, 8, 120, rng)
+    tiny = IndexParams(capacity=16, dim=8, d_out=6,
+                       search=SearchParams(pool_size=8, max_steps=16,
+                                           num_starts=2))
+    with pytest.raises(ValueError, match="capacity"):
+        reshard(stacked, params, tiny, 2)

@@ -1,0 +1,81 @@
+"""Property tests: graph invariants survive arbitrary op sequences (I1–I4)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from helpers import build_index, check_invariants, small_params
+from repro.core import IPGMIndex
+from repro.core.graph import NULL
+
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(20, 60),
+    strategy=st.sampled_from(["pure", "mask", "local", "global"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_insert_then_delete_invariants(n, strategy, seed):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, 8)).astype(np.float32)
+    idx = build_index(X, strategy=strategy, capacity=n + 16)
+    dele = rng.choice(n, size=n // 3, replace=False)
+    idx.delete(dele)
+    errs = check_invariants(idx.state)
+    assert not errs, errs[:5]
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       strategy=st.sampled_from(["pure", "local", "global"]))
+def test_interleaved_ops_invariants(seed, strategy):
+    """delete → insert reusing freed slots → delete again."""
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(40, 8)).astype(np.float32)
+    idx = build_index(X, strategy=strategy, capacity=64)
+    idx.delete(rng.choice(40, size=12, replace=False))
+    ids2 = idx.insert(rng.normal(size=(10, 8)).astype(np.float32))
+    assert (np.asarray(ids2) != NULL).all(), "freed slots must be reusable"
+    alive_ids = np.flatnonzero(np.asarray(idx.state.alive))
+    idx.delete(rng.choice(alive_ids, size=8, replace=False))
+    errs = check_invariants(idx.state)
+    assert not errs, errs[:5]
+
+
+def test_mask_keeps_tombstones_traversable():
+    rng = np.random.default_rng(3)
+    X = rng.normal(size=(50, 8)).astype(np.float32)
+    idx = build_index(X, strategy="mask", capacity=80)
+    idx.delete(np.arange(10))
+    st_ = idx.state
+    assert int(np.asarray(st_.masked).sum()) == 10
+    assert int(np.asarray(st_.present).sum()) == 50  # still traversable
+    # masked never reported
+    ids, _ = idx.query(rng.normal(size=(16, 8)).astype(np.float32), k=10)
+    found = np.asarray(ids)
+    found = found[found != NULL]
+    assert not set(found.tolist()) & set(range(10))
+
+
+def test_capacity_full_insert_refuses():
+    rng = np.random.default_rng(4)
+    p = small_params(capacity=16, dim=4)
+    idx = IPGMIndex(p, strategy="pure")
+    ids = idx.insert(rng.normal(size=(20, 4)).astype(np.float32))
+    arr = np.asarray(ids)
+    assert (arr[:16] != NULL).all()
+    assert (arr[16:] == NULL).all(), "inserts beyond capacity must refuse"
+    assert not check_invariants(idx.state)
+
+
+def test_delete_then_reinsert_no_stale_edges():
+    """Reused slots must not inherit stale in-edges (the ABA hazard)."""
+    rng = np.random.default_rng(5)
+    X = rng.normal(size=(30, 8)).astype(np.float32)
+    idx = build_index(X, strategy="pure", capacity=40)
+    idx.delete(np.arange(15))
+    idx.insert(rng.normal(size=(15, 8)).astype(np.float32) + 100.0)
+    errs = check_invariants(idx.state)
+    assert not errs, errs[:5]

@@ -1,0 +1,101 @@
+"""Pallas kernels vs pure-jnp oracles — shape/dtype sweeps (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.kernels.ref import (
+    ref_gather_scores,
+    ref_score_matrix,
+    ref_score_topk,
+)
+
+SHAPES = [
+    # (M, B, d, k)
+    (300, 50, 200, 10),
+    (512, 128, 128, 32),
+    (1000, 17, 960, 5),
+    (64, 8, 32, 4),
+    (257, 33, 100, 16),
+]
+DTYPES = [jnp.float32, jnp.bfloat16]
+METRICS = ["l2", "ip"]
+
+
+def _tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 2e-4
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("metric", METRICS)
+def test_score_matrix(shape, dtype, metric):
+    M, B, d, _ = shape
+    rng = np.random.default_rng(hash((shape, metric)) % 2**31)
+    x = jnp.asarray(rng.normal(size=(M, d)), dtype)
+    q = jnp.asarray(rng.normal(size=(B, d)), dtype)
+    xsq = jnp.sum(x.astype(jnp.float32) ** 2, 1)
+    got = ops.score_matrix(x, xsq, q, metric=metric)
+    want = ref_score_matrix(x, xsq, q, metric)
+    np.testing.assert_allclose(got, want, rtol=_tol(dtype), atol=_tol(dtype) * d)
+
+
+@pytest.mark.parametrize("shape", SHAPES[:3])
+@pytest.mark.parametrize("metric", METRICS)
+def test_score_topk(shape, metric):
+    M, B, d, k = shape
+    rng = np.random.default_rng(hash((shape, metric, 1)) % 2**31)
+    x = jnp.asarray(rng.normal(size=(M, d)).astype(np.float32))
+    q = jnp.asarray(rng.normal(size=(B, d)).astype(np.float32))
+    xsq = jnp.sum(x * x, 1)
+    gs, gi = ops.score_topk(x, xsq, q, k, metric=metric)
+    ws, wi = ref_score_topk(x, xsq, q, k, metric)
+    np.testing.assert_allclose(gs, ws, rtol=1e-4, atol=1e-3)
+    assert (np.asarray(gi) == np.asarray(wi)).all()
+
+
+@pytest.mark.parametrize("shape", SHAPES[:3])
+@pytest.mark.parametrize("metric", METRICS)
+def test_gather_scores(shape, metric):
+    M, B, d, _ = shape
+    C = 24
+    rng = np.random.default_rng(hash((shape, metric, 2)) % 2**31)
+    x = jnp.asarray(rng.normal(size=(M, d)).astype(np.float32))
+    q = jnp.asarray(rng.normal(size=(B, d)).astype(np.float32))
+    xsq = jnp.sum(x * x, 1)
+    ids = jnp.asarray(rng.integers(-1, M, size=(B, C)).astype(np.int32))
+    got = ops.gather_scores(x, xsq, ids, q, metric=metric)
+    want = ref_gather_scores(x, xsq, jnp.maximum(ids, 0), q, metric)
+    want = jnp.where(ids >= 0, want, -jnp.inf)
+    g, w = np.asarray(got), np.asarray(want)
+    assert ((g == -np.inf) == (w == -np.inf)).all()
+    m = np.isfinite(g)
+    np.testing.assert_allclose(g[m], w[m], rtol=1e-4, atol=1e-3)
+
+
+def test_topk_all_negative_ip_padding():
+    """Padded zero rows must not displace negative true scores (regression)."""
+    rng = np.random.default_rng(3)
+    M, B, d, k = 123, 9, 64, 7
+    x = jnp.asarray(-np.abs(rng.normal(size=(M, d))).astype(np.float32))
+    q = jnp.asarray(np.abs(rng.normal(size=(B, d))).astype(np.float32))
+    xsq = jnp.sum(x * x, 1)
+    gs, gi = ops.score_topk(x, xsq, q, k, metric="ip")
+    ws, wi = ref_score_topk(x, xsq, q, k, "ip")
+    assert (np.asarray(gi) == np.asarray(wi)).all()
+
+
+def test_kernel_matches_core_search_scoring():
+    """gather_scores == the scoring used inside beam expansion."""
+    from repro.core import distances
+    rng = np.random.default_rng(4)
+    table = jnp.asarray(rng.normal(size=(100, 16)).astype(np.float32))
+    tsq = distances.sqnorm(table)
+    ids = jnp.asarray(rng.integers(0, 100, size=(4, 8)).astype(np.int32))
+    q = jnp.asarray(rng.normal(size=(4, 16)).astype(np.float32))
+    got = ops.gather_scores(table, tsq, ids, q, metric="l2")
+    want = jax.vmap(
+        lambda i, qq: distances.scores_vs_rows(table[i], tsq[i], qq, "l2")
+    )(ids, q)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)

@@ -1,0 +1,66 @@
+"""End-to-end GRAPH-MAINTENANCE runs — the paper's workload at test scale."""
+import numpy as np
+import pytest
+
+from helpers import check_invariants
+from repro.core import IPGMIndex, IndexParams, SearchParams, run_workload
+from repro.data.workload import make_workload
+
+
+def _params(dim, cap):
+    return IndexParams(
+        capacity=cap, dim=dim, d_out=8,
+        search=SearchParams(pool_size=24, max_steps=64, num_starts=2),
+    )
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("strategy", ["pure", "mask", "local", "global"])
+def test_workload_two_steps(strategy):
+    wl = make_workload("sift", n_base=250, n_steps=2, batch_size=40,
+                       n_queries=40, pattern="random", dim=16)
+    idx = IPGMIndex(_params(16, 450), strategy=strategy, delete_chunk=32)
+    ids = idx.insert(wl.base)
+    id_map = list(np.asarray(ids))
+
+    # drive step by step — pool positions resolve to ids as inserts land
+    recalls = []
+    for i in range(2):
+        idx.delete(np.asarray([id_map[p] for p in wl.step_deletes[i]]))
+        new = idx.insert(wl.step_inserts[i])
+        id_map.extend(np.asarray(new))
+        recalls.append(idx.recall(wl.queries, k=10))
+    assert all(r > 0.5 for r in recalls), (strategy, recalls)
+    if strategy != "mask":
+        assert not check_invariants(idx.state)
+    assert idx.stats()["n_alive"] == 250
+
+
+def test_run_workload_driver():
+    rng = np.random.default_rng(0)
+    idx = IPGMIndex(_params(8, 120), strategy="global", delete_chunk=16)
+    X = rng.normal(size=(80, 8)).astype(np.float32)
+    idx.insert(X)
+    recs = run_workload(idx, [
+        ("delete", np.arange(10)),
+        ("insert", rng.normal(size=(10, 8)).astype(np.float32)),
+        ("query", rng.normal(size=(20, 8)).astype(np.float32)),
+    ], k=5)
+    assert [r["op"] for r in recs] == ["delete", "insert", "query"]
+    assert recs[-1]["recall"] > 0.5
+    assert idx.timers.n_deletes == 10
+    assert idx.timers.n_inserts == 90  # 80 base + 10 streamed
+
+
+@pytest.mark.slow
+def test_rebuild_matches_incremental_quality():
+    rng = np.random.default_rng(1)
+    X = rng.normal(size=(300, 16)).astype(np.float32)
+    Q = rng.normal(size=(48, 16)).astype(np.float32)
+    idx = IPGMIndex(_params(16, 400), strategy="global")
+    idx.insert(X)
+    r_inc = idx.recall(Q, k=10)
+    idx.rebuild_from_alive()
+    r_reb = idx.recall(Q, k=10)
+    assert not check_invariants(idx.state)
+    assert r_reb > r_inc - 0.1, (r_inc, r_reb)

@@ -1,0 +1,75 @@
+"""GREEDY-SEARCH behaviour: recall, termination, determinism, metrics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from helpers import build_index, small_params
+from repro.core import IPGMIndex, IndexParams, SearchParams, metrics
+from repro.core.graph import NULL
+from repro.core import search as search_mod
+
+
+def test_recall_beats_random_walk():
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(400, 16)).astype(np.float32)
+    idx = build_index(X, capacity=512, d_out=8, pool=24)
+    Q = rng.normal(size=(64, 16)).astype(np.float32)
+    assert idx.recall(Q, k=10) > 0.75
+
+
+def test_results_sorted_and_alive():
+    rng = np.random.default_rng(1)
+    X = rng.normal(size=(200, 8)).astype(np.float32)
+    idx = build_index(X, capacity=256)
+    idx.delete(np.arange(50))
+    ids, scores = idx.query(rng.normal(size=(16, 8)).astype(np.float32), k=16)
+    s = np.asarray(scores)
+    i = np.asarray(ids)
+    alive = np.asarray(idx.state.alive)
+    for b in range(16):
+        row = s[b][np.isfinite(s[b])]
+        assert (np.diff(row) <= 1e-6).all(), "scores must be descending"
+        valid = i[b][i[b] != NULL]
+        assert alive[valid].all(), "results must be alive"
+        assert (~np.isin(valid, np.arange(50))).all()
+
+
+def test_search_exact_on_tiny_graph():
+    """With pool ≥ n and enough steps, greedy search is exhaustive."""
+    rng = np.random.default_rng(2)
+    X = rng.normal(size=(30, 4)).astype(np.float32)
+    p = IndexParams(capacity=40, dim=4, d_out=8,
+                    search=SearchParams(pool_size=32, max_steps=64,
+                                        num_starts=4))
+    idx = IPGMIndex(p, strategy="pure")
+    idx.insert(X)
+    Q = rng.normal(size=(8, 4)).astype(np.float32)
+    assert idx.recall(Q, k=5) == 1.0
+
+
+def test_hop_count_bounded():
+    rng = np.random.default_rng(3)
+    X = rng.normal(size=(300, 8)).astype(np.float32)
+    idx = build_index(X, capacity=384, pool=16)
+    res = search_mod.search_batch(
+        idx.state, jnp.asarray(rng.normal(size=(8, 8)).astype(np.float32)),
+        jax.random.PRNGKey(0), idx.params.search,
+    )
+    hops = np.asarray(res.n_expanded)
+    assert (hops <= idx.params.search.max_steps).all()
+    assert (hops > 0).all()
+
+
+def test_recall_metric():
+    found = jnp.asarray([[1, 2, 3], [4, 5, NULL]])
+    true = jnp.asarray([[1, 2, 9], [4, 5, 6]])
+    r = float(metrics.recall_at_k(found, true, 3))
+    assert abs(r - (2 / 3 + 2 / 3) / 2) < 1e-6
+
+
+def test_empty_graph_query():
+    p = small_params(capacity=32, dim=4)
+    idx = IPGMIndex(p)
+    ids, scores = idx.query(np.zeros((4, 4), np.float32), k=5)
+    assert (np.asarray(ids) == NULL).all()

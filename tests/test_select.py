@@ -1,0 +1,89 @@
+"""SELECT-NEIGHBORS vs a literal brute-force transcription of Alg 2."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.graph import NULL
+from repro.core.select import select_neighbors
+
+
+def reference_select(x, cands, valid, d):
+    """Direct Alg 2: scan by distance to x; keep y iff
+    ||x-y|| <= min_{z selected} ||z-y||."""
+    order = sorted(
+        [i for i in range(len(cands)) if valid[i]],
+        key=lambda i: np.sum((x - cands[i]) ** 2),
+    )
+    sel = []
+    for i in order:
+        if len(sel) >= d:
+            break
+        dx = np.sum((x - cands[i]) ** 2)
+        if all(np.sum((cands[j] - cands[i]) ** 2) >= dx for j in sel):
+            sel.append(i)
+    return sel
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(2, 24),
+    d=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matches_reference(n, d, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(6,)).astype(np.float32)
+    cands = rng.normal(size=(n, 6)).astype(np.float32)
+    valid = rng.random(n) > 0.2
+    ids = np.arange(n, dtype=np.int32)
+
+    got = select_neighbors(
+        jnp.asarray(x), jnp.asarray(ids), jnp.asarray(cands),
+        jnp.asarray(valid), d, "l2",
+    )
+    got = [int(i) for i in np.asarray(got) if i != NULL]
+    want = reference_select(x, cands, valid, d)
+    assert got == want
+
+
+def test_diversity_prunes_collinear():
+    """Two near-duplicate candidates: only the closer one survives."""
+    x = np.zeros(2, np.float32)
+    cands = np.asarray([[1, 0], [1.1, 0], [0, 1]], np.float32)
+    got = select_neighbors(
+        jnp.asarray(x), jnp.arange(3, dtype=jnp.int32), jnp.asarray(cands),
+        jnp.ones(3, bool), 3, "l2",
+    )
+    got = [int(i) for i in np.asarray(got) if i != NULL]
+    assert got == [0, 2]  # candidate 1 dominated by 0
+
+
+def test_respects_degree_threshold():
+    rng = np.random.default_rng(0)
+    cands = rng.normal(size=(20, 4)).astype(np.float32) * 10
+    got = select_neighbors(
+        jnp.zeros(4), jnp.arange(20, dtype=jnp.int32), jnp.asarray(cands),
+        jnp.ones(20, bool), 3, "l2",
+    )
+    assert (np.asarray(got) != NULL).sum() <= 3
+
+
+def test_dedup_and_exclusion():
+    from repro.core import init_graph
+    import dataclasses
+    import jax
+
+    state = init_graph(8, 4, d_out=4)
+    vecs = jnp.asarray(np.eye(8, 4), jnp.float32)
+    state = dataclasses.replace(
+        state, vectors=vecs, alive=jnp.ones(8, bool), present=jnp.ones(8, bool),
+        sqnorms=jnp.sum(vecs * vecs, axis=1),
+    )
+    from repro.core.select import select_from_pool
+    cands = jnp.asarray([1, 1, 2, 3, NULL], jnp.int32)  # dup id 1
+    got = select_from_pool(state, jnp.ones(4), cands, 4,
+                           exclude=jnp.asarray([2], jnp.int32))
+    vals = [int(i) for i in np.asarray(got) if i != NULL]
+    assert 2 not in vals
+    assert vals.count(1) <= 1

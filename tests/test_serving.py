@@ -1,0 +1,75 @@
+"""Serving front-end: batching, pad stability, quorum degradation,
+MASK consolidation."""
+import numpy as np
+
+from helpers import build_index, check_invariants
+from repro.core.consolidate import consolidate, masked_fraction, maybe_consolidate
+from repro.core.graph import NULL
+from repro.serving.batcher import BatchedServer, ServeConfig, quorum_merge
+
+
+def test_batched_server_roundtrip():
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(200, 8)).astype(np.float32)
+    idx = build_index(X, capacity=256)
+    srv = BatchedServer(idx, ServeConfig(max_batch=16, k=5))
+    rids = [srv.submit(X[i] + 0.01) for i in range(5)]
+    out = srv.step()
+    assert set(out) == set(rids)
+    for i, rid in enumerate(rids):
+        ids, scores = out[rid]
+        assert ids.shape == (5,)
+        assert i in ids.tolist(), "query ≈ a stored vector must find it"
+    assert srv.stats["requests"] == 5 and srv.stats["batches"] == 1
+
+
+def test_quorum_merge_degrades_gracefully():
+    rng = np.random.default_rng(1)
+    P, B, k = 8, 4, 10
+    scores = rng.normal(size=(P, B, k)).astype(np.float32)
+    scores.sort(axis=-1)
+    scores = scores[..., ::-1]
+    ids = rng.integers(0, 10_000, size=(P, B, k)).astype(np.int32)
+
+    full_i, full_s = quorum_merge(ids, scores, np.ones(P, bool), k)
+    # drop 2 shards
+    arrived = np.ones(P, bool)
+    arrived[[2, 5]] = False
+    part_i, part_s = quorum_merge(ids, scores, arrived, k)
+    assert (part_s <= full_s + 1e-6).all(), "partial merge can't beat full"
+    # every returned id comes from an arrived shard
+    alive_ids = set(ids[arrived].reshape(-1).tolist())
+    got = part_i[part_i != NULL]
+    assert set(got.tolist()) <= alive_ids
+    # overlap stays high: ≥ k - 2·k/P expected per row on average
+    overlap = np.mean([
+        len(set(full_i[b]) & set(part_i[b])) / k for b in range(B)
+    ])
+    assert overlap >= 0.6
+
+
+def test_consolidate_removes_tombstones():
+    rng = np.random.default_rng(2)
+    X = rng.normal(size=(150, 8)).astype(np.float32)
+    idx = build_index(X, strategy="mask", capacity=256)
+    idx.delete(np.arange(40))
+    assert masked_fraction(idx.state) > 0.25
+    n = consolidate(idx, strategy="global")
+    assert n == 40
+    assert masked_fraction(idx.state) == 0.0
+    st = idx.stats()
+    assert st["n_alive"] == 110 and st["n_masked"] == 0
+    assert not check_invariants(idx.state)
+    # recall survives consolidation
+    Q = rng.normal(size=(32, 8)).astype(np.float32)
+    assert idx.recall(Q, k=5) > 0.6
+
+
+def test_maybe_consolidate_threshold():
+    rng = np.random.default_rng(3)
+    X = rng.normal(size=(100, 8)).astype(np.float32)
+    idx = build_index(X, strategy="mask", capacity=160)
+    idx.delete(np.arange(10))           # 10% masked < 20% threshold
+    assert maybe_consolidate(idx, threshold=0.2) == 0
+    idx.delete(np.arange(10, 25))       # now 25% masked
+    assert maybe_consolidate(idx, threshold=0.2) == 25

@@ -1,0 +1,81 @@
+"""Sharding-rule divisibility for every assigned arch on both meshes —
+pure shape math (eval_shape), no 512-device init needed."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry as reg
+from repro.launch import sharding as shr
+
+MESH_SHAPES = {
+    "single": {"data": 16, "model": 16},
+    "multi": {"pod": 2, "data": 16, "model": 16},
+}
+
+LM_ARCHS = [
+    "phi3.5-moe-42b-a6.6b", "llama4-scout-17b-a16e", "qwen3-1.7b",
+    "mistral-nemo-12b", "gemma2-27b",
+]
+
+
+def _check_divisible(sds_tree, spec_tree, axes: dict, where: str):
+    leaves = jax.tree.leaves(sds_tree)
+    specs = jax.tree.leaves(
+        spec_tree, is_leaf=lambda x: x is None or
+        type(x).__name__ == "PartitionSpec")
+    assert len(leaves) == len(specs)
+    for leaf, spec in zip(leaves, specs):
+        if spec is None:
+            continue
+        for dim, part in enumerate(tuple(spec)):
+            if part is None:
+                continue
+            names = (part,) if isinstance(part, str) else tuple(part)
+            k = int(np.prod([axes[n] for n in names]))
+            assert leaf.shape[dim] % k == 0, (
+                f"{where}: dim {dim} of {leaf.shape} not divisible by {k} "
+                f"({names})"
+            )
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+@pytest.mark.parametrize("mesh_kind", ["single", "multi"])
+def test_lm_param_specs_divisible(arch, mesh_kind):
+    from repro.models import transformer as tfm
+    spec = reg.get_arch(arch)
+    cfg = spec.config_for_shape("train_4k")
+    params = jax.eval_shape(lambda: tfm.init_params(jax.random.PRNGKey(0), cfg))
+    p_spec = shr.lm_param_specs(params)
+    _check_divisible(params, p_spec, MESH_SHAPES[mesh_kind], arch)
+
+
+@pytest.mark.parametrize("mesh_kind", ["single", "multi"])
+def test_dlrm_table_specs_divisible(mesh_kind):
+    from repro.models import dlrm as dlrm_mod
+    spec = reg.get_arch("dlrm-rm2")
+    cfg = spec.config_for_shape("train_batch")
+    params = jax.eval_shape(
+        lambda: dlrm_mod.init_params(jax.random.PRNGKey(0), cfg))
+    p_spec = shr.dlrm_param_specs(params)
+    _check_divisible(params, p_spec, MESH_SHAPES[mesh_kind], "dlrm")
+
+
+def test_lm_batch_shapes_divisible():
+    """Every LM shape cell's batch dims divide the mesh batch axes."""
+    for arch in LM_ARCHS:
+        spec = reg.get_arch(arch)
+        for name, cell in spec.shapes.items():
+            if cell.skip:
+                continue
+            B = cell.sizes["batch"]
+            assert B == 1 or B % 16 == 0, (arch, name, B)
+
+
+def test_gnn_padded_dims_divisible():
+    from repro.configs.gnn_common import GNN_SIZES, graph_specs
+    for shape, sizes in GNN_SIZES.items():
+        g = graph_specs(sizes)
+        assert g.x.shape[0] % 512 == 0, shape
+        assert g.senders.shape[0] % 512 == 0, shape

@@ -1,0 +1,81 @@
+"""Workload generator: §6 protocol properties + resumability."""
+import numpy as np
+
+from repro.data.synthetic import kmeans, make_dataset
+from repro.data.workload import make_workload
+
+
+def test_dataset_shapes_and_skew():
+    for name, d in [("sift", 128), ("glove200", 200), ("nytimes", 256),
+                    ("gist", 960)]:
+        x = make_dataset(name, 500, seed=0)
+        assert x.shape == (500, d) and x.dtype == np.float32
+    # skewed sets have higher cluster concentration than uniform ones
+    sift = make_dataset("sift", 2000, seed=1)
+    glove = make_dataset("glove200", 2000, seed=1)
+    lab_s = kmeans(sift, 10, seed=0)
+    lab_g = kmeans(glove, 10, seed=0)
+    top_s = np.bincount(lab_s, minlength=10).max() / 2000
+    top_g = np.bincount(lab_g, minlength=10).max() / 2000
+    assert top_g > top_s, "glove surrogate must be more skewed than sift"
+
+
+def test_random_workload_delete_liveness():
+    wl = make_workload("sift", n_base=300, n_steps=5, batch_size=50,
+                       n_queries=40, pattern="random", dim=16)
+    live = np.zeros(300 + 5 * 50, bool)
+    live[:300] = True
+    for i in range(5):
+        d = wl.step_deletes[i]
+        assert live[d].all(), "must only delete live vectors"
+        live[d] = False
+        live[300 + i * 50: 300 + (i + 1) * 50] = True
+    assert wl.queries.shape[0] == 40
+
+
+def test_clustered_workload_spans():
+    wl = make_workload("glove200", n_base=300, n_steps=3, batch_size=50,
+                       n_queries=40, pattern="clustered", dim=24)
+    for i in range(3):
+        d = wl.step_deletes[i]
+        np.testing.assert_array_equal(d, np.arange(i * 50, (i + 1) * 50))
+
+
+def test_workload_resumable():
+    wl = make_workload("sift", n_base=100, n_steps=3, batch_size=20,
+                       n_queries=10, dim=8)
+    wl.cursor = 2
+    state = wl.state_dict()
+    wl2 = make_workload("sift", n_base=100, n_steps=3, batch_size=20,
+                        n_queries=10, dim=8)
+    wl2.load_state_dict(state)
+    assert wl2.cursor == 2
+    np.testing.assert_array_equal(wl.step_inserts[2], wl2.step_inserts[2])
+
+
+def test_sampler_blocks():
+    from repro.data.graph_sampler import NeighborSampler, random_graph
+    g = random_graph(100, 5, 8, 4, seed=0)
+    s = NeighborSampler(g, (4, 3), batch=10, seed=0)
+    b = s.next_batch()
+    feats = b["blocks"]["feats"]
+    assert feats[0].shape == (10 * 4 * 3, 8)
+    assert feats[1].shape == (10 * 4, 8)
+    assert feats[2].shape == (10, 8)
+    assert b["block_labels"].shape == (10,)
+    # resumability
+    st = s.state.state_dict()
+    s2 = NeighborSampler(g, (4, 3), batch=10, seed=0)
+    s2.state.load_state_dict(st)
+    assert s2.state.cursor == s.state.cursor
+
+
+def test_sampler_subgraph_form():
+    from repro.data.graph_sampler import NeighborSampler, random_graph
+    g = random_graph(80, 4, 6, 3, seed=1)
+    s = NeighborSampler(g, (3, 2), batch=8, seed=0)
+    sub = s.as_subgraph()
+    N = sub["x"].shape[0]
+    assert N == 8 + 8 * 3 + 8 * 3 * 2
+    assert sub["senders"].max() < N and sub["receivers"].max() < N
+    assert sub["label_mask"][:8].all() and not sub["label_mask"][8:].any()
