@@ -1,0 +1,49 @@
+"""jax version-compat shims.
+
+The codebase targets the current jax API (``jax.shard_map`` with
+``check_vma``, ``jax.set_mesh``, dict-valued ``cost_analysis``); the pinned
+container image ships an older jax (0.4.x: ``jax.experimental.shard_map``
+with ``check_rep``, context-manager ``Mesh``, list-valued
+``cost_analysis``). Everything that touches the moving surface goes through
+here so both generations run the same code.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    """``jax.shard_map`` with graceful fallback to the experimental API."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma,
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=check_vma,
+    )
+
+
+def use_mesh(mesh):
+    """Context manager installing ``mesh`` as the ambient mesh."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if hasattr(jax.sharding, "use_mesh"):
+        return jax.sharding.use_mesh(mesh)
+    return mesh  # 0.4.x: Mesh is itself a context manager
+
+
+def axis_size(name):
+    """``jax.lax.axis_size`` (newer jax) or the psum(1) equivalent."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(name)
+    return jax.lax.psum(1, name)
+
+
+def compiled_cost_analysis(compiled) -> dict:
+    """``compiled.cost_analysis()`` as a dict on every jax version."""
+    ca = compiled.cost_analysis()
+    return ca[0] if isinstance(ca, (list, tuple)) else ca

@@ -185,15 +185,17 @@ def delete_global(
     u_valid = u_valid & first
     su = jnp.where(u_valid, u_flat, 0)
 
-    # ---- batched repair search: GREEDY-SEARCH(u, G, k) on the marked graph ----
+    # ---- batched repair search: GREEDY-SEARCH(u, G, k) on the marked graph,
+    # all B·d_in in-neighbors through ONE batched beam-engine call (the same
+    # compiled program the query path runs — §6.2's "repair cost in units of
+    # queries" is now literal) ----
     sp = params.eff_insert_search
     u_vecs = state.vectors[su]
-    keys = jax.random.split(key, u_flat.shape[0])
-    starts = jax.vmap(lambda kk: search.entry_points(state, kk, sp.num_starts))(
-        keys
+    starts = search.batch_entry_points(
+        state, key, u_flat.shape[0], sp.num_starts
     )
-    res = jax.vmap(lambda q, s: search.search_one(state, q, s, sp))(
-        u_vecs, starts
+    res = search.beam_search(
+        state, u_vecs, starts, sp
     )  # alive-only candidates — deleted batch is already non-alive
 
     # ---- SELECT-NEIGHBORS(u, C, d, {x_i}) and wholesale edge replacement ----

@@ -57,13 +57,15 @@ def insert_one(
     slot = next_free_slot(state).astype(jnp.int32)
     ok = ~state.present[slot]
 
-    # ---- greedy search for nearest candidates (alive-only results) ----
+    # ---- ef-search for nearest candidates (alive-only results) via the
+    # batched beam engine at B=1 — same compiled program family as queries
+    # and GLOBAL repair (DESIGN.md §3) ----
     starts = search.entry_points(state, key, sp.num_starts)
-    res = search.search_one(state, vec, starts, sp)
+    res = search.beam_search(state, vec[None], starts[None], sp)
 
     # ---- select diverse out-neighbors ----
     nbrs = select.select_from_pool(
-        state, vec, res.ids, params.d_out, exclude=slot[None]
+        state, vec, res.ids[0], params.d_out, exclude=slot[None]
     )
 
     # ---- write the vertex ----

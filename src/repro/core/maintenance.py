@@ -75,7 +75,15 @@ class IPGMIndex:
 
     # -- operations (Alg 3 branches) --------------------------------------
     def query(self, queries, k: int | None = None):
-        """Batched ANN query. Returns (ids i32[B,k], scores f32[B,k])."""
+        """Batched ANN query. Returns (ids i32[B,k], scores f32[B,k]).
+
+        Each ``query_chunk``-sized micro-batch is one batched beam-engine
+        call (``search.beam_search`` under ``search_batch``) — chunking
+        bounds device intermediates, and all full-size chunks share one
+        compiled program (a ragged final chunk compiles once per distinct
+        remainder shape; pad-stable callers like the serving batcher never
+        produce one).
+        """
         q = jnp.asarray(queries)
         chunk = self.params.query_chunk
         k = k if k is not None else self.params.search.pool_size

@@ -9,12 +9,21 @@ class SearchParams:
     """Parameters of GREEDY-SEARCH (Alg 1) and the TPU execution model."""
 
     pool_size: int = 32      # paper's k: candidate priority-queue length (ef)
-    max_steps: int = 96      # hard cap on while_loop expansions (TPU bound)
+    max_steps: int = 96      # hard cap on while_loop trips (TPU bound); with
+                             # beam_width=W each trip expands ≤ W entries
     num_starts: int = 2      # random entry points seeding the pool
+    beam_width: int = 1      # W: unexpanded pool entries expanded per query
+                             # per step ([B, W·d_out] candidate block);
+                             # W=1 reproduces the classic best-first walk
+    use_pallas: bool | None = None  # score the candidate block through the
+                                    # fused Pallas gather kernel
+                                    # (kernels.ops.gather_scores);
+                                    # None → auto (on for TPU backends)
 
     def __post_init__(self):
         assert self.pool_size >= 1 and self.max_steps >= 1
         assert 1 <= self.num_starts <= self.pool_size
+        assert 1 <= self.beam_width <= self.pool_size
 
 
 @dataclasses.dataclass(frozen=True)
@@ -29,7 +38,8 @@ class IndexParams:
     search: SearchParams = SearchParams()
     insert_search: SearchParams | None = None  # ef_construction; None → search
     bidirectional_insert: bool = True  # NSW/HNSW practice; strict-paper = False
-    query_chunk: int = 256     # queries per vmapped micro-batch (bitmap memory)
+    query_chunk: int = 256     # queries per batched-engine call (bounds the
+                               # [chunk, pool+block] working set & compile shapes)
 
     @property
     def eff_d_in(self) -> int:

@@ -1,18 +1,43 @@
-"""GREEDY-SEARCH (Alg 1) — TPU-native batched best-first beam search.
+"""GREEDY-SEARCH (Alg 1) — natively batched beam-search engine.
 
-The paper's ``std::priority_queue`` becomes a fixed-size score-sorted pool;
-each loop step expands the best not-yet-expanded pool entry, gathers its
-``d_out`` neighbors, scores them in one fused gather+dot, and merges with
-``lax.top_k``. A dense per-query visited bitmap replaces the hash set
-(exact dedup; memory = capacity bytes/query, so callers chunk query batches).
+One ``while_loop`` carries *all* ``B`` query pools at once (DESIGN.md §3):
+each step takes the top ``beam_width`` unexpanded pool entries per query
+(``lax.top_k`` over the frontier), gathers their out-neighborhoods into a
+``[B, W·d_out]`` candidate block, dedups it, scores the whole block in one
+fused gather+dot — the Pallas kernel ``kernels.ops.gather_scores`` when
+``use_pallas`` resolves true, a batched jnp matmul otherwise — and merges
+into the pools with ``lax.top_k``. Every caller (query chunking, insert's
+ef-search, GLOBAL delete repair, per-shard distributed fan-out, the serving
+batcher) funnels into this single compiled program.
 
-MASK semantics (§5.2): tombstoned vertices are *traversable* — they enter the
-pool and steer the walk — but are never reported (``alive`` filter at the
-end). This is exactly why MASK degrades QPS, which the benchmarks reproduce.
+**The pool is the visited structure.** The pre-refactor engine kept a dense
+``bool[capacity]`` visited bitmap per query — the batched equivalent
+(``[B, capacity]``) is exactly what made the old vmap path memory-bound and
+capacity-coupled. It is also redundant: scores are static and the pool is a
+monotone top-K of everything scored, so a vertex that was evicted can never
+re-enter (anything that evicted it still outranks it), and a vertex still in
+the pool is caught by an ``O(K)`` membership test against the candidate
+block. Dedup is therefore pool-membership + first-occurrence within the
+block — O(B·C·K) packed compares instead of O(B·capacity) state. This keeps
+pool evolution identical to the bitmap engine while making the per-query
+working set independent of index capacity (the seed path slows ~3x going
+from 1k to 16k vertices; this engine does not — see BENCH_search.json).
+
+``beam_width=1`` reproduces the classic best-first walk bit-for-bit; the
+pre-refactor per-query engine is kept below (``search_one_reference`` /
+``search_batch_reference``) as the slow-path oracle the parity suite pins
+the new engine against.
+
+MASK semantics (§5.2): tombstoned vertices are *traversable* — they enter
+the pool and steer the walk — but are never reported (``alive`` filter at
+the end). This is exactly why MASK degrades QPS, which the benchmarks
+reproduce.
 
 Termination: the classic ef-search criterion — stop when no unexpanded pool
-entry remains (every frontier candidate is already worse than the current
-top-k) — plus a hard ``max_steps`` cap to bound the TPU while_loop.
+entry remains in any query's pool (every frontier candidate is already worse
+than the current top-k) — plus a hard ``max_steps`` cap on loop trips.
+``n_expanded`` reports the per-query count of actually expanded entries
+(≤ W·max_steps), which is the paper's hop-count QPS denominator.
 """
 from __future__ import annotations
 
@@ -25,6 +50,7 @@ import jax.numpy as jnp
 from repro.core import distances
 from repro.core.graph import NULL, GraphState
 from repro.core.params import SearchParams
+from repro.kernels import ops as kernel_ops
 
 NEG_INF = distances.NEG_INF
 
@@ -33,14 +59,6 @@ class SearchResult(NamedTuple):
     ids: jax.Array         # i32[..., k]  NULL padded, score-descending
     scores: jax.Array      # f32[..., k]  -inf padded
     n_expanded: jax.Array  # i32[...]  hop count (profiling / paper's QPS story)
-
-
-class _LoopState(NamedTuple):
-    pool_ids: jax.Array       # i32[k]
-    pool_scores: jax.Array    # f32[k]
-    pool_expanded: jax.Array  # bool[k]
-    bitmap: jax.Array         # bool[capacity] — pushed-at-least-once
-    steps: jax.Array          # i32
 
 
 def entry_points(state: GraphState, key: jax.Array, num_starts: int) -> jax.Array:
@@ -52,7 +70,224 @@ def entry_points(state: GraphState, key: jax.Array, num_starts: int) -> jax.Arra
     return jnp.where(ok, ids, NULL).astype(jnp.int32)
 
 
-def _merge_pool(
+def batch_entry_points(
+    state: GraphState, key: jax.Array, batch: int, num_starts: int
+) -> jax.Array:
+    """Independent entry points for each of ``batch`` queries: i32[B, S]."""
+    keys = jax.random.split(key, batch)
+    return jax.vmap(lambda kk: entry_points(state, kk, num_starts))(keys)
+
+
+# ---------------------------------------------------------------------------
+# Batched beam engine — the hot path
+# ---------------------------------------------------------------------------
+
+class _BeamState(NamedTuple):
+    pool_ids: jax.Array       # i32[B, K]  (the pool doubles as visited set)
+    pool_scores: jax.Array    # f32[B, K]  score-descending
+    pool_expanded: jax.Array  # bool[B, K]
+    n_expanded: jax.Array     # i32[B]
+    steps: jax.Array          # i32  (shared loop-trip counter)
+
+
+def _resolve_use_pallas(params: SearchParams) -> bool:
+    if params.use_pallas is not None:
+        return params.use_pallas
+    return kernel_ops.on_tpu()
+
+
+def _score_block(
+    state: GraphState,
+    queries: jax.Array,    # f32[B, dim]
+    ids: jax.Array,        # i32[B, C]
+    valid: jax.Array,      # bool[B, C]
+    use_pallas: bool,
+) -> jax.Array:
+    """f32[B, C] scores of each query against its candidate block (invalid
+    lanes → -inf). The Pallas path drives the table-row DMA straight from the
+    candidate ids (no [B, C, d] HBM intermediate)."""
+    if use_pallas:
+        masked = jnp.where(valid, ids, NULL).astype(jnp.int32)
+        return kernel_ops.gather_scores(
+            state.vectors, state.sqnorms, masked, queries, metric=state.metric
+        )
+    safe = jnp.where(valid, ids, 0)
+    s = jax.vmap(
+        lambda rows, sq, q: distances.scores_vs_rows(rows, sq, q, state.metric)
+    )(state.vectors[safe], state.sqnorms[safe], queries)
+    return jnp.where(valid, s, NEG_INF)
+
+
+def _merge_pools(
+    bs: _BeamState, new_ids: jax.Array, new_scores: jax.Array, k: int
+) -> _BeamState:
+    all_ids = jnp.concatenate([bs.pool_ids, new_ids], axis=1)
+    all_scores = jnp.concatenate([bs.pool_scores, new_scores], axis=1)
+    all_expanded = jnp.concatenate(
+        [bs.pool_expanded, jnp.zeros(new_ids.shape, bool)], axis=1
+    )
+    top_scores, idx = jax.lax.top_k(all_scores, k)
+    return bs._replace(
+        pool_ids=jnp.take_along_axis(all_ids, idx, axis=1),
+        pool_scores=top_scores,
+        pool_expanded=jnp.take_along_axis(all_expanded, idx, axis=1),
+    )
+
+
+def beam_search(
+    state: GraphState,
+    queries: jax.Array,     # f32[B, dim]
+    start_ids: jax.Array,   # i32[B, S]
+    params: SearchParams,
+    *,
+    raw: bool = False,      # True → unfiltered traversal pools (incl. masked)
+) -> SearchResult:
+    """The batched beam engine (traceable; callers jit it or already are).
+
+    Duplicate start ids within a query are deduped (the old engine could
+    double-report them); ``entry_points`` always produces distinct ids, so
+    this only matters for hand-built starts.
+    """
+    B = queries.shape[0]
+    K, W, d_out = params.pool_size, params.beam_width, state.d_out
+    C = W * d_out
+    S = start_ids.shape[1]
+    use_pallas = _resolve_use_pallas(params)
+
+    # ---- seed the pools with the entry points ----
+    sv = start_ids != NULL
+    sv = sv & state.present[jnp.where(sv, start_ids, 0)]
+    eq = (start_ids[:, :, None] == start_ids[:, None, :])
+    eq = eq & sv[:, :, None] & sv[:, None, :]
+    sv = sv & (jnp.argmax(eq, axis=2) == jnp.arange(S)[None, :])
+    seed_scores = _score_block(state, queries, start_ids, sv, use_pallas)
+    bs = _BeamState(
+        pool_ids=jnp.full((B, K), NULL, jnp.int32),
+        pool_scores=jnp.full((B, K), NEG_INF, jnp.float32),
+        pool_expanded=jnp.zeros((B, K), bool),
+        n_expanded=jnp.zeros((B,), jnp.int32),
+        steps=jnp.asarray(0, jnp.int32),
+    )
+    bs = _merge_pools(bs, jnp.where(sv, start_ids, NULL), seed_scores, K)
+
+    def cond(b: _BeamState) -> jax.Array:
+        has_frontier = jnp.any((b.pool_ids != NULL) & ~b.pool_expanded)
+        return has_frontier & (b.steps < params.max_steps)
+
+    def body(b: _BeamState) -> _BeamState:
+        frontier = jnp.where(
+            (b.pool_ids != NULL) & ~b.pool_expanded, b.pool_scores, NEG_INF
+        )
+        top_w, wi = jax.lax.top_k(frontier, W)          # [B, W], k=W is small
+        valid_w = top_w > NEG_INF                       # drained queries idle
+        hit = jnp.any(
+            (jnp.arange(K)[None, None, :] == wi[:, :, None])
+            & valid_w[:, :, None],
+            axis=1,
+        )
+        expanded = b.pool_expanded | hit
+
+        cur = jnp.take_along_axis(b.pool_ids, wi, axis=1)
+        nbrs3 = state.adj[jnp.where(valid_w, cur, 0)]   # i32[B, W, d_out]
+        nv = ((nbrs3 != NULL) & valid_w[:, :, None]).reshape(B, C)
+        nbrs = nbrs3.reshape(B, C)
+        nv = nv & state.present[jnp.where(nv, nbrs, 0)]
+        # visited dedup = pool membership (see module docstring): evicted
+        # vertices can't re-enter the pool, so testing against the current
+        # pool is exact
+        nv = nv & ~jnp.any(nbrs[:, :, None] == b.pool_ids[:, None, :], axis=2)
+        if W > 1:
+            # intra-block dedup: two expanded vertices of the same query may
+            # share a neighbor; keep the first occurrence only
+            tri = jnp.arange(C)[:, None] > jnp.arange(C)[None, :]
+            dup = jnp.any(
+                (nbrs[:, :, None] == nbrs[:, None, :])
+                & nv[:, None, :] & tri[None],
+                axis=2,
+            )
+            nv = nv & ~dup
+
+        nscores = _score_block(state, queries, nbrs, nv, use_pallas)
+        b = b._replace(
+            pool_expanded=expanded,
+            n_expanded=b.n_expanded + jnp.sum(valid_w, axis=1, dtype=jnp.int32),
+            steps=b.steps + 1,
+        )
+        return _merge_pools(b, jnp.where(nv, nbrs, NULL), nscores, K)
+
+    bs = jax.lax.while_loop(cond, body, bs)
+
+    if raw:
+        return SearchResult(bs.pool_ids, bs.pool_scores, bs.n_expanded)
+    ids = bs.pool_ids
+    ok = (ids != NULL) & state.alive[jnp.maximum(ids, 0)]
+    rep_scores = jnp.where(ok, bs.pool_scores, NEG_INF)
+    top_scores, idx = jax.lax.top_k(rep_scores, K)
+    rep_ids = jnp.where(
+        top_scores > NEG_INF, jnp.take_along_axis(ids, idx, axis=1), NULL
+    )
+    return SearchResult(rep_ids, top_scores, bs.n_expanded)
+
+
+@functools.partial(jax.jit, static_argnames=("params", "raw"))
+def _search_batch_jit(
+    state: GraphState, queries: jax.Array, key: jax.Array,
+    params: SearchParams, raw: bool,
+) -> SearchResult:
+    starts = batch_entry_points(state, key, queries.shape[0], params.num_starts)
+    return beam_search(state, queries, starts, params, raw=raw)
+
+
+def search_batch(
+    state: GraphState, queries: jax.Array, key: jax.Array, params: SearchParams
+) -> SearchResult:
+    """Batched greedy search reporting alive vertices only."""
+    return _search_batch_jit(state, queries, key, params, False)
+
+
+def search_batch_raw(
+    state: GraphState, queries: jax.Array, key: jax.Array, params: SearchParams
+) -> SearchResult:
+    """Unfiltered traversal pools (incl. masked) — insertion/repair internals."""
+    return _search_batch_jit(state, queries, key, params, True)
+
+
+def search_one(
+    state: GraphState,
+    q: jax.Array,
+    start_ids: jax.Array,
+    params: SearchParams,
+) -> SearchResult:
+    """Single-query view of the batched engine (B=1)."""
+    res = beam_search(state, q[None], start_ids[None], params)
+    return SearchResult(res.ids[0], res.scores[0], res.n_expanded[0])
+
+
+def search_one_raw(
+    state: GraphState,
+    q: jax.Array,
+    start_ids: jax.Array,
+    params: SearchParams,
+) -> SearchResult:
+    res = beam_search(state, q[None], start_ids[None], params, raw=True)
+    return SearchResult(res.ids[0], res.scores[0], res.n_expanded[0])
+
+
+# ---------------------------------------------------------------------------
+# Reference per-query engine — the pre-refactor implementation, kept as the
+# slow-path oracle for the parity suite (tests/test_beam_parity.py) and for
+# the seed-vs-engine rows in benchmarks/kernel_bench.py. Do not optimize.
+# ---------------------------------------------------------------------------
+
+class _LoopState(NamedTuple):
+    pool_ids: jax.Array       # i32[k]
+    pool_scores: jax.Array    # f32[k]
+    pool_expanded: jax.Array  # bool[k]
+    bitmap: jax.Array         # bool[capacity] — pushed-at-least-once
+    steps: jax.Array          # i32
+
+
+def _merge_pool_ref(
     pool: _LoopState, new_ids: jax.Array, new_scores: jax.Array, k: int
 ) -> _LoopState:
     all_ids = jnp.concatenate([pool.pool_ids, new_ids])
@@ -95,7 +330,7 @@ def _run_loop(
         bitmap=bitmap,
         steps=jnp.asarray(0, jnp.int32),
     )
-    pool = _merge_pool(pool, jnp.where(sv, start_ids, NULL), seed_scores, k)
+    pool = _merge_pool_ref(pool, jnp.where(sv, start_ids, NULL), seed_scores, k)
 
     def cond(p: _LoopState) -> jax.Array:
         has_frontier = jnp.any((p.pool_ids != NULL) & ~p.pool_expanded)
@@ -117,12 +352,12 @@ def _run_loop(
         bitmap = p.bitmap.at[safe].max(nv)
 
         p = p._replace(pool_expanded=expanded, bitmap=bitmap, steps=p.steps + 1)
-        return _merge_pool(p, jnp.where(nv, nbrs, NULL), nscores, k)
+        return _merge_pool_ref(p, jnp.where(nv, nbrs, NULL), nscores, k)
 
     return jax.lax.while_loop(cond, body, pool)
 
 
-def search_one(
+def search_one_reference(
     state: GraphState,
     q: jax.Array,
     start_ids: jax.Array,
@@ -138,13 +373,13 @@ def search_one(
     return SearchResult(rep_ids, top_scores, pool.steps)
 
 
-def search_one_raw(
+def search_one_reference_raw(
     state: GraphState,
     q: jax.Array,
     start_ids: jax.Array,
     params: SearchParams,
 ) -> SearchResult:
-    """Unfiltered traversal pool (incl. masked) — insertion/repair internals."""
+    """Unfiltered traversal pool (incl. masked) — reference raw path."""
     pool = _run_loop(state, q, start_ids, params)
     return SearchResult(pool.pool_ids, pool.pool_scores, pool.steps)
 
@@ -154,10 +389,9 @@ def _batched(search_fn):
     def run(
         state: GraphState, queries: jax.Array, key: jax.Array, params: SearchParams
     ) -> SearchResult:
-        keys = jax.random.split(key, queries.shape[0])
-        starts = jax.vmap(
-            lambda kk: entry_points(state, kk, params.num_starts)
-        )(keys)
+        starts = batch_entry_points(
+            state, key, queries.shape[0], params.num_starts
+        )
         return jax.vmap(lambda q, s: search_fn(state, q, s, params))(
             queries, starts
         )
@@ -165,5 +399,5 @@ def _batched(search_fn):
     return run
 
 
-search_batch = _batched(search_one)
-search_batch_raw = _batched(search_one_raw)
+search_batch_reference = _batched(search_one_reference)
+search_batch_reference_raw = _batched(search_one_reference_raw)

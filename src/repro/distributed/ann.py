@@ -29,6 +29,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 from repro.core import delete as delete_mod
 from repro.core import insert as insert_mod
 from repro.core import search as search_mod
@@ -80,7 +82,7 @@ def _restack(state: GraphState) -> GraphState:
 def _shard_index(axes) -> jax.Array:
     idx = jnp.int32(0)
     for a in axes:
-        idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+        idx = idx * compat.axis_size(a) + jax.lax.axis_index(a)
     return idx
 
 
@@ -108,7 +110,13 @@ def make_query_step(dp: DistParams, mesh):
         state = _local(state_stacked)
         shard = _shard_index(axes)
         key = jax.random.fold_in(key, shard)
-        res = search_mod.search_batch(state, queries, key, sp)
+        # per-shard fan-out runs the batched beam engine inline (no nested
+        # jit inside shard_map): every shard beam-searches its subgraph with
+        # one engine call, then the partial top-k's cross the mesh
+        starts = search_mod.batch_entry_points(
+            state, key, queries.shape[0], sp.num_starts
+        )
+        res = search_mod.beam_search(state, queries, starts, sp)
         gids = jnp.where(
             res.ids != NULL, res.ids + shard * dp.index.capacity, NULL
         )
@@ -122,7 +130,7 @@ def make_query_step(dp: DistParams, mesh):
             top_s, top_i = _merge(res.scores, gids, axes, k)
         return top_i, top_s
 
-    smapped = jax.shard_map(
+    smapped = compat.shard_map(
         _step, mesh=mesh,
         in_specs=(state_spec, q_spec, P()),
         out_specs=(q_spec, q_spec),
@@ -141,7 +149,7 @@ def make_insert_step(dp: DistParams, mesh):
         shard = _shard_index(axes)
         n_shards = 1
         for a in axes:
-            n_shards *= jax.lax.axis_size(a)
+            n_shards *= compat.axis_size(a)
         mine = (route % n_shards) == shard
         key = jax.random.fold_in(key, shard)
         state, ids = insert_mod.insert_batch(state, vecs, mine, key, dp.index)
@@ -151,7 +159,7 @@ def make_insert_step(dp: DistParams, mesh):
         gids = jax.lax.pmax(jnp.where(mine, gids, NULL), axes)
         return _restack(state), gids
 
-    smapped = jax.shard_map(
+    smapped = compat.shard_map(
         _step, mesh=mesh,
         in_specs=(state_spec, P(), P(), P()),
         out_specs=(state_spec, P()),
@@ -178,7 +186,7 @@ def make_delete_step(dp: DistParams, mesh, strategy: str):
         )
         return _restack(state)
 
-    smapped = jax.shard_map(
+    smapped = compat.shard_map(
         _step, mesh=mesh,
         in_specs=(state_spec, P(), P()),
         out_specs=state_spec,

@@ -17,11 +17,15 @@ from repro.kernels import gather_distance as _gd
 NEG_INF = float("-inf")
 
 
-def _on_tpu() -> bool:
+def on_tpu() -> bool:
+    """True when the default backend is a real TPU (not interpret mode)."""
     try:
         return jax.devices()[0].platform == "tpu"
     except Exception:  # pragma: no cover
         return False
+
+
+_on_tpu = on_tpu  # internal alias kept for the jit'd wrappers below
 
 
 def _pad_to(x: jax.Array, axis: int, mult: int, value=0.0) -> jax.Array:
@@ -82,10 +86,15 @@ def score_topk(
     B, M = q.shape[0], x.shape[0]
     block_b = min(block_b, max(8, B))
     block_m = min(block_m, max(k, 8, M))
-    # pad M with -inf norms so padded rows can never win
+    # Padded-row masking happens in TWO places, both required:
+    #   1. the kernel masks rows with id >= n_valid to -inf (authoritative —
+    #      covers every metric, including ip/cos where xsq is unused and a
+    #      zero-padded row would otherwise score 0 and beat negative scores);
+    #   2. xsq is padded with +inf so l2 scores (2<q,x> - ||x||^2) of padded
+    #      rows are -inf even before the n_valid mask.
     xp = _pad_to(_pad_to(x, 0, block_m), 1, 128)
     qp = _pad_to(_pad_to(q, 0, block_b), 1, 128)
-    xsqp = _pad_to(xsq, 0, block_m)
+    xsqp = _pad_to(xsq, 0, block_m, value=jnp.inf)
     s, i = _dm.score_topk_pallas(
         xp, xsqp, qp, k, metric=metric, block_b=block_b, block_m=block_m,
         n_valid=M, interpret=interpret,

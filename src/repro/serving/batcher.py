@@ -33,11 +33,26 @@ class ServeConfig:
 
 
 class BatchedServer:
-    """Pad-stable batched front-end over an :class:`IPGMIndex`."""
+    """Pad-stable batched front-end over an :class:`IPGMIndex`.
 
-    def __init__(self, index: IPGMIndex, cfg: ServeConfig = ServeConfig()):
+    ``clock``/``sleep`` are injectable for deterministic tests of the
+    batching window (tests/test_serving.py).
+    """
+
+    _POLL_S = 0.0005  # wait-slice; bounds drain latency jitter, not a spin
+
+    def __init__(
+        self,
+        index: IPGMIndex,
+        cfg: ServeConfig = ServeConfig(),
+        *,
+        clock: Callable[[], float] = time.perf_counter,
+        sleep: Callable[[float], None] = time.sleep,
+    ):
         self.index = index
         self.cfg = cfg
+        self._clock = clock
+        self._sleep = sleep
         self._queue: deque[tuple[int, np.ndarray]] = deque()
         self._next_id = 0
         self.stats = {"batches": 0, "requests": 0, "pad_waste": 0.0}
@@ -49,15 +64,28 @@ class BatchedServer:
         return rid
 
     def _drain(self) -> list[tuple[int, np.ndarray]]:
-        out = []
-        t0 = time.perf_counter()
-        while (len(out) < self.cfg.max_batch
-               and (self._queue
-                    or time.perf_counter() - t0 < self.cfg.max_wait_s)):
+        """Collect up to ``max_batch`` requests for one device step.
+
+        The ``max_wait_s`` window is armed when the drain begins; once at
+        least one request is in hand the drain honors it — sleeping in
+        short slices (never spinning hot) so requests submitted
+        concurrently during the window still join the batch. An idle queue
+        returns immediately instead of holding the window open. Worst-case
+        added latency per request is therefore queue-age at drain entry
+        plus ``max_wait_s``.
+        """
+        out: list[tuple[int, np.ndarray]] = []
+        deadline = self._clock() + self.cfg.max_wait_s
+        while len(out) < self.cfg.max_batch:
             if self._queue:
                 out.append(self._queue.popleft())
-            else:
+                continue
+            if not out:
+                break  # idle server: nothing to wait *for*
+            remaining = deadline - self._clock()
+            if remaining <= 0:
                 break
+            self._sleep(min(remaining, self._POLL_S))
         return out
 
     def step(self) -> dict[int, tuple[np.ndarray, np.ndarray]]:

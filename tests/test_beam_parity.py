@@ -1,0 +1,139 @@
+"""Batched beam engine vs the per-query reference path (parity suite).
+
+Pins the tentpole contract: ``beam_width=1`` reproduces the pre-refactor
+engine exactly (ids, scores, hop counts — filtered and raw, all three
+metrics, with MASK tombstones in the graph), wider beams stay recall-equal
+or better at scale, and the Pallas gather path scores identically to the
+jnp path.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import IPGMIndex, IndexParams, SearchParams, metrics
+from repro.core import search as search_mod
+from repro.core.graph import NULL
+
+METRICS = ["l2", "ip", "cos"]
+
+
+def _index(metric, n=260, dim=12, d_out=6, pool=16, capacity=320, seed=0):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, dim)).astype(np.float32)
+    if metric == "ip":
+        X *= rng.uniform(0.5, 2.0, size=(n, 1)).astype(np.float32)  # hubs
+    p = IndexParams(
+        capacity=capacity, dim=dim, d_out=d_out, metric=metric,
+        search=SearchParams(pool_size=pool, max_steps=3 * pool, num_starts=2),
+    )
+    idx = IPGMIndex(p, strategy="mask", seed=seed)
+    idx.insert(X)
+    return idx, rng
+
+
+def _assert_result_parity(got, want):
+    assert (np.asarray(got.ids) == np.asarray(want.ids)).all()
+    np.testing.assert_allclose(
+        np.asarray(got.scores), np.asarray(want.scores),
+        rtol=1e-6, atol=1e-6,
+    )
+    assert (np.asarray(got.n_expanded) == np.asarray(want.n_expanded)).all()
+
+
+@pytest.mark.parametrize("metric", METRICS)
+def test_beam1_matches_reference(metric):
+    idx, rng = _index(metric)
+    Q = jnp.asarray(rng.normal(size=(24, 12)).astype(np.float32))
+    key = jax.random.PRNGKey(42)
+    sp = idx.params.search
+    _assert_result_parity(
+        search_mod.search_batch(idx.state, Q, key, sp),
+        search_mod.search_batch_reference(idx.state, Q, key, sp),
+    )
+
+
+@pytest.mark.parametrize("metric", METRICS)
+def test_beam1_matches_reference_with_mask_tombstones(metric):
+    idx, rng = _index(metric)
+    idx.delete(np.arange(60))  # MASK: traversable, not reportable
+    assert int(np.asarray(idx.state.masked).sum()) == 60
+    Q = jnp.asarray(rng.normal(size=(24, 12)).astype(np.float32))
+    key = jax.random.PRNGKey(7)
+    sp = idx.params.search
+    filt = search_mod.search_batch(idx.state, Q, key, sp)
+    _assert_result_parity(
+        filt, search_mod.search_batch_reference(idx.state, Q, key, sp)
+    )
+    # raw traversal pools (insert/repair internals) must agree too
+    _assert_result_parity(
+        search_mod.search_batch_raw(idx.state, Q, key, sp),
+        search_mod.search_batch_reference_raw(idx.state, Q, key, sp),
+    )
+    # and tombstones never leak into filtered results
+    ids = np.asarray(filt.ids)
+    assert not np.isin(ids[ids != NULL], np.arange(60)).any()
+
+
+def test_search_one_matches_batched_row():
+    idx, rng = _index("l2")
+    q = jnp.asarray(rng.normal(size=(12,)).astype(np.float32))
+    starts = jnp.asarray([3, 17], jnp.int32)
+    sp = idx.params.search
+    one = search_mod.search_one(idx.state, q, starts, sp)
+    batched = search_mod.beam_search(idx.state, q[None], starts[None], sp)
+    assert (np.asarray(one.ids) == np.asarray(batched.ids[0])).all()
+    assert int(one.n_expanded) == int(batched.n_expanded[0])
+
+
+@pytest.mark.parametrize("metric", METRICS)
+def test_wider_beam_recall_equal_or_better_at_scale(metric):
+    idx, rng = _index(metric, n=420, capacity=512)
+    Q = rng.normal(size=(64, 12)).astype(np.float32)
+    _, true_ids = idx.ground_truth(Q, 10)
+    key = jax.random.PRNGKey(0)
+
+    def recall(beam):
+        sp = SearchParams(pool_size=16, max_steps=48, num_starts=2,
+                          beam_width=beam)
+        res = search_mod.search_batch(idx.state, jnp.asarray(Q), key, sp)
+        return float(metrics.recall_at_k(res.ids[:, :10], true_ids, 10))
+
+    r1, r4, r8 = recall(1), recall(4), recall(8)
+    # wider beams explore strictly more of the frontier per step; allow a
+    # small tolerance for tie-order noise near the pool boundary
+    assert r4 >= r1 - 0.03, (r1, r4)
+    assert r8 >= r1 - 0.03, (r1, r8)
+
+
+@pytest.mark.parametrize("beam", [1, 2])
+def test_pallas_gather_path_matches_jnp(beam):
+    idx, rng = _index("l2", n=120, dim=8, d_out=4, pool=12, capacity=160)
+    Q = jnp.asarray(rng.normal(size=(8, 8)).astype(np.float32))
+    key = jax.random.PRNGKey(3)
+    mk = lambda up: SearchParams(pool_size=12, max_steps=36, num_starts=2,
+                                 beam_width=beam, use_pallas=up)
+    rj = search_mod.search_batch(idx.state, Q, key, mk(False))
+    rp = search_mod.search_batch(idx.state, Q, key, mk(True))
+    assert (np.asarray(rj.ids) == np.asarray(rp.ids)).all()
+    np.testing.assert_allclose(
+        np.asarray(rj.scores), np.asarray(rp.scores), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_pallas_engine_end_to_end_insert_query_delete():
+    """gather_scores runs under insert's ef-search, IPGMIndex.query, and the
+    GLOBAL delete repair when SearchParams.use_pallas is set."""
+    rng = np.random.default_rng(5)
+    sp = SearchParams(pool_size=12, max_steps=24, num_starts=2,
+                      beam_width=2, use_pallas=True)
+    p = IndexParams(capacity=96, dim=8, d_out=4, search=sp, query_chunk=32)
+    idx = IPGMIndex(p, strategy="global", seed=0, delete_chunk=16)
+    X = rng.normal(size=(64, 8)).astype(np.float32)
+    idx.insert(X)                      # ef-search through the Pallas path
+    idx.delete(np.arange(8))           # GLOBAL repair through the Pallas path
+    Q = rng.normal(size=(16, 8)).astype(np.float32)
+    ids, scores = idx.query(Q, k=5)    # query path
+    assert ids.shape == (16, 5)
+    assert not np.isin(np.asarray(ids), np.arange(8)).any()
+    assert idx.recall(Q, k=5) > 0.5

@@ -42,7 +42,8 @@ def test_compressed_psum_multi_device():
     def f(grads):
         return compressed_psum(grads, jax.random.PRNGKey(0), "d")
 
-    out = jax.jit(jax.shard_map(
+    from repro import compat
+    out = jax.jit(compat.shard_map(
         f, mesh=mesh,
         in_specs=(jax.sharding.PartitionSpec(),),
         out_specs=jax.sharding.PartitionSpec(),

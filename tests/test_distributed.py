@@ -12,6 +12,7 @@ import pytest
 SCRIPT = r"""
 import json
 import numpy as np, jax, jax.numpy as jnp
+from repro import compat
 from repro.distributed.ann import (DistParams, init_sharded_state,
                                    make_query_step, make_insert_step,
                                    make_delete_step)
@@ -26,7 +27,7 @@ state = init_sharded_state(dp, mesh)
 rng = np.random.default_rng(0)
 X = rng.normal(size=(200, 16)).astype(np.float32)
 route = np.arange(200).astype(np.int32)
-with jax.set_mesh(mesh):
+with compat.use_mesh(mesh):
     st, gids = make_insert_step(dp, mesh)(state, jnp.asarray(X),
                                           jnp.asarray(route),
                                           jax.random.PRNGKey(0))
@@ -53,7 +54,7 @@ with jax.set_mesh(mesh):
     # multi-pod replica mesh
     mesh3 = jax.make_mesh((2, 2, 2), ('pod', 'data', 'model'))
     dp3 = DistParams(index=ip, pod_axis='pod')
-with jax.set_mesh(mesh3):
+with compat.use_mesh(mesh3):
     st3 = init_sharded_state(dp3, mesh3)
     st3, gids3 = make_insert_step(dp3, mesh3)(st3, jnp.asarray(X[:80]),
                                               jnp.asarray(route[:80]),

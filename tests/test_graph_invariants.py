@@ -1,6 +1,8 @@
 """Property tests: graph invariants survive arbitrary op sequences (I1–I4)."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests need hypothesis;
+# skip (not error) where it is not baked into the image
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

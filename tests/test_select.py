@@ -1,6 +1,9 @@
 """SELECT-NEIGHBORS vs a literal brute-force transcription of Alg 2."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+pytest.importorskip("hypothesis")  # property tests need hypothesis;
+# skip (not error) where it is not baked into the image
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

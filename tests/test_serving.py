@@ -23,6 +23,74 @@ def test_batched_server_roundtrip():
     assert srv.stats["requests"] == 5 and srv.stats["batches"] == 1
 
 
+class _FakeTime:
+    """Deterministic clock that only advances when sleep() is called."""
+
+    def __init__(self):
+        self.now = 0.0
+        self.sleeps = []
+        self.on_sleep = None
+
+    def clock(self):
+        return self.now
+
+    def sleep(self, dt):
+        assert dt > 0, "sleep(<=0) would busy-spin"
+        self.sleeps.append(dt)
+        self.now += dt
+        if self.on_sleep is not None:
+            self.on_sleep(self.now)
+
+
+def _server(cfg, ft):
+    rng = np.random.default_rng(9)
+    X = rng.normal(size=(60, 8)).astype(np.float32)
+    idx = build_index(X, capacity=96)
+    return BatchedServer(idx, cfg, clock=ft.clock, sleep=ft.sleep)
+
+
+def test_drain_waits_for_late_arrivals():
+    """Regression: the max_wait_s branch used to be dead code (an empty
+    queue hit `break` immediately), so adaptive batching never waited."""
+    ft = _FakeTime()
+    srv = _server(ServeConfig(max_batch=4, max_wait_s=0.005, k=3), ft)
+    srv.submit(np.zeros(8, np.float32))
+
+    def late_arrival(now):
+        if now >= 0.002 and srv.stats.get("_arrived") is None:
+            srv.stats["_arrived"] = True
+            srv.submit(np.ones(8, np.float32))
+
+    ft.on_sleep = late_arrival
+    batch = srv._drain()
+    assert len(batch) == 2, "mid-window arrival must join the batch"
+    assert ft.now <= 0.005 + srv._POLL_S, "deadline overshot"
+
+
+def test_drain_deadline_bounded_and_not_spinning():
+    ft = _FakeTime()
+    srv = _server(ServeConfig(max_batch=4, max_wait_s=0.005, k=3), ft)
+    srv.submit(np.zeros(8, np.float32))
+    batch = srv._drain()
+    assert len(batch) == 1
+    # waited the full window (clock advanced to the deadline)...
+    assert abs(ft.now - 0.005) < 1e-9
+    # ...in bounded slices, not a hot spin
+    assert 0 < len(ft.sleeps) <= int(0.005 / srv._POLL_S) + 2
+    assert all(dt > 0 for dt in ft.sleeps)
+
+
+def test_drain_idle_and_full_batch_skip_the_wait():
+    ft = _FakeTime()
+    srv = _server(ServeConfig(max_batch=2, max_wait_s=0.005, k=3), ft)
+    assert srv._drain() == [] and not ft.sleeps, "idle queue must not block"
+    srv.submit(np.zeros(8, np.float32))
+    srv.submit(np.ones(8, np.float32))
+    srv.submit(np.zeros(8, np.float32))
+    assert len(srv._drain()) == 2 and not ft.sleeps, "full batch is immediate"
+    assert len(srv._queue) == 1
+
+
 def test_quorum_merge_degrades_gracefully():
     rng = np.random.default_rng(1)
     P, B, k = 8, 4, 10
