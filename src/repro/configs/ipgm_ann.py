@@ -73,5 +73,5 @@ SPEC = register(ArchSpec(
     shapes=SHAPES,
     input_specs=input_specs,
     notes="shard-per-device subgraphs; GLOBAL delete repair = batched "
-          "shard-local searches (DESIGN.md §4)",
+          "shard-local searches (DESIGN.md §5)",
 ))

@@ -15,6 +15,19 @@ denominated in "equivalent queries", which is the amortization argument of
                   u's vector, SELECT-NEIGHBORS over the global candidates,
                   out-edges replaced wholesale.
 
+Each repair strategy is split into a *plan* (which edges to splice/replace —
+shared verbatim between the vectorized and reference appliers, so parity
+tests compare pure edge-application semantics) and an *applier*. The
+vectorized appliers (DESIGN.md §4) group the planned edits per source row
+and apply them through the bulk primitive ``set_out_edges_batch`` — one
+forward scatter + one incremental reverse patch instead of O(B·d_in)
+sequential ``lax.cond`` chains. The sequential appliers are kept
+as ``delete_local_reference`` / ``delete_global_reference`` (strategy names
+accepted by ``delete_batch`` and ``IPGMIndex``) and pinned against the
+vectorized paths by ``tests/test_update_parity.py``. Under in-degree
+pressure the two differ only in *which* bounded subset of edges survives
+(scalar refusal vs deterministic truncation-by-rank — DESIGN.md §4).
+
 Ordering subtlety shared by LOCAL/GLOBAL: the deleted batch is first marked
 dead (``alive=False``) but kept *present* so repair searches can still route
 through it (Alg 6 searches on the not-yet-updated graph); edges are scrubbed
@@ -33,13 +46,17 @@ from repro.core.graph import (
     NULL,
     GraphState,
     add_edge,
+    group_by_destination,
+    pack_rows,
     remove_edge,
     scrub_edges_to,
     set_out_edges,
+    set_out_edges_batch,
 )
 from repro.core.params import IndexParams
 
 STRATEGIES = ("pure", "mask", "local", "global")
+REFERENCE_STRATEGIES = ("local_reference", "global_reference")
 
 
 def _dead_mask(state: GraphState, ids: jax.Array, valid: jax.Array) -> jax.Array:
@@ -106,13 +123,12 @@ def delete_mask(
 # LOCAL (Alg 5)
 # ---------------------------------------------------------------------------
 
-def delete_local(
-    state: GraphState, ids: jax.Array, valid: jax.Array, key, params: IndexParams
-) -> GraphState:
-    del key
-    valid = _precheck(state, ids, valid)
-    state = _mark_dead(state, ids, valid)
-    dead = _dead_mask(state, ids, valid)
+def _local_repair_plan(
+    state: GraphState, ids: jax.Array, valid: jax.Array, dead: jax.Array
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Alg 5 lines 3–6 for the whole batch: which edge each surviving
+    in-neighbor u of deleted x splices in. Returns (u, x, z, valid) flats of
+    length B·d_in. Shared by the vectorized and reference appliers."""
     B, d_in, d_out = ids.shape[0], state.d_in, state.d_out
 
     safe_ids = jnp.where(valid, ids, 0)
@@ -143,6 +159,60 @@ def delete_local(
         return picked[0]
 
     z_flat = jax.vmap(pick_one)(su, c_flat, u_valid)   # i32[B*d_in]
+    return u_flat, x_flat, z_flat, u_valid
+
+
+def delete_local(
+    state: GraphState, ids: jax.Array, valid: jax.Array, key, params: IndexParams
+) -> GraphState:
+    """LOCAL with the vectorized applier: splices grouped per u, one scatter."""
+    del key
+    valid = _precheck(state, ids, valid)
+    state = _mark_dead(state, ids, valid)
+    dead = _dead_mask(state, ids, valid)
+    cap, d_out = state.capacity, state.d_out
+    u_flat, _, z_flat, u_valid = _local_repair_plan(state, ids, valid, dead)
+
+    # group the planned additions per surviving row u (each u holds ≤ d_out
+    # lanes — one per deleted out-neighbor)
+    adds, touched_u = group_by_destination(
+        z_flat, u_flat, u_valid & (z_flat != NULL), cap, d_out
+    )
+    # compact frame over the ≤ B·d_in rows that actually gain an edge
+    R_u = min(ids.shape[0] * state.d_in, cap)
+    _, uid = jax.lax.top_k(touched_u.astype(jnp.int32), R_u)
+    u_ok = touched_u[uid]
+    uv = jnp.where(u_ok, uid, 0).astype(jnp.int32)
+    adds_rows = adds[uv]                                  # [R_u, d_out]
+    # dedup additions within a row (several x's may pick the same z for u)
+    eqa = (adds_rows[:, :, None] == adds_rows[:, None, :]) \
+        & (adds_rows != NULL)[:, :, None]
+    first = jnp.argmax(eqa, axis=2) == jnp.arange(d_out)[None, :]
+    adds_rows = jnp.where(first, adds_rows, NULL)
+    old_rows = state.adj[uv]
+    # drop additions already present in u's row ("already there" = success)
+    dup = jnp.any(adds_rows[:, :, None] == old_rows[:, None, :], axis=2)
+    adds_rows = jnp.where(dup, NULL, adds_rows)
+
+    # new row = (old row minus the dying x entries) ++ additions, truncated
+    # at d_out in that order — matching the sequential remove-then-add order
+    old_rows = jnp.where(
+        (old_rows != NULL) & dead[jnp.maximum(old_rows, 0)], NULL, old_rows
+    )
+    packed = pack_rows(jnp.concatenate([old_rows, adds_rows], axis=1))
+    state = set_out_edges_batch(state, uid, packed[:, :d_out], u_ok)
+    return _finalize_removal(state, ids, valid)
+
+
+def delete_local_reference(
+    state: GraphState, ids: jax.Array, valid: jax.Array, key, params: IndexParams
+) -> GraphState:
+    """LOCAL with the pre-refactor sequential applier (parity oracle)."""
+    del key
+    valid = _precheck(state, ids, valid)
+    state = _mark_dead(state, ids, valid)
+    dead = _dead_mask(state, ids, valid)
+    u_flat, x_flat, z_flat, u_valid = _local_repair_plan(state, ids, valid, dead)
 
     # apply: remove (u → x) first (frees the row slot), then add (u → z)
     def body(i, st):
@@ -156,7 +226,7 @@ def delete_local(
             )
         return jax.lax.cond(u_valid[i], splice, lambda s: s, st)
 
-    state = jax.lax.fori_loop(0, B * d_in, body, state)
+    state = jax.lax.fori_loop(0, u_flat.shape[0], body, state)
     return _finalize_removal(state, ids, valid)
 
 
@@ -164,12 +234,17 @@ def delete_local(
 # GLOBAL (Alg 6) — the paper's recommended strategy
 # ---------------------------------------------------------------------------
 
-def delete_global(
-    state: GraphState, ids: jax.Array, valid: jax.Array, key, params: IndexParams
-) -> GraphState:
-    valid = _precheck(state, ids, valid)
-    state = _mark_dead(state, ids, valid)
-    dead = _dead_mask(state, ids, valid)
+def _global_repair_plan(
+    state: GraphState,
+    ids: jax.Array,
+    valid: jax.Array,
+    dead: jax.Array,
+    key,
+    params: IndexParams,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Alg 6 lines 3–6 for the whole batch: the unique surviving in-neighbors
+    and their wholesale replacement rows. Returns (u_flat, u_valid,
+    new_nbrs). Shared by the vectorized and reference appliers."""
     B, d_in = ids.shape[0], state.d_in
 
     # ---- collect the unique surviving in-neighbors of the whole batch ----
@@ -198,19 +273,47 @@ def delete_global(
         state, u_vecs, starts, sp
     )  # alive-only candidates — deleted batch is already non-alive
 
-    # ---- SELECT-NEIGHBORS(u, C, d, {x_i}) and wholesale edge replacement ----
+    # ---- SELECT-NEIGHBORS(u, C, d, {x_i}) ----
     new_nbrs = jax.vmap(
         lambda u, vec, cids: select.select_from_pool(
             state, vec, cids, params.d_out, exclude=u[None]
         )
     )(su, u_vecs, res.ids)                              # i32[B*d_in, d_out]
+    return u_flat, u_valid, new_nbrs
+
+
+def delete_global(
+    state: GraphState, ids: jax.Array, valid: jax.Array, key, params: IndexParams
+) -> GraphState:
+    """GLOBAL with the vectorized applier: wholesale row replacement of every
+    repaired u in one ``set_out_edges_batch`` scatter."""
+    valid = _precheck(state, ids, valid)
+    state = _mark_dead(state, ids, valid)
+    dead = _dead_mask(state, ids, valid)
+    u_flat, u_valid, new_nbrs = _global_repair_plan(
+        state, ids, valid, dead, key, params
+    )
+    state = set_out_edges_batch(state, u_flat, new_nbrs, u_valid)
+    return _finalize_removal(state, ids, valid)
+
+
+def delete_global_reference(
+    state: GraphState, ids: jax.Array, valid: jax.Array, key, params: IndexParams
+) -> GraphState:
+    """GLOBAL with the pre-refactor sequential applier (parity oracle)."""
+    valid = _precheck(state, ids, valid)
+    state = _mark_dead(state, ids, valid)
+    dead = _dead_mask(state, ids, valid)
+    u_flat, u_valid, new_nbrs = _global_repair_plan(
+        state, ids, valid, dead, key, params
+    )
 
     def body(i, st):
         def repair(s):
             return set_out_edges(s, u_flat[i], new_nbrs[i])
         return jax.lax.cond(u_valid[i], repair, lambda s: s, st)
 
-    state = jax.lax.fori_loop(0, B * d_in, body, state)
+    state = jax.lax.fori_loop(0, u_flat.shape[0], body, state)
     return _finalize_removal(state, ids, valid)
 
 
@@ -219,6 +322,8 @@ _STRATEGY_FNS = {
     "mask": delete_mask,
     "local": delete_local,
     "global": delete_global,
+    "local_reference": delete_local_reference,
+    "global_reference": delete_global_reference,
 }
 
 

@@ -7,8 +7,10 @@ Invariants maintained by every public op (property-tested in
 ``tests/test_graph_invariants.py``):
 
   I1  G' == reverse(G): edge (u→v) is in ``adj[u]`` iff u is in ``radj[v]``.
-      Edge insertion REFUSES (drops the edge) when ``radj[v]`` is full, so
-      the invariant never breaks (see DESIGN.md §2, bounded in-degree).
+      Scalar edge insertion REFUSES (drops the edge) when ``radj[v]`` is
+      full; the bulk primitives instead keep the first ``d_in`` in-edges by
+      deterministic rank and drop the overflow from ``adj`` too — either
+      way the invariant never breaks (DESIGN.md §2/§4, bounded in-degree).
   I2  adjacency entries are either -1 or the id of a *present* slot.
   I3  a slot is ``alive`` ⇒ it is ``present``; MASK-deleted slots are
       present but not alive (traversable, never reported).
@@ -159,6 +161,224 @@ def set_out_edges(state: GraphState, u: jax.Array, targets: jax.Array) -> GraphS
         )
 
     return jax.lax.fori_loop(0, min(d_out, targets.shape[0]), add_one, state)
+
+
+# ---------------------------------------------------------------------------
+# Bulk edge primitives (DESIGN.md §4) — the scatter-based application path of
+# the vectorized update engine. Instead of per-edge add/remove chains, callers
+# compute whole out-rows, scatter them into ``adj`` in one shot, and have the
+# affected reverse rows recomputed from ``adj`` in a single sort/segment pass.
+# ---------------------------------------------------------------------------
+
+def rebuild_radj_rows(state: GraphState, touched: jax.Array) -> GraphState:
+    """Recompute ``radj[v]`` from ``adj`` for every v in the ``touched`` mask.
+
+    ``touched``: bool[capacity]. One vectorized pass: flatten ``adj`` into
+    (src, dst) edge lists, rank each in-edge within its destination by a
+    stable sort on dst (rank order == flat ``adj`` order == (src id, slot)
+    lexicographic), and scatter the first ``d_in`` per destination into the
+    cleared touched rows.
+
+    Bounded in-degree (DESIGN.md §2) becomes deterministic
+    **truncation-by-rank** here: in-edges ranked ≥ ``d_in`` are dropped from
+    ``adj`` as well, so I1 holds exactly. This replaces the scalar path's
+    refuse-the-newcomer rule — under in-degree pressure the two paths keep
+    different (equally sized) edge subsets, which the parity suite bounds.
+
+    Untouched rows are byte-identical on exit. Scatter-free: rows are
+    *gathered* out of the sorted edge list (XLA scatter serializes per
+    update on CPU; segment gathers stay vectorized).
+    """
+    cap, d_out, d_in = state.capacity, state.d_out, state.d_in
+    src = jnp.broadcast_to(
+        jnp.arange(cap, dtype=jnp.int32)[:, None], (cap, d_out)
+    ).reshape(-1)
+    dst = state.adj.reshape(-1)
+    E = dst.shape[0]
+    ok = (dst != NULL) & touched[jnp.maximum(dst, 0)]
+    # stable sort on dst (invalid lanes sink past every real id): the
+    # in-edges of v occupy the contiguous segment [start[v], end[v]), in
+    # (source id, slot) lexicographic order — the truncation rank order
+    key_dst = jnp.where(ok, dst, cap)
+    order = jnp.argsort(key_dst, stable=True)
+    sorted_key = key_dst[order]
+    sorted_src = src[order]
+    vids = jnp.arange(cap, dtype=key_dst.dtype)
+    start = jnp.searchsorted(sorted_key, vids, side="left")
+    end = jnp.searchsorted(sorted_key, vids, side="right")
+    # gather the first d_in in-edges of every touched row
+    idx = start[:, None] + jnp.arange(d_in)[None, :]
+    take = (idx < end[:, None]) & touched[:, None]
+    vals = jnp.where(take, sorted_src[jnp.clip(idx, 0, E - 1)], NULL)
+    radj = jnp.where(touched[:, None], vals, state.radj)
+    # drop forward edges whose reverse overflowed (keeps I1 exact):
+    # per-lane rank = sorted position − segment start
+    inv = jnp.argsort(order)  # lane → sorted position
+    rank = inv - start[jnp.clip(key_dst, 0, cap - 1)]
+    drop = ok & (rank >= d_in)
+    adj = jnp.where(drop, NULL, dst).reshape(cap, d_out)
+    return dataclasses.replace(state, adj=adj, radj=radj)
+
+
+def apply_row_updates(
+    state: GraphState,
+    us: jax.Array,        # i32[R]        rows to replace (unique where valid)
+    new_rows: jax.Array,  # i32[R, d_out] sanitized new out-rows, NULL padded
+    valid: jax.Array,     # bool[R]
+) -> GraphState:
+    """Incremental scatter-based edge application (the hot-path applier).
+
+    Writes the forward rows with one OOB-dropping scatter and *patches*
+    ``radj`` instead of recomputing it: removals are found by testing every
+    reverse entry against its (possibly rewritten) source row — pure
+    gathers — and additions are grouped by destination with one small sort
+    over the R·d_out addition lanes, then slotted into the NULL holes of
+    their reverse rows via a cumsum ranking. No sort over the full edge
+    table (XLA's O(cap·d_out) sort/scatter is what made the naive rebuild
+    CPU-bound).
+
+    Bounded in-degree: existing in-edges keep priority; additions are
+    admitted into the remaining holes in deterministic group order and
+    **refused** beyond that (the forward entry is dropped too, so I1 holds
+    exactly — same semantics family as scalar ``add_edge`` refusal, minus
+    the sequential arrival order).
+
+    ``new_rows`` must already be sanitized (no self edges / dups /
+    non-present targets) — use ``set_out_edges_batch`` for the checked
+    wrapper. Valid ``us`` must be unique.
+    """
+    cap, d_out, d_in = state.capacity, state.d_out, state.d_in
+    R = us.shape[0]
+    valid = valid & (us != NULL)
+    su = jnp.where(valid, us, 0)
+    wsu = jnp.where(valid, us, cap)  # OOB parks invalid lanes (mode="drop")
+    old_rows = jnp.where(valid[:, None], state.adj[su], NULL)
+    new_rows = jnp.where(valid[:, None], new_rows, NULL)
+
+    # ---- removals: reverse entry (v, i) = u dies iff u's row was rewritten
+    # and v is no longer in it (I1 guarantees the entry matched adj before)
+    row_of = jnp.full((cap + 1,), -1, jnp.int32).at[wsu].set(
+        jnp.arange(R, dtype=jnp.int32), mode="drop"
+    )[:cap]
+    rv = state.radj
+    r_idx = jnp.where(rv != NULL, row_of[jnp.maximum(rv, 0)], -1)
+    nr = new_rows[jnp.maximum(r_idx, 0)]          # [cap, d_in, d_out]
+    still = jnp.any(nr == jnp.arange(cap)[:, None, None], axis=2)
+    radj1 = jnp.where((r_idx >= 0) & ~still, NULL, rv)
+
+    # ---- additions: edges in new_rows but not old_rows, grouped by dest —
+    # one sort over R·d_out lanes only
+    add_m = (new_rows != NULL) & ~jnp.any(
+        new_rows[:, :, None] == old_rows[:, None, :], axis=2
+    )
+    src = jnp.broadcast_to(su[:, None], (R, d_out)).reshape(-1)
+    dst = new_rows.reshape(-1)
+    add_flat = add_m.reshape(-1)
+    E = dst.shape[0]
+    key_dst = jnp.where(add_flat, dst, cap)
+    order = jnp.argsort(key_dst, stable=True)
+    sorted_key = key_dst[order]
+    sorted_src = src[order]
+    vids = jnp.arange(cap, dtype=key_dst.dtype)
+    start = jnp.searchsorted(sorted_key, vids, side="left")
+    end = jnp.searchsorted(sorted_key, vids, side="right")
+    idx = start[:, None] + jnp.arange(d_in)[None, :]
+    add_rows = jnp.where(
+        idx < end[:, None], sorted_src[jnp.clip(idx, 0, E - 1)], NULL
+    )                                              # [cap, d_in] rank order
+
+    # admit additions into the holes left after removals; refuse the rest.
+    # A lane's group rank is its position in add_rows[v] (sources are unique
+    # per destination), so refusal is a compare — no inverse-permutation sort
+    holes = d_in - jnp.sum(radj1 != NULL, axis=1)  # [cap]
+    ar = add_rows[jnp.clip(new_rows, 0, cap - 1)]  # [R, d_out, d_in]
+    match = ar == su[:, None, None]
+    past_holes = (
+        jnp.arange(d_in)[None, None, :]
+        >= holes[jnp.clip(new_rows, 0, cap - 1)][:, :, None]
+    )
+    # refused: admitted past the holes, or ranked ≥ d_in (never grouped)
+    refused = add_m & (
+        jnp.any(match & past_holes, axis=2) | ~jnp.any(match, axis=2)
+    )
+    final_rows = jnp.where(refused, NULL, new_rows)
+    adj = state.adj.at[wsu].set(final_rows, mode="drop")
+
+    # fill the holes, in group-rank order (hole h takes addition h; holes
+    # are counted by a per-row cumsum, so no per-row sort is needed)
+    isnull = radj1 == NULL
+    hole_rank = jnp.cumsum(isnull.astype(jnp.int32), axis=1) - 1
+    fill = jnp.take_along_axis(
+        add_rows, jnp.clip(hole_rank, 0, d_in - 1), axis=1
+    )
+    radj2 = jnp.where(isnull, fill, radj1)
+    return dataclasses.replace(state, adj=adj, radj=radj2)
+
+
+def set_out_edges_batch(
+    state: GraphState,
+    us: jax.Array,        # i32[R]        rows to replace (unique where valid)
+    targets: jax.Array,   # i32[R, d_out] new out-rows, NULL padded
+    valid: jax.Array,     # bool[R]       rows to actually apply
+) -> GraphState:
+    """Replace the out-neighborhoods of all ``us`` rows in one scatter.
+
+    The batched twin of ``set_out_edges``: rows are sanitized (self edges,
+    in-row duplicates, non-present targets → NULL) and applied through
+    ``apply_row_updates`` (one forward scatter + incremental reverse-row
+    patch). Valid rows must be unique — duplicate row ids in one call make
+    the scatter order undefined.
+    """
+    valid = valid & (us != NULL)
+    su = jnp.where(valid, us, 0)
+    tg = targets[:, : state.d_out]
+    if tg.shape[1] < state.d_out:
+        pad = jnp.full((tg.shape[0], state.d_out - tg.shape[1]), NULL, jnp.int32)
+        tg = jnp.concatenate([tg, pad], axis=1)
+    tv = (tg != NULL) & valid[:, None]
+    tv = tv & state.present[jnp.where(tv, tg, 0)]
+    tg = jnp.where(tv & (tg != su[:, None]), tg, NULL)
+    # in-row dedup (keep first occurrence)
+    eq = tg[:, :, None] == tg[:, None, :]
+    eq = eq & (tg != NULL)[:, :, None]
+    first = jnp.argmax(eq, axis=2) == jnp.arange(tg.shape[1])[None, :]
+    tg = jnp.where(first, tg, NULL)
+    return apply_row_updates(state, us, tg, valid)
+
+
+def pack_rows(rows: jax.Array) -> jax.Array:
+    """Compact non-NULL entries of each row to the left, preserving order."""
+    order = jnp.argsort(rows == NULL, axis=1, stable=True)
+    return jnp.take_along_axis(rows, order, axis=1)
+
+
+def group_by_destination(
+    src: jax.Array,       # i32[E]  edge sources
+    dst: jax.Array,       # i32[E]  edge destinations
+    valid: jax.Array,     # bool[E]
+    capacity: int,
+    max_per_row: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Scatter an edge list into per-destination rows.
+
+    Returns (rows i32[capacity, max_per_row] NULL padded, touched
+    bool[capacity]). Edges ranked ≥ ``max_per_row`` within their destination
+    are dropped (rank order = input order, deterministic). The grouping
+    engine behind back-link application and LOCAL splice batching.
+    Scatter-free (segment gather from the sorted edge list).
+    """
+    E = dst.shape[0]
+    key_dst = jnp.where(valid, dst, capacity)
+    order = jnp.argsort(key_dst, stable=True)
+    sorted_key = key_dst[order]
+    sorted_src = jnp.where(valid, src, NULL)[order]
+    vids = jnp.arange(capacity, dtype=key_dst.dtype)
+    start = jnp.searchsorted(sorted_key, vids, side="left")
+    end = jnp.searchsorted(sorted_key, vids, side="right")
+    idx = start[:, None] + jnp.arange(max_per_row)[None, :]
+    take = idx < end[:, None]
+    rows = jnp.where(take, sorted_src[jnp.clip(idx, 0, E - 1)], NULL)
+    return rows.astype(jnp.int32), end > start
 
 
 # ---------------------------------------------------------------------------

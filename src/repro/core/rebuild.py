@@ -22,14 +22,26 @@ def build_graph(
     vectors: jax.Array,    # f32[n, dim]
     key: jax.Array,
     params: IndexParams,
+    chunk: int = 64,
 ) -> GraphState:
-    """Incremental construction: insert every row sequentially (paper's way)."""
+    """Incremental construction (paper's way), chunked through the
+    vectorized insert pipeline: each ``chunk``-sized micro-batch searches
+    the graph-built-so-far snapshot (DESIGN.md §4)."""
     state = init_graph(
         params.capacity, params.dim, d_out=params.d_out,
         d_in=params.eff_d_in, metric=params.metric, dtype=vectors.dtype,
     )
-    valid = jnp.ones((vectors.shape[0],), bool)
-    state, _ = insert.insert_batch(state, vectors, valid, key, params)
+    n = vectors.shape[0]
+    for i, lo in enumerate(range(0, n, chunk)):
+        part = vectors[lo:lo + chunk]
+        if part.shape[0] < chunk:
+            pad = jnp.zeros((chunk - part.shape[0],) + part.shape[1:],
+                            part.dtype)
+            part = jnp.concatenate([part, pad])
+        valid = jnp.arange(chunk) < (n - lo)
+        state, _ = insert.insert_batch(
+            state, part, valid, jax.random.fold_in(key, i), params
+        )
     return state
 
 

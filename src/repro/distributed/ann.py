@@ -1,6 +1,6 @@
 """Sharded online ANN index — the paper's system at 256–512+ chips.
 
-Layout (DESIGN.md §4): shard-per-device subgraphs. Each device on the
+Layout (DESIGN.md §5): shard-per-device subgraphs. Each device on the
 flattened ('data','model') axes owns ``cap_local`` slots and an independent
 proximity graph over them; there are NO cross-shard edges, so the paper's
 delete/repair algorithms run unmodified (and fully parallel) inside every
@@ -10,7 +10,10 @@ shard. The 'pod' axis holds index replicas and shards the query stream
   query : queries replicated within a pod → every shard beam-searches its
           subgraph → all_gather(k per shard) → top-k merge. Collective bytes
           per query = P·k·8 — independent of index size.
-  insert: routed by hash → SPMD masked insert (only the owner's mask is hot).
+  insert: routed by hash → SPMD masked insert (only the owner's mask is
+          hot) through the vectorized insert pipeline (DESIGN.md §4): every
+          shard runs ONE batched search + scatter edge application for its
+          routed slice, inline inside shard_map (no nested jit).
   delete: global id = shard·cap_local + local id → owner-masked
           delete_batch with the configured strategy (GLOBAL repair searches
           are shard-local by construction).
@@ -152,7 +155,10 @@ def make_insert_step(dp: DistParams, mesh):
             n_shards *= compat.axis_size(a)
         mine = (route % n_shards) == shard
         key = jax.random.fold_in(key, shard)
-        state, ids = insert_mod.insert_batch(state, vecs, mine, key, dp.index)
+        # traceable impl, not the jitted wrapper: runs inline in shard_map
+        state, ids = insert_mod.insert_batch_impl(
+            state, vecs, mine, key, dp.index
+        )
         gids = jnp.where(ids != NULL, ids + shard * dp.index.capacity, NULL)
         # owner announces its assigned gid; everyone else holds NULL(-1);
         # pmax is exact since real gids are >= 0

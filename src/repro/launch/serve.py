@@ -2,7 +2,7 @@
 
 Consumes an (op, payload) stream against a (optionally sharded) IPGM index
 with request batching, per-phase latency books, and quorum degradation: a
-straggling/lost shard only costs its own partial results (DESIGN.md §4).
+straggling/lost shard only costs its own partial results (DESIGN.md §5).
 
     PYTHONPATH=src python -m repro.launch.serve --scale 2000 --steps 3
 """

@@ -7,7 +7,7 @@ table-wise model parallelism is a single sharding annotation on axis 0.
 
 ``retrieval_cand`` (1 query × 10⁶ candidates) routes through the Pallas
 ``score_topk`` kernel — the same brute-force scorer the ANN index uses,
-which is exactly the paper's serving integration (DESIGN.md §5).
+which is exactly the paper's serving integration (DESIGN.md §6).
 """
 from __future__ import annotations
 

@@ -1,6 +1,6 @@
 """Request batching + quorum degradation — the online serving front-end.
 
-Two production behaviours the 1000-node story needs (DESIGN.md §4):
+Two production behaviours the 1000-node story needs (DESIGN.md §5):
 
   · **adaptive batching** — requests accumulate until ``max_batch`` or
     ``max_wait_s``; the device step always runs at a pad-stable shape so

@@ -72,6 +72,42 @@ def test_capacity_full_insert_refuses():
     assert not check_invariants(idx.state)
 
 
+@settings(max_examples=8, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    strategy=st.sampled_from(["pure", "local", "global"]),
+    batch=st.sampled_from([1, 7, 16]),
+)
+def test_batched_update_sequences_invariants(seed, strategy, batch):
+    """Random batched insert→delete→insert sequences through the vectorized
+    update engine (bulk edge primitives): I1 (adj/radj mirror), I4 (no
+    dup/self edges), and degree bounds must hold after every step."""
+    rng = np.random.default_rng(seed)
+    idx = build_index(
+        rng.normal(size=(40, 8)).astype(np.float32),
+        strategy=strategy, capacity=96,
+    )
+    idx.insert_chunk = batch  # drive the pipeline at this micro-batch size
+
+    def assert_healthy():
+        errs = check_invariants(idx.state)
+        assert not errs, errs[:5]
+        adj = np.asarray(idx.state.adj)
+        radj = np.asarray(idx.state.radj)
+        assert (np.sum(adj != NULL, axis=1) <= idx.state.d_out).all()
+        assert (np.sum(radj != NULL, axis=1) <= idx.state.d_in).all()
+
+    for step in range(3):
+        alive_ids = np.flatnonzero(np.asarray(idx.state.alive))
+        n_del = min(len(alive_ids), int(rng.integers(1, 12)))
+        idx.delete(rng.choice(alive_ids, size=n_del, replace=False))
+        assert_healthy()
+        n_ins = int(rng.integers(1, 14))
+        ids = idx.insert(rng.normal(size=(n_ins, 8)).astype(np.float32))
+        assert (np.asarray(ids) != NULL).all()
+        assert_healthy()
+
+
 def test_delete_then_reinsert_no_stale_edges():
     """Reused slots must not inherit stale in-edges (the ABA hazard)."""
     rng = np.random.default_rng(5)
