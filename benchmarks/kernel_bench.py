@@ -28,6 +28,7 @@ Usage: python benchmarks/kernel_bench.py [--smoke] [--out BENCH_search.json]
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import pathlib
 import time
@@ -50,6 +51,7 @@ SMOKE_SHAPES = [("smoke_block", 512, 32, 64, 10)]
 _ROOT = pathlib.Path(__file__).resolve().parent.parent
 DEFAULT_OUT = _ROOT / "BENCH_search.json"
 DEFAULT_UPDATE_OUT = _ROOT / "BENCH_update.json"
+DEFAULT_STREAM_OUT = _ROOT / "BENCH_stream.json"
 
 
 def _time(f, *args, iters=3):
@@ -342,6 +344,161 @@ def _build_update_index(n, dim, params):
     return state, rng
 
 
+# ---------------------------------------------------------------------------
+# mixed-stream session API vs per-op facade (BENCH_stream.json)
+# ---------------------------------------------------------------------------
+
+def _stream_mix(rng, n, dim, batch, rounds, alive_ids):
+    """§6-flavored serving mix: per round 8 query ops, 1 insert op, 1 delete
+    op (batch items each), interleaved. Returns [(op, payload), ...]."""
+    ops = []
+    victims = rng.choice(alive_ids, size=(rounds, batch), replace=False)
+    for r in range(rounds):
+        qs = [rng.normal(size=(batch, dim)).astype(np.float32)
+              for _ in range(8)]
+        ins = rng.normal(size=(batch, dim)).astype(np.float32)
+        ops += [("query", q) for q in qs[:4]]
+        ops += [("insert", ins), ("query", qs[4]), ("query", qs[5]),
+                ("delete", victims[r].astype(np.int32)),
+                ("query", qs[6]), ("query", qs[7])]
+    return ops
+
+
+def run_stream(smoke: bool = False) -> dict:
+    """Mixed-stream throughput: streaming Session (async, op IR, donated
+    state) vs the per-op IPGMIndex facade (sync per op, ``query_chunk``
+    padding) on the same op stream, parity-checked — the DESIGN.md §7
+    acceptance number (target ≥ 1.5× items/s on the serving mix).
+    """
+    from repro.core import (
+        IndexParams, IPGMIndex, MaintenanceParams, SearchParams, Session,
+    )
+
+    n, dim, d_out, pool = (256, 16, 6, 16) if smoke else (8192, 64, 12, 32)
+    batch = 16 if smoke else 64
+    rounds = 1 if smoke else 2
+    strategies = ("mask", "local", "global")
+
+    base_params = IndexParams(
+        capacity=n + 4 * batch * rounds, dim=dim, d_out=d_out,
+        search=SearchParams(pool_size=pool, max_steps=3 * pool, num_starts=2,
+                            use_pallas=False),
+    )
+    state0, rng = _build_update_index(n, dim, base_params)
+    mix = _stream_mix(np.random.default_rng(7), n, dim, batch, rounds,
+                      np.arange(n))
+    n_items = sum(p.shape[0] for _, p in mix)
+
+    def copy_state():
+        return jax.tree.map(jnp.array, state0)
+
+    def drive_facade(idx):
+        out = []
+        for op, payload in mix:
+            if op == "query":
+                out.append(idx.query(payload))
+            elif op == "insert":
+                idx.insert(payload)
+            else:
+                idx.delete(payload)
+        return out
+
+    def drive_session(sess):
+        """Dispatch the whole stream, then consume every result — the timed
+        region covers the same device-to-host materialization the facade
+        pays inline, so the comparison is end-to-end on both sides."""
+        handles = [
+            (sess.query(p) if op == "query" else
+             sess.insert(p) if op == "insert" else sess.delete(p))
+            for op, p in mix
+        ]
+        results = [h.result() for h in handles]
+        sess.flush()
+        return results
+
+    rows = []
+    summaries = {}
+    for strategy in strategies:
+        params = dataclasses.replace(
+            base_params, maintenance=MaintenanceParams(
+                strategy=strategy, insert_chunk=batch, delete_chunk=batch)
+        )
+        # warm both paths (compile) on throwaway copies, then time fresh runs
+        idx_w = IPGMIndex(params, seed=0, state=copy_state())
+        drive_facade(idx_w)
+        t0 = time.perf_counter()
+        idx = IPGMIndex(params, seed=0, state=copy_state())
+        f_results = drive_facade(idx)
+        t_facade = time.perf_counter() - t0
+
+        sess_w = Session(params, seed=0, state=copy_state())
+        drive_session(sess_w)
+        t0 = time.perf_counter()
+        sess = Session(params, seed=0, state=copy_state())
+        s_results = drive_session(sess)
+        t_session = time.perf_counter() - t0
+
+        # ---- parity: same query ids/scores at every stream position, same
+        # graph after the stream
+        parity_ids = parity_scores = True
+        s_queries = [r for (op, _), r in zip(mix, s_results) if op == "query"]
+        for (f_ids, f_scores), (s_ids, s_scores) in zip(f_results, s_queries):
+            parity_ids &= bool(np.array_equal(np.asarray(f_ids), s_ids))
+            parity_scores &= bool(
+                np.allclose(f_scores, s_scores, rtol=1e-5, atol=1e-6))
+        alive_equal = bool(np.array_equal(
+            np.asarray(idx.state.alive), np.asarray(sess.state.alive)))
+        adj_equal = bool(np.array_equal(
+            np.asarray(idx.state.adj), np.asarray(sess.state.adj)))
+
+        row = {
+            "strategy": strategy,
+            "n_ops": len(mix),
+            "n_items": n_items,
+            "facade_items_per_s": n_items / t_facade,
+            "session_items_per_s": n_items / t_session,
+            "speedup": t_facade / t_session,
+            "parity": {
+                "query_ids_equal": parity_ids,
+                "query_scores_close": parity_scores,
+                "alive_set_equal": alive_equal,
+                "adj_equal": adj_equal,
+            },
+        }
+        rows.append(row)
+        summaries[strategy] = sess.timers.to_dict()
+        print(f"stream/{strategy:6s} facade={row['facade_items_per_s']:9.1f}/s "
+              f"session={row['session_items_per_s']:9.1f}/s "
+              f"speedup={row['speedup']:.2f}x parity={parity_ids and alive_equal}")
+
+    record = {
+        "config": {
+            "n": n, "dim": dim, "d_out": d_out, "pool_size": pool,
+            "batch": batch, "rounds": rounds,
+            "mix": "per round: 8 query / 1 insert / 1 delete ops",
+            "smoke": smoke, "backend": jax.default_backend(),
+        },
+        "rows": rows,
+        "session_timers": summaries,
+        "speedup_vs_facade": {r["strategy"]: r["speedup"] for r in rows},
+        "headline": max(
+            ({"strategy": r["strategy"], "speedup": r["speedup"],
+              "parity_ok": all(r["parity"].values())} for r in rows),
+            key=lambda h: h["speedup"],
+        ),
+        "notes": [
+            "facade = per-op IPGMIndex (sync per op; queries padded to "
+            "query_chunk=256, its documented compile-shape contract since "
+            "the seed/PR-2 API — part of what the session's right-sized "
+            "op-IR chunks remove); session = streaming op-IR dispatch, "
+            "every result materialized inside the timed region, one flush. "
+            "GLOBAL rows are repair-search-bound (the delete op dominates "
+            "device time), so the API-layer speedup is smallest there.",
+        ],
+    }
+    return record
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
@@ -351,6 +508,9 @@ def main(argv=None):
     ap.add_argument("--update-out", type=pathlib.Path,
                     default=DEFAULT_UPDATE_OUT,
                     help="where to write the update-engine record")
+    ap.add_argument("--stream-out", type=pathlib.Path,
+                    default=DEFAULT_STREAM_OUT,
+                    help="where to write the mixed-stream session record")
     args = ap.parse_args(argv)
     kernel_rows = run(SMOKE_SHAPES if args.smoke else SHAPES)
     record = run_search(smoke=args.smoke)
@@ -362,6 +522,10 @@ def main(argv=None):
     args.update_out.parent.mkdir(parents=True, exist_ok=True)
     args.update_out.write_text(json.dumps(update_record, indent=2) + "\n")
     print(f"wrote {args.update_out}")
+    stream_record = run_stream(smoke=args.smoke)
+    args.stream_out.parent.mkdir(parents=True, exist_ok=True)
+    args.stream_out.write_text(json.dumps(stream_record, indent=2) + "\n")
+    print(f"wrote {args.stream_out}")
 
 
 if __name__ == "__main__":

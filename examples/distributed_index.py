@@ -14,17 +14,11 @@ os.environ["XLA_FLAGS"] = (
 )
 
 import jax  # noqa: E402
-import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
+from repro import compat  # noqa: E402
 from repro.core.params import IndexParams, SearchParams  # noqa: E402
-from repro.distributed.ann import (  # noqa: E402
-    DistParams,
-    init_sharded_state,
-    make_delete_step,
-    make_insert_step,
-    make_query_step,
-)
+from repro.distributed.ann import DistParams, ShardedSession  # noqa: E402
 
 mesh = jax.make_mesh((4, 2), ("data", "model"))
 dp = DistParams(index=IndexParams(
@@ -33,22 +27,20 @@ dp = DistParams(index=IndexParams(
 ))
 rng = np.random.default_rng(0)
 
-with jax.set_mesh(mesh):
-    state = init_sharded_state(dp, mesh)
+with compat.use_mesh(mesh):
+    # the sharded session owns the stacked per-shard state (donated through
+    # every update step) and dispatches ops async — flush() to synchronize
+    sess = ShardedSession(dp, mesh, strategy="global", seed=0)
     X = rng.normal(size=(400, 32)).astype(np.float32)
-    state, gids = make_insert_step(dp, mesh)(
-        state, jnp.asarray(X), jnp.arange(400, dtype=jnp.int32),
-        jax.random.PRNGKey(0),
-    )
+    gids = sess.insert(X, np.arange(400))
     print("inserted:", int((np.asarray(gids) >= 0).sum()), "across",
           mesh.devices.size, "shards")
 
-    Q = jnp.asarray(rng.normal(size=(16, 32)).astype(np.float32))
-    ids, scores = make_query_step(dp, mesh)(state, Q, jax.random.PRNGKey(1))
+    Q = rng.normal(size=(16, 32)).astype(np.float32)
+    ids, scores = sess.query(Q)
     print("query results (global ids):", np.asarray(ids)[0, :5])
 
-    state = make_delete_step(dp, mesh, "global")(
-        state, jnp.asarray(np.asarray(gids)[:100]), jax.random.PRNGKey(2),
-    )
-    print("alive after GLOBAL delete of 100:",
-          int(np.asarray(jax.device_get(state.alive)).sum()))
+    sess.delete(np.asarray(gids)[:100])
+    sess.flush()
+    print("alive after GLOBAL delete of 100:", sess.n_alive())
+    print("timers:", sess.timers.to_dict())

@@ -1,34 +1,45 @@
-"""Quickstart: build an online ANN index, query it, delete with GLOBAL
-reconnect, and watch recall survive the churn.
+"""Quickstart: stream queries, inserts and GLOBAL-reconnect deletes through
+one device-resident session, and watch recall survive the churn.
+
+The session API (DESIGN.md §7) dispatches every op asynchronously through a
+single jitted, state-donating step — ops return handles, the host syncs on
+``flush()`` / ``handle.result()``.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core import IndexParams, IPGMIndex, SearchParams
+from repro.core import IndexParams, MaintenanceParams, SearchParams, Session
 
 rng = np.random.default_rng(0)
 
-# 1. an index with capacity for 2k vectors of dim 64
+# 1. a session with capacity for 2k vectors of dim 64
 params = IndexParams(
     capacity=2048, dim=64, d_out=12,
     search=SearchParams(pool_size=32, max_steps=96, num_starts=2),
+    maintenance=MaintenanceParams(strategy="global"),  # paper's recommendation
 )
-index = IPGMIndex(params, strategy="global")  # the paper's recommended repair
+session = Session(params)
 
-# 2. insert a base set
+# 2. insert a base set — `insert` returns a handle immediately; `.result()`
+#    blocks and hands back the assigned ids
 X = rng.normal(size=(1000, 64)).astype(np.float32)
-ids = index.insert(X)
-print("inserted:", index.stats())
+ids = session.insert(X).result()
+print("inserted:", session.stats())
 
-# 3. query
+# 3. query — same deal: dispatch now, consume whenever
 Q = rng.normal(size=(64, 64)).astype(np.float32)
-found_ids, scores = index.query(Q, k=10)
-print(f"recall@10 before churn: {index.recall(Q, k=10):.3f}")
+found_ids, scores = session.query(Q, k=10).result()
+print(f"recall@10 before churn: {session.recall(Q, k=10):.3f}")
 
-# 4. online churn: delete 200, insert 200 fresh — GLOBAL reconnect repairs
-#    the in-neighbors of every deleted vertex by re-searching the graph
-index.delete(np.asarray(ids)[:200])
-index.insert(rng.normal(size=(200, 64)).astype(np.float32))
-print(f"recall@10 after churn:  {index.recall(Q, k=10):.3f}")
-print("timers:", index.timers)
+# 4. online churn: delete 200 + insert 200 fresh, dispatched back-to-back
+#    with ONE synchronization point — GLOBAL reconnect repairs the
+#    in-neighbors of every deleted vertex by re-searching the graph
+session.delete(ids[:200])
+session.insert(rng.normal(size=(200, 64)).astype(np.float32))
+session.flush()
+print(f"recall@10 after churn:  {session.recall(Q, k=10):.3f}")
+print("timers:", session.timers.to_dict())
+
+# 5. the per-op facade (`IPGMIndex`) keeps the seed API working and is
+#    parity-tested bit-exact against the session — see tests/test_session.py

@@ -1,7 +1,9 @@
 """IPGM core — the paper's contribution as a composable JAX module."""
 from repro.core.graph import NULL, GraphState, graph_stats, init_graph
 from repro.core.maintenance import IPGMIndex, run_workload
-from repro.core.params import IndexParams, SearchParams
+from repro.core.ops import OpBatch, apply_ops, apply_ops_step
+from repro.core.params import IndexParams, MaintenanceParams, SearchParams
+from repro.core.session import OpHandle, PhaseTimers, Session
 
 __all__ = [
     "NULL",
@@ -11,5 +13,12 @@ __all__ = [
     "IPGMIndex",
     "run_workload",
     "IndexParams",
+    "MaintenanceParams",
     "SearchParams",
+    "Session",
+    "OpHandle",
+    "OpBatch",
+    "PhaseTimers",
+    "apply_ops",
+    "apply_ops_step",
 ]

@@ -131,6 +131,7 @@ def insert_batch_impl(
     valid: jax.Array,     # bool[B] — rows to actually insert
     key: jax.Array,
     params: IndexParams,
+    key_offset: jax.Array | int = 0,
 ) -> tuple[GraphState, jax.Array]:
     """Traceable body of the batched insert pipeline.
 
@@ -170,11 +171,13 @@ def insert_batch_impl(
     # OOB index parks invalid lanes: scatter mode="drop" makes them no-ops
     wslots = jnp.where(ok, slots, cap)
 
-    # ---- phase 2: one ef-search for the whole batch (pre-batch snapshot) ----
-    keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(B))
-    starts = jax.vmap(
-        lambda kk: search.entry_points(state, kk, sp.num_starts)
-    )(keys)
+    # ---- phase 2: one ef-search for the whole batch (pre-batch snapshot).
+    # Row i's search key folds the row's *global* stream index
+    # (key_offset + i), so a padded final micro-batch searches exactly like
+    # its unpadded twin (DESIGN.md §7) ----
+    starts = search.batch_entry_points(
+        state, key, B, sp.num_starts, offset=key_offset
+    )
     res = search.beam_search(state, vecs, starts, sp)
 
     # ---- phase 3: write all vertices ----

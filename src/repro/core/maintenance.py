@@ -1,10 +1,13 @@
-"""GRAPH-MAINTENANCE (Alg 3) — the public online-index API.
+"""GRAPH-MAINTENANCE (Alg 3) — the per-op back-compat facade.
 
-``IPGMIndex`` is the host-level driver: it owns a jitted GraphState, chunks
-workload operations into device-sized micro-batches, dispatches the delete
-strategy, and keeps per-phase timing books (the paper's QPS / total-time
-accounting). Everything device-side is functional and jit-compiled once per
-(shape, params) combination.
+The online index's primary surface is the streaming :class:`~repro.core.
+session.Session` (DESIGN.md §7): device-resident state, unified op IR,
+donated update steps, async dispatch. ``IPGMIndex`` survives as a thin
+synchronous facade over a session — each method dispatches one op through
+the same jitted ``apply_ops`` step and flushes immediately, preserving the
+seed API (eager results, per-op timer attribution, ``query_chunk``-padded
+query shapes) for existing call-sites. New code should drive a ``Session``
+directly; ``run_workload`` compiles an (op, payload) stream onto either.
 """
 from __future__ import annotations
 
@@ -12,210 +15,177 @@ import dataclasses
 import time
 from typing import Iterable
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import delete as delete_mod
-from repro.core import insert as insert_mod
-from repro.core import metrics, rebuild, search
-from repro.core.graph import NULL, GraphState, graph_stats, init_graph
+from repro.core import metrics
+from repro.core.graph import GraphState
 from repro.core.params import IndexParams
+from repro.core.session import OpHandle, PhaseTimers, Session
 
-
-@dataclasses.dataclass
-class PhaseTimers:
-    query_s: float = 0.0
-    insert_s: float = 0.0
-    delete_s: float = 0.0
-    rebuild_s: float = 0.0
-    n_queries: int = 0
-    n_inserts: int = 0
-    n_deletes: int = 0
-
-    def total(self) -> float:
-        return self.query_s + self.insert_s + self.delete_s + self.rebuild_s
-
-
-def _pad_to(x: np.ndarray, n: int, fill) -> np.ndarray:
-    if x.shape[0] == n:
-        return x
-    pad = np.full((n - x.shape[0],) + x.shape[1:], fill, dtype=x.dtype)
-    return np.concatenate([x, pad], axis=0)
+__all__ = ["IPGMIndex", "PhaseTimers", "run_workload"]
 
 
 class IPGMIndex:
-    """Online proximity-graph index with pluggable delete strategy."""
+    """Online proximity-graph index — thin per-op facade over a Session.
+
+    Back-compat contract kept from the seed API: synchronous methods
+    returning materialized results, ``strategy``/chunk-size constructor
+    overrides, a settable ``state`` (used by ``consolidate``), and queries
+    padded to ``params.query_chunk`` so any request size runs one compiled
+    shape. Everything else — dispatch, donation, timers, checkpointing —
+    lives in the underlying :class:`Session` (``self.session``).
+    """
 
     def __init__(
         self,
         params: IndexParams,
         *,
-        strategy: str = "global",
+        strategy: str | None = None,
         seed: int = 0,
-        delete_chunk: int = 64,
-        insert_chunk: int = 64,
+        delete_chunk: int | None = None,
+        insert_chunk: int | None = None,
         state: GraphState | None = None,
+        checkpoint_dir=None,
     ):
-        known = delete_mod.STRATEGIES + delete_mod.REFERENCE_STRATEGIES
-        if strategy not in known:
-            raise ValueError(f"strategy must be one of {known}")
-        self.params = params
-        self.strategy = strategy
-        self.delete_chunk = delete_chunk
-        self.insert_chunk = insert_chunk
-        self._key = jax.random.PRNGKey(seed)
-        self.state = state if state is not None else init_graph(
-            params.capacity, params.dim, d_out=params.d_out,
-            d_in=params.eff_d_in, metric=params.metric,
+        mp = params.maintenance
+        mp = dataclasses.replace(
+            mp,
+            strategy=strategy if strategy is not None else mp.strategy,
+            insert_chunk=insert_chunk if insert_chunk is not None
+            else mp.insert_chunk,
+            delete_chunk=delete_chunk if delete_chunk is not None
+            else mp.delete_chunk,
         )
-        self.timers = PhaseTimers()
+        params = dataclasses.replace(params, maintenance=mp)
+        # per-branch trace-time dispatch: the facade's op type is always
+        # known host-side, so it skips the full-switch compile
+        self.session = Session(
+            params, seed=seed, state=state, checkpoint_dir=checkpoint_dir,
+            unified_dispatch=False,
+        )
 
-    # -- key plumbing ------------------------------------------------------
-    def _next_key(self) -> jax.Array:
-        self._key, sub = jax.random.split(self._key)
-        return sub
+    # -- session passthroughs ---------------------------------------------
+    @property
+    def params(self) -> IndexParams:
+        return self.session.params
 
-    # -- operations (Alg 3 branches) --------------------------------------
+    @property
+    def strategy(self) -> str:
+        return self.session.strategy
+
+    @strategy.setter
+    def strategy(self, value: str) -> None:
+        self.session.strategy = value
+
+    @property
+    def state(self) -> GraphState:
+        return self.session.state
+
+    @state.setter
+    def state(self, value: GraphState) -> None:
+        self.session.set_state(value)
+
+    @property
+    def timers(self) -> PhaseTimers:
+        return self.session.timers
+
+    def _set_maintenance(self, **kw) -> None:
+        p = self.session.params
+        self.session.params = dataclasses.replace(
+            p, maintenance=dataclasses.replace(p.maintenance, **kw)
+        )
+
+    @property
+    def insert_chunk(self) -> int:
+        return self.session.params.maintenance.insert_chunk
+
+    @insert_chunk.setter
+    def insert_chunk(self, value: int) -> None:
+        self._set_maintenance(insert_chunk=int(value))
+
+    @property
+    def delete_chunk(self) -> int:
+        return self.session.params.maintenance.delete_chunk
+
+    @delete_chunk.setter
+    def delete_chunk(self, value: int) -> None:
+        self._set_maintenance(delete_chunk=int(value))
+
+    # -- operations (Alg 3 branches), each = dispatch + flush --------------
     def query(self, queries, k: int | None = None):
         """Batched ANN query. Returns (ids i32[B,k], scores f32[B,k]).
 
-        Each ``query_chunk``-sized micro-batch is one batched beam-engine
-        call (``search.beam_search`` under ``search_batch``) — chunking
-        bounds device intermediates. A ragged final chunk is padded up to
-        ``query_chunk`` and the pad rows masked off, so *every* chunk runs
-        the single compiled program for this (state, params) combination —
-        no per-remainder-shape recompiles.
+        Padded to ``query_chunk``-shaped micro-batches (the legacy
+        compile-shape contract); results are bit-identical to the streaming
+        session's — per-item PRNG folds make query results invariant to
+        chunk shape (DESIGN.md §7).
         """
-        q = jnp.asarray(queries)
-        chunk = self.params.query_chunk
-        k = k if k is not None else self.params.search.pool_size
-        ids_out, scores_out = [], []
-        t0 = time.perf_counter()
-        for lo in range(0, q.shape[0], chunk):
-            part = q[lo:lo + chunk]
-            n = part.shape[0]
-            if n < chunk:
-                part = jnp.concatenate(
-                    [part, jnp.zeros((chunk - n, q.shape[1]), q.dtype)]
-                )
-            res = search.search_batch(
-                self.state, part, self._next_key(), self.params.search
-            )
-            ids_out.append(res.ids[:n, :k])
-            scores_out.append(res.scores[:n, :k])
-        ids = jnp.concatenate(ids_out) if len(ids_out) > 1 else ids_out[0]
-        scores = (
-            jnp.concatenate(scores_out) if len(scores_out) > 1 else scores_out[0]
-        )
-        ids.block_until_ready()
-        self.timers.query_s += time.perf_counter() - t0
-        self.timers.n_queries += int(q.shape[0])
-        return ids, scores
+        h = self.session.query(queries, k=k,
+                               chunk=self.session.params.query_chunk)
+        self.session.flush()
+        return h.result()
 
-    def insert(self, vectors) -> jax.Array:
-        """Insert a batch of vectors; returns their assigned ids.
-
-        Chunked into ``insert_chunk``-sized micro-batches, each one call of
-        the vectorized insert pipeline (``insert_mod.insert_batch``,
-        DESIGN.md §4). The ragged final chunk is padded to ``insert_chunk``
-        with masked lanes, so every chunk reuses the one compiled program.
-        """
-        v = np.asarray(vectors)
-        if v.shape[0] == 0:
-            return jnp.zeros((0,), jnp.int32)
-        chunk = self.insert_chunk
-        t0 = time.perf_counter()
-        out = []
-        for lo in range(0, v.shape[0], chunk):
-            part = v[lo:lo + chunk]
-            n = part.shape[0]
-            padded = _pad_to(part, chunk, 0)
-            valid = jnp.arange(chunk) < n
-            self.state, ids = insert_mod.insert_batch(
-                self.state, jnp.asarray(padded), valid, self._next_key(),
-                self.params,
-            )
-            out.append(ids[:n])
-        ids = jnp.concatenate(out) if len(out) > 1 else out[0]
-        ids.block_until_ready()
-        self.timers.insert_s += time.perf_counter() - t0
-        self.timers.n_inserts += int(v.shape[0])
-        return ids
+    def insert(self, vectors):
+        """Insert a batch of vectors; returns their assigned ids."""
+        h = self.session.insert(vectors)
+        self.session.flush()
+        return h.result()
 
     def delete(self, ids) -> None:
         """Delete a batch of vertex ids with the configured strategy."""
-        arr = np.asarray(ids, dtype=np.int32)
-        chunk = self.delete_chunk
-        t0 = time.perf_counter()
-        for lo in range(0, arr.shape[0], chunk):
-            part = arr[lo:lo + chunk]
-            n = part.shape[0]
-            padded = _pad_to(part, chunk, NULL)
-            valid = jnp.arange(chunk) < n
-            self.state = delete_mod.delete_batch(
-                self.state, jnp.asarray(padded), valid, self._next_key(),
-                self.strategy, self.params,
-            )
-        jax.block_until_ready(self.state.adj)
-        self.timers.delete_s += time.perf_counter() - t0
-        self.timers.n_deletes += int(arr.shape[0])
+        self.session.delete(ids)
+        self.session.flush()
 
     def rebuild_from_alive(self) -> None:
         """ReBuild baseline: reconstruct the whole graph from alive vectors."""
-        t0 = time.perf_counter()
-        alive = np.asarray(self.state.alive)
-        vecs = np.asarray(self.state.vectors)[alive]
-        n = vecs.shape[0]
-        padded = np.zeros((self.params.capacity, self.params.dim), vecs.dtype)
-        padded[:n] = vecs
-        valid = jnp.arange(self.params.capacity) < n
-        self.state = rebuild.bulk_knn_build(
-            jnp.asarray(padded), valid, self.params
-        )
-        jax.block_until_ready(self.state.adj)
-        self.timers.rebuild_s += time.perf_counter() - t0
+        self.session.rebuild_from_alive()
 
     # -- reporting ---------------------------------------------------------
     def ground_truth(self, queries, k: int):
-        return metrics.brute_force_topk(self.state, jnp.asarray(queries), k)
+        return self.session.ground_truth(queries, k)
 
     def recall(self, queries, k: int) -> float:
-        ids, _ = self.query(queries, k=k)
-        _, true_ids = self.ground_truth(queries, k)
-        return float(metrics.recall_at_k(ids, true_ids, k))
+        return self.session.recall(queries, k)
 
     def stats(self) -> dict:
-        return {k: np.asarray(v).item() for k, v in graph_stats(self.state).items()}
+        return self.session.stats()
 
 
 def run_workload(
-    index: IPGMIndex,
+    index: IPGMIndex | Session,
     workload: Iterable[tuple[str, object]],
     k: int = 10,
 ) -> list[dict]:
-    """Drive a (op, payload) stream through the index — Alg 3's outer loop.
+    """Drive an (op, payload) stream — Alg 3's outer loop as a stream compiler.
 
     ops: ("query", Q[B,dim]) | ("insert", X[B,dim]) | ("delete", ids[B])
        | ("rebuild", None)
-    Returns one record per op with latency + (for queries) recall. The
-    brute-force ground-truth pass backing the recall number is *not* part
-    of the serving path, so its cost is reported as a separate
-    ``gt_seconds`` field and excluded from ``seconds`` (QPS derived from
-    ``seconds`` measures the index alone).
+
+    Given a :class:`Session`, the whole stream is dispatched up front
+    (async, op-IR micro-batches) and results are consumed in order —
+    host-side bookkeeping overlaps device execution, and a final
+    ``{"op": "summary"}`` record carries ``session.timers.to_dict()``.
+    Given an :class:`IPGMIndex`, ops run synchronously one at a time (the
+    legacy per-op path, no summary record — kept for facade parity runs).
+
+    Every record reports ``seconds``, ``n`` and ``ops_per_s``; query records
+    add ``recall`` plus the ground-truth pass cost as ``gt_seconds``
+    (excluded from ``seconds`` — QPS measures the index alone).
     """
+    if isinstance(index, Session):
+        return _run_workload_stream(index, workload, k)
     records = []
     for op, payload in workload:
         t0 = time.perf_counter()
         rec: dict = {"op": op}
         if op == "query":
             ids, _ = index.query(payload, k=k)
-            jax.block_until_ready(ids)
             rec["seconds"] = time.perf_counter() - t0
             rec["n"] = int(np.asarray(payload).shape[0])
             t_gt = time.perf_counter()
             _, true_ids = index.ground_truth(payload, k)
-            rec["recall"] = float(metrics.recall_at_k(ids, true_ids, k))
+            rec["recall"] = float(metrics.recall_at_k(
+                np.asarray(ids), true_ids, k))
             rec["gt_seconds"] = time.perf_counter() - t_gt
         elif op == "insert":
             index.insert(payload)
@@ -230,5 +200,81 @@ def run_workload(
             raise ValueError(op)
         if "seconds" not in rec:
             rec["seconds"] = time.perf_counter() - t0
+        rec["ops_per_s"] = rec["n"] / rec["seconds"] if rec["seconds"] else 0.0
         records.append(rec)
+    return records
+
+
+def _run_workload_stream(
+    session: Session, workload: Iterable[tuple[str, object]], k: int
+) -> list[dict]:
+    """Streaming driver: dispatch everything, then consume in order.
+
+    Per-record ``seconds``/``ops_per_s`` measure *consume-side wait*: the
+    first consumed record absorbs the whole device queue built up behind
+    it, later records resolve nearly instantly. Per-op isolation is the
+    legacy facade mode's job; stream-level throughput lives in the
+    ``summary`` record.
+
+    Ground truth for a query's recall is dispatched (async, no flush)
+    right after the query op, against the session state *at that stream
+    position* — a later update must not change what counts as a correct
+    answer. The runtime keeps the snapshot's buffers alive across the
+    subsequent donating update steps.
+    """
+    import jax.numpy as jnp
+
+    t_start = time.perf_counter()
+    staged: list[tuple[dict, OpHandle | None, object]] = []
+    for op, payload in workload:
+        rec: dict = {"op": op}
+        gt = None
+        if op == "query":
+            h = session.query(payload, k=k)
+            gt = metrics.brute_force_topk(
+                session.state, jnp.asarray(payload), k
+            )
+            rec["n"] = int(np.asarray(payload).shape[0])
+        elif op == "insert":
+            h = session.insert(payload)
+            rec["n"] = int(np.asarray(payload).shape[0])
+        elif op == "delete":
+            h = session.delete(payload)
+            rec["n"] = int(np.asarray(payload).shape[0])
+        elif op == "rebuild":
+            t0 = time.perf_counter()
+            session.rebuild_from_alive()  # host path — synchronizes
+            rec["seconds"] = time.perf_counter() - t0
+            h, rec["n"] = None, 1
+        else:
+            raise ValueError(op)
+        staged.append((rec, h, gt))
+
+    records = []
+    for rec, h, gt in staged:
+        t0 = time.perf_counter()
+        if h is not None and rec["op"] == "query":
+            ids, _ = h.result()
+            rec["seconds"] = time.perf_counter() - t0
+            t_gt = time.perf_counter()
+            _, true_ids = gt
+            rec["recall"] = float(metrics.recall_at_k(
+                np.asarray(ids), np.asarray(true_ids), k))
+            rec["gt_seconds"] = time.perf_counter() - t_gt
+        elif h is not None:
+            h.result()
+            rec["seconds"] = time.perf_counter() - t0
+        # (rebuild records carry their true synchronous dispatch-time cost)
+        rec["ops_per_s"] = rec["n"] / rec["seconds"] if rec["seconds"] else 0.0
+        records.append(rec)
+    timers = session.flush()
+    total = time.perf_counter() - t_start
+    n_items = sum(r["n"] for r in records if r["op"] != "rebuild")
+    records.append({
+        "op": "summary",
+        "n": n_items,
+        "seconds": total,
+        "ops_per_s": n_items / total if total else 0.0,
+        "timers": timers.to_dict(),
+    })
     return records

@@ -1,0 +1,183 @@
+"""Unified op IR — the fixed-shape micro-batch language of the session API.
+
+A mixed online stream (queries, inserts, deletes interleaved — the paper's
+Alg 3 setting) is compiled into a sequence of :class:`OpBatch` micro-batches:
+one fixed shape regardless of op type, so the whole stream dispatches through
+ONE jitted step (:func:`apply_ops`) whose ``lax.switch`` selects the branch
+on-device. The step takes the ``GraphState`` donated (``donate_argnums``), so
+updates mutate the capacity-sized buffers in place instead of copying the
+index every micro-batch, and queries alias it straight through
+(DESIGN.md §7).
+
+Op codes::
+
+    OP_QUERY  (0)  payload = queries f32[B, dim]  → ids/scores [B, K]
+    OP_INSERT (1)  payload = vectors f32[B, dim]  → assigned ids in ids[:, 0]
+    OP_DELETE (2)  ids     = vertex ids i32[B]    → state change only
+    OP_NOOP   (3)  padding op — state unchanged, empty results
+
+``valid`` masks the padded lanes of a ragged final micro-batch; ``offset``
+is the micro-batch's global item offset within its op, which keys the
+per-lane PRNG folds so results are invariant to chunking/padding
+(``search.batch_entry_points``).
+
+Dispatch modes:
+
+  · ``static_op=None`` — ``op_code`` is traced and the branch is selected by
+    ``lax.switch``: one compiled program executes ANY op at this shape
+    family. This is the streaming session's mode — a mixed stream never
+    recompiles between op types.
+  · ``static_op=<code>`` — the branch is selected in Python at trace time,
+    compiling only that branch. The per-op back-compat facade uses this so
+    legacy call-sites don't pay the full-switch compile for ops they never
+    issue.
+
+Both modes run byte-identical branch code, so they are interchangeable
+result-wise — the parity suite (tests/test_session.py) pins this.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import delete as delete_mod
+from repro.core import insert as insert_mod
+from repro.core import search
+from repro.core.graph import NULL, GraphState
+from repro.core.params import IndexParams
+
+OP_QUERY = 0
+OP_INSERT = 1
+OP_DELETE = 2
+OP_NOOP = 3
+
+OP_NAMES = {OP_QUERY: "query", OP_INSERT: "insert", OP_DELETE: "delete",
+            OP_NOOP: "noop"}
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["op_code", "payload", "ids", "valid", "offset"],
+    meta_fields=[],
+)
+@dataclasses.dataclass(frozen=True)
+class OpBatch:
+    """One fixed-shape micro-batch of the op stream."""
+
+    op_code: jax.Array   # i32[]       OP_* discriminator (traced)
+    payload: jax.Array   # f32[B, dim] query/insert vectors (zeros for delete)
+    ids: jax.Array       # i32[B]      delete targets (NULL elsewhere)
+    valid: jax.Array     # bool[B]     real (non-padding) lanes
+    offset: jax.Array    # i32[]       global item offset within the op
+
+
+def make_op(
+    op_code: int,
+    chunk: int,
+    dim: int,
+    *,
+    payload: np.ndarray | None = None,
+    ids: np.ndarray | None = None,
+    offset: int = 0,
+) -> OpBatch:
+    """Host-side encoder: pad one op slice up to the ``chunk`` shape."""
+    n = payload.shape[0] if payload is not None else (
+        ids.shape[0] if ids is not None else 0
+    )
+    if n > chunk:
+        raise ValueError(f"op slice of {n} items exceeds chunk {chunk}")
+    p = np.zeros((chunk, dim), np.float32)
+    if payload is not None:
+        p[:n] = payload
+    i = np.full((chunk,), NULL, np.int32)
+    if ids is not None:
+        i[:n] = ids
+    valid = np.arange(chunk) < n
+    return OpBatch(
+        op_code=jnp.asarray(op_code, jnp.int32),
+        payload=jnp.asarray(p),
+        ids=jnp.asarray(i),
+        valid=jnp.asarray(valid),
+        offset=jnp.asarray(offset, jnp.int32),
+    )
+
+
+def apply_ops(
+    state: GraphState,
+    batch: OpBatch,
+    key: jax.Array,
+    params: IndexParams,
+    strategy: str,
+    static_op: int | None = None,
+) -> tuple[GraphState, jax.Array, jax.Array]:
+    """Apply one op micro-batch. Returns (state, ids i32[B,K], scores f32[B,K]).
+
+    Traceable; the session jits it with the state donated. ``key`` is the
+    *op-level* key — shared by every micro-batch of one logical op, with
+    ``batch.offset`` folding per-lane (chunking-invariant, DESIGN.md §7).
+    """
+    B = batch.payload.shape[0]
+    K = params.search.pool_size
+    sp = params.search
+    empty_ids = jnp.full((B, K), NULL, jnp.int32)
+    empty_scores = jnp.full((B, K), -jnp.inf, jnp.float32)
+
+    def _noop(st: GraphState):
+        return st, empty_ids, empty_scores
+
+    def _query(st: GraphState):
+        starts = search.batch_entry_points(
+            st, key, B, sp.num_starts, offset=batch.offset
+        )
+        res = search.beam_search(st, batch.payload, starts, sp)
+        ids = jnp.where(batch.valid[:, None], res.ids, NULL)
+        scores = jnp.where(batch.valid[:, None], res.scores, -jnp.inf)
+        return st, ids, scores
+
+    def _insert(st: GraphState):
+        st2, slots = insert_mod.insert_batch_impl(
+            st, batch.payload, batch.valid, key, params,
+            key_offset=batch.offset,
+        )
+        return st2, empty_ids.at[:, 0].set(slots), empty_scores
+
+    def _delete(st: GraphState):
+        st2 = delete_mod._STRATEGY_FNS[strategy](
+            st, batch.ids, batch.valid, key, params
+        )
+        return st2, empty_ids, empty_scores
+
+    branches = (_query, _insert, _delete, _noop)
+    if static_op is not None:
+        # Python-level selection: compiles only this branch (facade mode)
+        return branches[static_op](state)
+    return jax.lax.switch(
+        jnp.clip(batch.op_code, 0, len(branches) - 1), branches, state
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("params", "strategy", "static_op"),
+    donate_argnums=(0,),
+)
+def apply_ops_step(
+    state: GraphState,
+    batch: OpBatch,
+    key: jax.Array,
+    params: IndexParams,
+    strategy: str,
+    static_op: int | None = None,
+) -> tuple[GraphState, jax.Array, jax.Array]:
+    """The jitted, state-donating op step — the session's only device entry.
+
+    Donation contract: the incoming ``state`` buffers are consumed (update
+    branches overwrite them in place; the query/noop branches alias them
+    into the returned state). Callers must drop every reference to the
+    argument and hold only the returned state.
+    """
+    return apply_ops(state, batch, key, params, strategy, static_op)

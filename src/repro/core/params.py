@@ -27,6 +27,26 @@ class SearchParams:
 
 
 @dataclasses.dataclass(frozen=True)
+class MaintenanceParams:
+    """Update-path knobs of the online index (DESIGN.md §7).
+
+    ``strategy`` is the delete strategy (Alg 4–6 / §5.2); the chunk sizes are
+    the op-IR micro-batch widths: every insert/delete stream is chopped into
+    fixed-shape ``OpBatch``es of this many lanes (ragged tails padded with
+    masked lanes), so one compiled ``apply_ops`` program serves any stream
+    length. Keeping ``insert_chunk == delete_chunk`` lets a mixed stream run
+    through a single compiled switch program (one shape family).
+    """
+
+    strategy: str = "global"   # "pure" | "mask" | "local" | "global" (+ _reference)
+    insert_chunk: int = 64
+    delete_chunk: int = 64
+
+    def __post_init__(self):
+        assert self.insert_chunk >= 1 and self.delete_chunk >= 1
+
+
+@dataclasses.dataclass(frozen=True)
 class IndexParams:
     """Full index configuration (graph + search + maintenance)."""
 
@@ -35,11 +55,17 @@ class IndexParams:
     d_out: int = 16            # paper's d: out-degree threshold
     d_in: int | None = None    # bounded in-degree (DESIGN.md §2); None → 2*d_out
     metric: str = "l2"
-    search: SearchParams = SearchParams()
+    search: SearchParams = dataclasses.field(default_factory=SearchParams)
     insert_search: SearchParams | None = None  # ef_construction; None → search
     bidirectional_insert: bool = True  # NSW/HNSW practice; strict-paper = False
-    query_chunk: int = 256     # queries per batched-engine call (bounds the
-                               # [chunk, pool+block] working set & compile shapes)
+    query_chunk: int = 256     # queries per batched-engine call on the
+                               # legacy per-op facade (bounds the
+                               # [chunk, pool+block] working set & compile
+                               # shapes); streaming sessions chunk queries at
+                               # the op-IR width instead (DESIGN.md §7)
+    maintenance: MaintenanceParams = dataclasses.field(
+        default_factory=MaintenanceParams
+    )
 
     @property
     def eff_d_in(self) -> int:

@@ -71,10 +71,23 @@ def entry_points(state: GraphState, key: jax.Array, num_starts: int) -> jax.Arra
 
 
 def batch_entry_points(
-    state: GraphState, key: jax.Array, batch: int, num_starts: int
+    state: GraphState,
+    key: jax.Array,
+    batch: int,
+    num_starts: int,
+    offset: jax.Array | int = 0,
 ) -> jax.Array:
-    """Independent entry points for each of ``batch`` queries: i32[B, S]."""
-    keys = jax.random.split(key, batch)
+    """Independent entry points for each of ``batch`` queries: i32[B, S].
+
+    Lane ``i`` derives its key as ``fold_in(key, offset + i)`` — a function
+    of the lane's *global* stream index only, never of the micro-batch
+    shape. This is what makes query results invariant to how a stream is
+    chunked and padded (DESIGN.md §7): ``jax.random.split(key, B)[i]``
+    depends on ``B``, so the pre-session code produced different entry
+    points for the same query depending on the chunk it landed in.
+    """
+    idx = jnp.arange(batch, dtype=jnp.int32) + offset
+    keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(idx)
     return jax.vmap(lambda kk: entry_points(state, kk, num_starts))(keys)
 
 

@@ -1,0 +1,412 @@
+"""Streaming session API — device-resident state, async dispatch, op IR.
+
+The session is the online index's new public surface (DESIGN.md §7): it owns
+a device-resident ``GraphState`` plus the PRNG chain, compiles every
+operation of a mixed query/insert/delete stream into fixed-shape
+:class:`~repro.core.ops.OpBatch` micro-batches, and dispatches them through
+the single jitted, state-donating ``apply_ops`` step. Dispatch is
+**asynchronous**: ``query``/``insert``/``delete`` return an
+:class:`OpHandle` immediately and the host only synchronizes on
+``flush()`` or when a handle's ``result()`` is consumed — so host Python
+(padding, encoding, bookkeeping) overlaps device execution instead of
+stalling on a per-op ``block_until_ready``.
+
+Key derivation (chunking-invariant, DESIGN.md §7): op number ``t`` uses
+``key_t = fold_in(base_key, t)``; lane ``i`` of the op folds its *global*
+stream index on top. A query stream therefore returns bit-identical results
+no matter how it is chunked or padded — which is what lets the per-op
+back-compat facade (``IPGMIndex``) and the streaming session be
+parity-tested against each other.
+
+``PhaseTimers`` moves to flush-based accounting: the per-phase fields count
+host dispatch time (tiny under async dispatch), ``flush_s`` the synchronous
+waits, and ``wall_s`` the busy wall-clock between the first dispatch of a
+window and the flush that closes it. ``timers.to_dict()`` is the summary the
+bench script consumes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import metrics, rebuild
+from repro.core import delete as delete_mod
+from repro.core import ops as ops_mod
+from repro.core.graph import NULL, GraphState, graph_stats, init_graph
+from repro.core.ops import OP_DELETE, OP_INSERT, OP_QUERY
+from repro.core.params import IndexParams
+
+
+@dataclasses.dataclass
+class PhaseTimers:
+    """Flush-based phase accounting (the paper's QPS / total-time books).
+
+    Per-phase ``*_s`` fields record *host dispatch* time — under async
+    dispatch the device wait lands in ``flush_s`` instead, and ``wall_s``
+    tracks end-to-end busy wall-clock (first dispatch of a window → the
+    flush closing it). The legacy per-op facade flushes after every op, so
+    for it ``wall_s`` ≈ the old synchronous per-op totals.
+    """
+
+    query_s: float = 0.0
+    insert_s: float = 0.0
+    delete_s: float = 0.0
+    rebuild_s: float = 0.0
+    flush_s: float = 0.0
+    wall_s: float = 0.0
+    n_queries: int = 0
+    n_inserts: int = 0
+    n_deletes: int = 0
+    n_ops: int = 0
+
+    def total(self) -> float:
+        return (self.query_s + self.insert_s + self.delete_s
+                + self.rebuild_s + self.flush_s)
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["total_s"] = self.total()
+        n_items = self.n_queries + self.n_inserts + self.n_deletes
+        d["n_items"] = n_items
+        wall = self.wall_s + self.rebuild_s
+        d["ops_per_s"] = n_items / wall if wall > 0 else 0.0
+        return d
+
+
+class OpHandle:
+    """Future for one dispatched op — resolves to host results on demand.
+
+    Holds only device *result* arrays (never a GraphState reference, so a
+    handle can outlive any number of donations of the session state).
+    Consuming the handle (``result()``/``block()``) retires it from the
+    session's pending set, so serving loops that resolve every handle never
+    accumulate pending state between flushes.
+    """
+
+    def __init__(self, op: str, n: int, k: int,
+                 chunks: list[tuple[jax.Array, jax.Array, int]],
+                 on_done=None):
+        self.op = op          # "query" | "insert" | "delete"
+        self.n = n            # real (unpadded) item count
+        self.k = k            # reported columns for queries
+        self._chunks = chunks  # [(ids_dev[B,K], scores_dev[B,K], n_valid)]
+        self._on_done = on_done
+        self._done = False
+
+    def _finish(self) -> None:
+        if not self._done:
+            self._done = True
+            if self._on_done is not None:
+                self._on_done(self)
+
+    def result(self):
+        """Block until this op's results are on host.
+
+        query  → (ids i32[n, k], scores f32[n, k]) numpy arrays
+        insert → ids i32[n] (NULL where the index was full)
+        delete → None
+        """
+        try:
+            if self.op == "delete" or self.n == 0:
+                if self.op == "query":
+                    return (np.full((0, self.k), NULL, np.int32),
+                            np.full((0, self.k), -np.inf, np.float32))
+                if self.op == "insert":
+                    return np.zeros((0,), np.int32)
+                for ids, _, _ in self._chunks:
+                    jax.block_until_ready(ids)
+                return None
+            if self.op == "query":
+                ids = np.concatenate(
+                    [np.asarray(i)[:nv, : self.k] for i, _, nv in self._chunks]
+                )
+                scores = np.concatenate(
+                    [np.asarray(s)[:nv, : self.k] for _, s, nv in self._chunks]
+                )
+                return ids, scores
+            # insert: assigned slot ids ride in column 0 of the result block
+            return np.concatenate(
+                [np.asarray(i)[:nv, 0] for i, _, nv in self._chunks]
+            )
+        finally:
+            self._finish()
+
+    def block(self) -> None:
+        for ids, scores, _ in self._chunks:
+            jax.block_until_ready((ids, scores))
+        self._finish()
+
+
+def params_fingerprint(params: IndexParams, strategy: str) -> str:
+    """Stable identity of (index config, strategy) for checkpoint guarding."""
+    def enc(obj):
+        if dataclasses.is_dataclass(obj):
+            return {f.name: enc(getattr(obj, f.name))
+                    for f in dataclasses.fields(obj)}
+        return obj
+    return json.dumps({"params": enc(params), "strategy": strategy},
+                      sort_keys=True)
+
+
+class Session:
+    """Device-resident streaming session over one proximity-graph index.
+
+    The session owns its ``GraphState`` exclusively: every dispatched op
+    donates the state buffers to the jitted step and replaces the held
+    reference with the returned (aliased or rewritten) state — no call-site
+    ever sees a pre-donation array. Reads (``stats``, ``ground_truth``,
+    ``rebuild_from_alive``, ``save``) implicitly ``flush()`` first.
+    """
+
+    def __init__(
+        self,
+        params: IndexParams,
+        *,
+        strategy: str | None = None,
+        seed: int = 0,
+        state: GraphState | None = None,
+        checkpoint_dir: str | Path | None = None,
+        checkpoint_keep: int = 3,
+        unified_dispatch: bool = True,
+    ):
+        known = delete_mod.STRATEGIES + delete_mod.REFERENCE_STRATEGIES
+        strategy = strategy if strategy is not None else params.maintenance.strategy
+        if strategy not in known:
+            raise ValueError(f"strategy must be one of {known}")
+        self.params = params
+        self.strategy = strategy
+        self.seed = seed
+        self._base_key = jax.random.PRNGKey(seed)
+        self._op_counter = 0
+        self._state = state if state is not None else init_graph(
+            params.capacity, params.dim, d_out=params.d_out,
+            d_in=params.eff_d_in, metric=params.metric,
+        )
+        self.timers = PhaseTimers()
+        self._pending: list[OpHandle] = []
+        self._window_t0: float | None = None
+        # unified_dispatch=True routes every op through the traced-op_code
+        # switch program (ONE compiled step per shape family for the whole
+        # mixed stream); False selects the branch at trace time instead
+        # (per-branch programs — the facade's compile-lean mode).
+        self.unified_dispatch = unified_dispatch
+        self._ckpt = None
+        if checkpoint_dir is not None:
+            from repro.checkpoint import CheckpointManager
+            self._ckpt = CheckpointManager(checkpoint_dir, keep=checkpoint_keep)
+
+    # -- state ownership ---------------------------------------------------
+    @property
+    def state(self) -> GraphState:
+        """The current (post-all-dispatched-ops) device state."""
+        return self._state
+
+    def set_state(self, state: GraphState) -> None:
+        """Replace the session state (flushes pending work first)."""
+        self.flush()
+        self._state = state
+
+    @property
+    def chunk(self) -> int:
+        """The op-IR unified micro-batch width (streaming query default)."""
+        return self.params.maintenance.insert_chunk
+
+    # -- key plumbing ------------------------------------------------------
+    def _op_key(self) -> jax.Array:
+        key = jax.random.fold_in(self._base_key, self._op_counter)
+        self._op_counter += 1
+        return key
+
+    # -- dispatch core -----------------------------------------------------
+    def _dispatch(self, op_code: int, arr, chunk: int, *,
+                  fold_chunk_key: bool = False) -> OpHandle:
+        """Chop one op into padded OpBatches and enqueue them (no sync)."""
+        key = self._op_key()  # consumed even for empty ops: stable chain
+        n = arr.shape[0]
+        if n == 0:  # no device work: don't arm the busy-wall window
+            h = OpHandle(ops_mod.OP_NAMES[op_code], 0,
+                         self.params.search.pool_size, [])
+            self.timers.n_ops += 1
+            return h
+        if self._window_t0 is None:
+            self._window_t0 = time.perf_counter()
+        static_op = None if self.unified_dispatch else op_code
+        is_delete = op_code == OP_DELETE
+        chunks = []
+        for ci, lo in enumerate(range(0, n, chunk)):
+            part = arr[lo:lo + chunk]
+            batch = ops_mod.make_op(
+                op_code, chunk, self.params.dim,
+                payload=None if is_delete else part,
+                ids=part if is_delete else None,
+                offset=lo,
+            )
+            # deletes decorrelate multi-chunk repair searches by chunk index
+            # (their lane folds are chunk-local); query/insert fold global
+            # stream indices via `offset` instead, for chunking invariance
+            ckey = jax.random.fold_in(key, ci) if fold_chunk_key else key
+            self._state, ids, scores = ops_mod.apply_ops_step(
+                self._state, batch, ckey, self.params, self.strategy,
+                static_op=static_op,
+            )
+            chunks.append((ids, scores, part.shape[0]))
+        handle = OpHandle(
+            ops_mod.OP_NAMES[op_code], n, self.params.search.pool_size,
+            chunks, on_done=self._handle_done,
+        )
+        self._pending.append(handle)
+        self.timers.n_ops += 1
+        return handle
+
+    def _handle_done(self, handle: OpHandle) -> None:
+        """A consumed handle retires from the pending set; when the set
+        drains without an explicit flush (serving loops that resolve every
+        result), the timer window closes here instead."""
+        try:
+            self._pending.remove(handle)
+        except ValueError:
+            return  # already retired by flush()
+        if not self._pending and self._window_t0 is not None:
+            self.timers.wall_s += time.perf_counter() - self._window_t0
+            self._window_t0 = None
+
+    # -- the op surface ----------------------------------------------------
+    def query(self, queries, k: int | None = None, *,
+              chunk: int | None = None) -> OpHandle:
+        """Dispatch a batched ANN query; returns a handle (async).
+
+        ``handle.result()`` → (ids i32[B,k], scores f32[B,k]). Results are
+        invariant to ``chunk`` (per-item keys fold global stream indices).
+        """
+        q = np.asarray(queries, np.float32)
+        k = k if k is not None else self.params.search.pool_size
+        t0 = time.perf_counter()
+        h = self._dispatch(OP_QUERY, q, chunk or self.chunk)
+        h.k = min(k, self.params.search.pool_size)
+        self.timers.query_s += time.perf_counter() - t0
+        self.timers.n_queries += q.shape[0]
+        return h
+
+    def insert(self, vectors, *, chunk: int | None = None) -> OpHandle:
+        """Dispatch a batch insert; ``handle.result()`` → assigned ids."""
+        v = np.asarray(vectors, np.float32)
+        t0 = time.perf_counter()
+        h = self._dispatch(OP_INSERT, v, chunk or
+                           self.params.maintenance.insert_chunk)
+        self.timers.insert_s += time.perf_counter() - t0
+        self.timers.n_inserts += v.shape[0]
+        return h
+
+    def delete(self, ids, *, chunk: int | None = None) -> OpHandle:
+        """Dispatch a batch delete with the session's strategy."""
+        arr = np.asarray(ids, np.int32)
+        t0 = time.perf_counter()
+        h = self._dispatch(OP_DELETE, arr,
+                           chunk or self.params.maintenance.delete_chunk,
+                           fold_chunk_key=True)
+        self.timers.delete_s += time.perf_counter() - t0
+        self.timers.n_deletes += arr.shape[0]
+        return h
+
+    def flush(self) -> PhaseTimers:
+        """Synchronize: block until every dispatched op (and the state) is
+        materialized; settle the timer window. Returns the timers."""
+        t0 = time.perf_counter()
+        for h in list(self._pending):  # block() retires handles in place
+            h.block()
+        jax.block_until_ready(self._state.adj)
+        self._pending.clear()
+        dt = time.perf_counter() - t0
+        self.timers.flush_s += dt
+        if self._window_t0 is not None:
+            self.timers.wall_s += time.perf_counter() - self._window_t0
+            self._window_t0 = None
+        return self.timers
+
+    # -- host-path maintenance --------------------------------------------
+    def rebuild_from_alive(self) -> None:
+        """ReBuild baseline: reconstruct the whole graph from alive vectors."""
+        self.flush()
+        t0 = time.perf_counter()
+        alive = np.asarray(self._state.alive)
+        vecs = np.asarray(self._state.vectors)[alive]
+        n = vecs.shape[0]
+        padded = np.zeros((self.params.capacity, self.params.dim), vecs.dtype)
+        padded[:n] = vecs
+        valid = jnp.arange(self.params.capacity) < n
+        self._state = rebuild.bulk_knn_build(
+            jnp.asarray(padded), valid, self.params
+        )
+        jax.block_until_ready(self._state.adj)
+        self.timers.rebuild_s += time.perf_counter() - t0
+
+    # -- reporting ---------------------------------------------------------
+    def ground_truth(self, queries, k: int):
+        self.flush()
+        return metrics.brute_force_topk(self._state, jnp.asarray(queries), k)
+
+    def recall(self, queries, k: int) -> float:
+        ids, _ = self.query(queries, k=k).result()
+        _, true_ids = self.ground_truth(queries, k)
+        return float(metrics.recall_at_k(jnp.asarray(ids), true_ids, k))
+
+    def stats(self) -> dict:
+        self.flush()
+        return {k: np.asarray(v).item()
+                for k, v in graph_stats(self._state).items()}
+
+    # -- checkpointing (DESIGN.md §7) --------------------------------------
+    def _require_ckpt(self):
+        if self._ckpt is None:
+            raise ValueError(
+                "session has no checkpoint_dir; pass checkpoint_dir= to "
+                "Session(...) to enable save/restore"
+            )
+        return self._ckpt
+
+    def _ckpt_tree(self):
+        return {"graph": self._state, "base_key": self._base_key}
+
+    def save(self, step: int) -> Path:
+        """Checkpoint GraphState + PRNG chain + timers + params fingerprint."""
+        mgr = self._require_ckpt()
+        self.flush()
+        return mgr.save(
+            step, self._ckpt_tree(),
+            extra={
+                "fingerprint": params_fingerprint(self.params, self.strategy),
+                "op_counter": self._op_counter,
+                "timers": self.timers.to_dict(),
+            },
+        )
+
+    def restore(self, step: int | None = None) -> int:
+        """Restore the session to a saved step (latest when ``step=None``).
+
+        Rejects checkpoints written under a different (params, strategy)
+        fingerprint — restoring a graph into mismatched geometry would
+        corrupt it silently. Returns the restored step number.
+        """
+        mgr = self._require_ckpt()
+        self.flush()
+        step = mgr.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {mgr.dir}")
+        tree, extra = mgr.restore(step, self._ckpt_tree())
+        want = params_fingerprint(self.params, self.strategy)
+        if extra.get("fingerprint") != want:
+            raise ValueError(
+                "checkpoint params/strategy fingerprint mismatch — refusing "
+                "to restore an index saved under a different configuration"
+            )
+        tree = jax.tree.map(jnp.asarray, tree)
+        self._state = tree["graph"]
+        self._base_key = tree["base_key"]
+        self._op_counter = int(extra["op_counter"])
+        return step

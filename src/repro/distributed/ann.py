@@ -27,6 +27,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 
 import jax
 import jax.numpy as jnp
@@ -228,3 +229,102 @@ def distributed_insert(state, vecs, route, key, dp, mesh):
 
 def distributed_delete(state, gids, key, dp, mesh, strategy="global"):
     return make_delete_step(dp, mesh, strategy)(state, gids, key)
+
+
+class ShardedSession:
+    """Session-style driver over the sharded index (DESIGN.md §7).
+
+    The distributed twin of :class:`repro.core.session.Session`: owns the
+    stacked per-shard ``GraphState`` (donated through the jitted
+    insert/delete steps — no stacked-buffer copies per update), builds each
+    mesh program once, derives op keys from one seed chain, and dispatches
+    asynchronously — callers hold the returned device arrays and the host
+    only blocks in ``flush()`` / result consumption.
+    """
+
+    def __init__(self, dp: DistParams, mesh, *, strategy: str | None = None,
+                 seed: int = 0):
+        from repro.core.session import PhaseTimers
+
+        self.dp = dp
+        self.mesh = mesh
+        self._strategy = (strategy if strategy is not None
+                          else dp.index.maintenance.strategy)
+        self._query_step = make_query_step(dp, mesh)
+        self._insert_step = make_insert_step(dp, mesh)
+        self._delete_step = make_delete_step(dp, mesh, self._strategy)
+        self.state = init_sharded_state(dp, mesh)
+        self._base_key = jax.random.PRNGKey(seed)
+        self._op_counter = 0
+        self._pending: list[jax.Array] = []  # result arrays not yet flushed
+        self._window_t0: float | None = None
+        self.timers = PhaseTimers()
+
+    @property
+    def strategy(self) -> str:
+        return self._strategy
+
+    @strategy.setter
+    def strategy(self, value: str) -> None:
+        # the delete step bakes the strategy at build time — rebuild it so
+        # reassignment behaves like the core Session's per-dispatch strategy
+        self._strategy = value
+        self._delete_step = make_delete_step(self.dp, self.mesh, value)
+
+    def _op_key(self) -> jax.Array:
+        if self._window_t0 is None:
+            self._window_t0 = time.perf_counter()
+        key = jax.random.fold_in(self._base_key, self._op_counter)
+        self._op_counter += 1
+        return key
+
+    def query(self, queries) -> tuple[jax.Array, jax.Array]:
+        """Fan-out query → (global ids i32[B,k], scores f32[B,k]), async."""
+        t0 = time.perf_counter()
+        gids, scores = self._query_step(
+            self.state, jnp.asarray(queries), self._op_key()
+        )
+        self._pending += [gids, scores]
+        self.timers.query_s += time.perf_counter() - t0
+        self.timers.n_queries += int(jnp.shape(queries)[0])
+        self.timers.n_ops += 1
+        return gids, scores
+
+    def insert(self, vecs, route) -> jax.Array:
+        """Routed insert; returns assigned global ids (async device array)."""
+        t0 = time.perf_counter()
+        self.state, gids = self._insert_step(
+            self.state, jnp.asarray(vecs),
+            jnp.asarray(route, jnp.int32), self._op_key(),
+        )
+        self._pending.append(gids)
+        self.timers.insert_s += time.perf_counter() - t0
+        self.timers.n_inserts += int(jnp.shape(vecs)[0])
+        self.timers.n_ops += 1
+        return gids
+
+    def delete(self, gids) -> None:
+        """Owner-masked distributed delete of global ids (async)."""
+        t0 = time.perf_counter()
+        self.state = self._delete_step(
+            self.state, jnp.asarray(gids, jnp.int32), self._op_key()
+        )
+        self.timers.delete_s += time.perf_counter() - t0
+        self.timers.n_deletes += int(jnp.shape(gids)[0])
+        self.timers.n_ops += 1
+
+    def flush(self):
+        """Block until every dispatched op landed (state AND the result
+        arrays handed out since the last flush); settle the timers."""
+        t0 = time.perf_counter()
+        jax.block_until_ready(self._pending)
+        jax.block_until_ready(self.state.adj)
+        self._pending.clear()
+        self.timers.flush_s += time.perf_counter() - t0
+        if self._window_t0 is not None:
+            self.timers.wall_s += time.perf_counter() - self._window_t0
+            self._window_t0 = None
+        return self.timers
+
+    def n_alive(self) -> int:
+        return int(jnp.sum(self.state.alive))

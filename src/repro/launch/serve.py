@@ -1,8 +1,11 @@
 """Online ANN serving driver — the paper's production loop (Alg 3 at scale).
 
-Consumes an (op, payload) stream against a (optionally sharded) IPGM index
-with request batching, per-phase latency books, and quorum degradation: a
-straggling/lost shard only costs its own partial results (DESIGN.md §5).
+Drives an (op, payload) stream through a streaming :class:`Session`
+(DESIGN.md §7): each maintenance step dispatches its delete and insert ops
+asynchronously through the unified op IR and synchronizes once per step
+(``flush``), so host-side bookkeeping overlaps device execution; queries run
+through the same session for recall accounting. Per-phase latency books come
+from the session's flush-based ``PhaseTimers``.
 
     PYTHONPATH=src python -m repro.launch.serve --scale 2000 --steps 3
 """
@@ -13,7 +16,7 @@ import time
 
 import numpy as np
 
-from repro.core import IPGMIndex, IndexParams, SearchParams
+from repro.core import IndexParams, MaintenanceParams, SearchParams, Session
 from repro.data.workload import make_workload
 
 
@@ -39,12 +42,14 @@ def serve_online(
     params = IndexParams(
         capacity=capacity, dim=dim, d_out=d_out,
         search=SearchParams(pool_size=pool, max_steps=3 * pool, num_starts=2),
+        maintenance=MaintenanceParams(strategy=strategy),
     )
-    index = IPGMIndex(params, strategy=strategy, seed=seed)
+    session = Session(params, seed=seed)
 
     print(f"building base index ({n_base} × d={dim}) ...")
     t0 = time.perf_counter()
-    ids = index.insert(wl.base)
+    ids = session.insert(wl.base).result()
+    session.flush()
     id_map = list(np.asarray(ids))       # pool position → graph id
     print(f"  built in {time.perf_counter() - t0:.1f}s")
 
@@ -53,26 +58,29 @@ def serve_online(
         rec = {"step": step}
         dele_pos = wl.step_deletes[step]
         gids = [id_map[p] for p in dele_pos]
+        # one maintenance step = delete + insert dispatched back-to-back,
+        # one synchronization point
         t0 = time.perf_counter()
-        index.delete(np.asarray(gids))
-        rec["delete_s"] = time.perf_counter() - t0
+        session.delete(np.asarray(gids))
+        h_ins = session.insert(wl.step_inserts[step])
+        new_ids = h_ins.result()
+        session.flush()
+        rec["update_s"] = time.perf_counter() - t0
+        rec["update_ops_per_s"] = (len(gids) + len(new_ids)) / rec["update_s"]
+        id_map.extend(new_ids)
 
         t0 = time.perf_counter()
-        new_ids = index.insert(wl.step_inserts[step])
-        id_map.extend(np.asarray(new_ids))
-        rec["insert_s"] = time.perf_counter() - t0
-
-        t0 = time.perf_counter()
-        rec["recall@10"] = index.recall(wl.queries, k=k)
+        rec["recall@10"] = session.recall(wl.queries, k=k)
         rec["query_s"] = time.perf_counter() - t0
         rec["qps"] = n_queries / rec["query_s"]
-        rec.update(index.stats())
+        rec.update(session.stats())
         records.append(rec)
         print(
             f"step {step}: recall@{k}={rec['recall@10']:.3f} "
-            f"qps={rec['qps']:.1f} del={rec['delete_s']:.2f}s "
-            f"ins={rec['insert_s']:.2f}s alive={rec['n_alive']}"
+            f"qps={rec['qps']:.1f} upd={rec['update_s']:.2f}s "
+            f"({rec['update_ops_per_s']:.0f} ops/s) alive={rec['n_alive']}"
         )
+    print("session timers:", session.flush().to_dict())
     return records
 
 

@@ -22,6 +22,7 @@ import numpy as np
 
 from repro.core.graph import NULL
 from repro.core.maintenance import IPGMIndex
+from repro.core.session import Session
 
 
 @dataclasses.dataclass(frozen=True)
@@ -33,7 +34,19 @@ class ServeConfig:
 
 
 class BatchedServer:
-    """Pad-stable batched front-end over an :class:`IPGMIndex`.
+    """Pad-stable batched front-end over a :class:`Session`.
+
+    Accepts a streaming ``Session`` directly, or an :class:`IPGMIndex`
+    facade (whose underlying session is used). Every device step is one
+    op-IR query micro-batch at the ``max_batch`` shape — the same padded
+    program for every batch size — dispatched async and consumed when the
+    step's results are handed back.
+
+    Compile note: a session with ``unified_dispatch=True`` traces the full
+    op switch (incl. the insert/delete-repair branches) at the serving
+    shape on the first step; a query-only server can avoid that cold-start
+    cost by handing in ``Session(..., unified_dispatch=False)`` (what the
+    ``IPGMIndex`` facade uses), which compiles only the query branch.
 
     ``clock``/``sleep`` are injectable for deterministic tests of the
     batching window (tests/test_serving.py).
@@ -43,13 +56,16 @@ class BatchedServer:
 
     def __init__(
         self,
-        index: IPGMIndex,
+        index: IPGMIndex | Session,
         cfg: ServeConfig = ServeConfig(),
         *,
         clock: Callable[[], float] = time.perf_counter,
         sleep: Callable[[float], None] = time.sleep,
     ):
+        # `index` is kept only for caller introspection (back-compat attr);
+        # every device step goes through `self.session` — don't mix paths
         self.index = index
+        self.session = index.session if isinstance(index, IPGMIndex) else index
         self.cfg = cfg
         self._clock = clock
         self._sleep = sleep
@@ -98,8 +114,11 @@ class BatchedServer:
         padded = np.zeros((B, dim), np.float32)
         for i, (_, q) in enumerate(batch):
             padded[i] = q
-        ids, scores = self.index.query(padded, k=self.cfg.k)
-        ids, scores = np.asarray(ids), np.asarray(scores)
+        # one op-IR micro-batch at the pad-stable max_batch shape; the
+        # handle resolves (blocks) only when this step's results are needed
+        ids, scores = self.session.query(
+            padded, k=self.cfg.k, chunk=B
+        ).result()
         self.stats["batches"] += 1
         self.stats["requests"] += len(batch)
         self.stats["pad_waste"] += 1.0 - len(batch) / B

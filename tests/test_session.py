@@ -1,0 +1,406 @@
+"""Session API (DESIGN.md §7): op IR, donation, flush, padding, checkpoints.
+
+The module-scoped fixtures share one compiled switch program across tests —
+the full lax.switch traces every branch, so re-tracing per test would
+dominate the suite's wall clock.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (
+    IndexParams,
+    IPGMIndex,
+    MaintenanceParams,
+    SearchParams,
+    Session,
+    run_workload,
+)
+from repro.core.graph import NULL
+from repro.core import ops as ops_mod
+
+CHUNK = 16
+DIM = 8
+
+
+def _params():
+    return IndexParams(
+        capacity=192, dim=DIM, d_out=6,
+        search=SearchParams(pool_size=16, max_steps=48, num_starts=2),
+        maintenance=MaintenanceParams(
+            strategy="global", insert_chunk=CHUNK, delete_chunk=CHUNK
+        ),
+    )
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(0)
+    return (
+        rng.normal(size=(100, DIM)).astype(np.float32),   # base
+        rng.normal(size=(20, DIM)).astype(np.float32),    # queries
+        rng,
+    )
+
+
+def _fresh_session(**kw):
+    return Session(_params(), seed=0, **kw)
+
+
+# ---------------------------------------------------------------------------
+# tentpole: mixed stream through the unified op IR == per-op facade
+# ---------------------------------------------------------------------------
+
+def test_mixed_stream_matches_facade(data):
+    """One async session stream must reproduce the per-op facade bit-exactly:
+    same query ids/scores (despite different micro-batch shapes — the facade
+    pads queries to ``query_chunk``), same insert ids, same final graph."""
+    X, Q, rng = data
+    idx = IPGMIndex(_params(), seed=0)
+    f_ins = np.asarray(idx.insert(X))
+    f_ids, f_scores = idx.query(Q, k=7)
+    idx.delete(f_ins[:12])
+    f_ids2, f_scores2 = idx.query(Q, k=7)
+
+    sess = _fresh_session()
+    h_ins = sess.insert(X)
+    h_q1 = sess.query(Q, k=7)
+    s_ins = h_ins.result()
+    h_del = sess.delete(s_ins[:12])
+    h_q2 = sess.query(Q, k=7)
+    sess.flush()
+
+    assert np.array_equal(f_ins, s_ins)
+    s_ids, s_scores = h_q1.result()
+    assert np.array_equal(f_ids, s_ids)
+    assert np.array_equal(f_scores, s_scores)
+    s_ids2, s_scores2 = h_q2.result()
+    assert np.array_equal(f_ids2, s_ids2)
+    assert np.array_equal(f_scores2, s_scores2)
+    assert h_del.result() is None
+    for fld in ("adj", "radj", "alive", "present", "vectors"):
+        assert np.array_equal(
+            np.asarray(getattr(idx.state, fld)),
+            np.asarray(getattr(sess.state, fld)),
+        ), fld
+
+
+def test_unified_and_static_dispatch_agree(data):
+    """The traced-op_code switch program and the trace-time branch selection
+    are the same code — results must match exactly."""
+    X, Q, _ = data
+    outs = []
+    for unified in (True, False):
+        sess = Session(_params(), seed=0, unified_dispatch=unified)
+        ins = sess.insert(X).result()
+        sess.delete(ins[:10])
+        ids, scores = sess.query(Q, k=5).result()
+        sess.flush()
+        outs.append((ins, ids, scores, np.asarray(sess.state.adj)))
+    for a, b in zip(outs[0], outs[1]):
+        assert np.array_equal(a, b)
+
+
+def test_query_results_invariant_to_chunk_shape(data):
+    """Per-item PRNG folds make query results independent of how the stream
+    is chopped into micro-batches (DESIGN.md §7)."""
+    X, Q, _ = data
+    r = {}
+    for chunk in (4, CHUNK, 64):
+        sess = _fresh_session()
+        sess.insert(X)
+        r[chunk] = sess.query(Q, k=9, chunk=chunk).result()
+    for chunk in (CHUNK, 64):
+        assert np.array_equal(r[4][0], r[chunk][0])
+        assert np.array_equal(r[4][1], r[chunk][1])
+
+
+# ---------------------------------------------------------------------------
+# ragged final-chunk padding (satellite): padded == unpadded reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("length", [1, CHUNK - 1, CHUNK, CHUNK + 1])
+def test_ragged_query_padding(data, length):
+    X, Q_all, rng = data
+    Q = rng.normal(size=(length, DIM)).astype(np.float32)
+    padded = _fresh_session()
+    padded.insert(X)
+    ids_p, scores_p = padded.query(Q, k=5).result()
+    # unchunked reference: the identical op sequence with micro-batches
+    # sized exactly to the stream (no padding lanes at all)
+    exact = _fresh_session()
+    exact.insert(X)
+    ids_e, scores_e = exact.query(Q, k=5, chunk=length).result()
+    assert ids_p.shape == (length, 5)
+    assert np.array_equal(ids_p, ids_e)
+    # per-item keys are shape-invariant, so the walks visit the same
+    # vertices; scores may differ in ulps across differently-shaped
+    # compiled programs (XLA picks a different reduction vectorization)
+    np.testing.assert_allclose(scores_p, scores_e, rtol=1e-5, atol=1e-6)
+
+
+def _replay_exact(sess: Session, op_code: int, arr, fold_chunk_key: bool):
+    """Reference path: the session's op, but every micro-batch dispatched at
+    its exact (unpadded) size — what the padded stream must reproduce."""
+    key = sess._op_key()
+    state = sess.state
+    outs = []
+    for ci, lo in enumerate(range(0, arr.shape[0], CHUNK)):
+        part = arr[lo:lo + CHUNK]
+        batch = ops_mod.make_op(
+            op_code, part.shape[0], DIM,
+            payload=None if op_code == ops_mod.OP_DELETE else part,
+            ids=part if op_code == ops_mod.OP_DELETE else None,
+            offset=lo,
+        )
+        ckey = jax.random.fold_in(key, ci) if fold_chunk_key else key
+        state, ids, _ = ops_mod.apply_ops_step(
+            state, batch, ckey, sess.params, sess.strategy,
+            static_op=op_code,
+        )
+        outs.append(np.asarray(ids))
+    sess._state = state  # the old reference was donated away above
+    return outs
+
+
+@pytest.mark.parametrize("length", [1, CHUNK - 1, CHUNK, CHUNK + 1])
+def test_ragged_insert_padding(data, length):
+    X, Q, rng = data
+    V = rng.normal(size=(length, DIM)).astype(np.float32)
+    padded = _fresh_session()
+    padded.insert(X)
+    ids_p = padded.insert(V).result()
+
+    exact = _fresh_session()
+    exact.insert(X)
+    outs = _replay_exact(exact, ops_mod.OP_INSERT, V, fold_chunk_key=False)
+    ids_e = np.concatenate([o[:, 0] for o in outs])
+
+    assert ids_p.shape == (length,)
+    assert np.array_equal(ids_p, ids_e)
+    assert (ids_p != NULL).all()
+    for fld in ("adj", "radj", "alive", "vectors"):
+        assert np.array_equal(
+            np.asarray(getattr(padded.state, fld)),
+            np.asarray(getattr(exact.state, fld)),
+        ), fld
+    alive = np.asarray(padded.state.alive)
+    assert alive[ids_p].all() and alive.sum() == 100 + length
+
+
+@pytest.mark.parametrize("length", [1, CHUNK - 1, CHUNK, CHUNK + 1])
+def test_ragged_delete_padding(data, length):
+    X, Q, rng = data
+    padded = _fresh_session()
+    base_ids = padded.insert(X).result()
+    victims = base_ids[:length]
+    padded.delete(victims)
+    padded.flush()
+
+    exact = _fresh_session()
+    exact.insert(X)
+    _replay_exact(exact, ops_mod.OP_DELETE, victims, fold_chunk_key=True)
+
+    for fld in ("adj", "radj", "alive", "present"):
+        assert np.array_equal(
+            np.asarray(getattr(padded.state, fld)),
+            np.asarray(getattr(exact.state, fld)),
+        ), fld
+    alive = np.asarray(padded.state.alive)
+    assert not alive[victims].any()
+    assert alive.sum() == 100 - length
+
+
+# ---------------------------------------------------------------------------
+# donation (acceptance): the jitted step consumes the state buffers
+# ---------------------------------------------------------------------------
+
+def test_update_step_donates_state(data):
+    X, Q, rng = data
+    sess = _fresh_session()
+    sess.insert(X)
+    sess.flush()
+    st0 = sess.state
+    sess.insert(rng.normal(size=(4, DIM)).astype(np.float32))
+    sess.flush()
+    # the pre-dispatch state buffers were donated to the step...
+    assert st0.vectors.is_deleted()
+    assert st0.adj.is_deleted()
+    # ...and the session holds only the returned (live) state
+    assert not sess.state.vectors.is_deleted()
+    assert not sess.state.adj.is_deleted()
+    # queries run through the same donating step: state is re-aliased, and
+    # no call-site retains the stale pre-donation reference
+    st1 = sess.state
+    sess.query(Q, k=3)
+    sess.flush()
+    assert st1.vectors.is_deleted()
+    assert not sess.state.vectors.is_deleted()
+
+
+def test_apply_ops_lowering_marks_donation():
+    """The compiled step itself declares the GraphState input donated
+    (input→output aliasing), independent of runtime buffer bookkeeping."""
+    p = _params()
+    sess = Session(p, seed=0)
+    batch = ops_mod.make_op(ops_mod.OP_INSERT, CHUNK, DIM,
+                            payload=np.zeros((4, DIM), np.float32))
+    lowered = ops_mod.apply_ops_step.lower(
+        sess.state, batch, jax.random.PRNGKey(0), p, "global",
+        static_op=None,
+    )
+    txt = lowered.as_text()
+    assert "tf.aliasing_output" in txt, "GraphState args must be donated"
+
+
+# ---------------------------------------------------------------------------
+# checkpoint integration (satellite)
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_save_mutate_restore_roundtrip(tmp_path, data):
+    X, Q, rng = data
+    sess = Session(_params(), seed=0, checkpoint_dir=tmp_path)
+    ids = sess.insert(X).result()
+    sess.save(step=1)
+    ref_ids, ref_scores = sess.query(Q, k=8).result()
+
+    # mutate: churn the graph past the checkpoint
+    sess.delete(ids[:30])
+    sess.insert(rng.normal(size=(25, DIM)).astype(np.float32))
+    mut_ids, _ = sess.query(Q, k=8).result()
+    assert not np.array_equal(ref_ids, mut_ids)
+
+    # restore rolls back state AND the PRNG chain: the next query replays
+    # the op index the reference query ran at → bit-exact results
+    step = sess.restore()
+    assert step == 1
+    got_ids, got_scores = sess.query(Q, k=8).result()
+    assert np.array_equal(ref_ids, got_ids)
+    assert np.array_equal(ref_scores, got_scores)
+    assert sess.stats()["n_alive"] == 100
+
+
+def test_checkpoint_rejects_params_mismatch(tmp_path, data):
+    X, _, _ = data
+    sess = Session(_params(), seed=0, checkpoint_dir=tmp_path)
+    sess.insert(X)
+    sess.save(step=3)
+    other = Session(
+        dataclasses.replace(_params(), d_out=8), seed=0,
+        checkpoint_dir=tmp_path,
+    )
+    with pytest.raises(ValueError, match="fingerprint"):
+        other.restore()
+    mism = Session(_params(), strategy="mask", checkpoint_dir=tmp_path)
+    with pytest.raises(ValueError, match="fingerprint"):
+        mism.restore()
+
+
+def test_session_without_checkpoint_dir_raises(data):
+    sess = _fresh_session()
+    with pytest.raises(ValueError, match="checkpoint_dir"):
+        sess.save(0)
+
+
+# ---------------------------------------------------------------------------
+# params satellites + timers + workload driver
+# ---------------------------------------------------------------------------
+
+def test_params_defaults_not_shared():
+    """Mutable-default hazard: each IndexParams must own fresh sub-configs
+    (dataclasses.field(default_factory=...), not a shared class instance)."""
+    a = IndexParams(capacity=8, dim=2)
+    b = IndexParams(capacity=8, dim=2)
+    assert a.search is not b.search
+    assert a.maintenance is not b.maintenance
+    assert a == b  # still value-equal (jit static-arg hashing intact)
+    assert hash(a) == hash(b)
+
+
+def test_facade_ctor_overrides_maintenance_params():
+    p = _params()
+    idx = IPGMIndex(p, strategy="mask", insert_chunk=8, delete_chunk=4)
+    assert idx.strategy == "mask"
+    assert idx.params.maintenance.insert_chunk == 8
+    assert idx.params.maintenance.delete_chunk == 4
+    # the caller's params object is untouched (frozen, replaced not mutated)
+    assert p.maintenance.strategy == "global"
+    with pytest.raises(ValueError, match="strategy"):
+        IPGMIndex(p, strategy="nope")
+
+
+def test_facade_chunk_setters_stay_assignable(data):
+    """The property suite drives `idx.insert_chunk = batch` — the facade's
+    chunk knobs must stay writable even though they now live on the typed
+    MaintenanceParams (regression: getter-only property broke assignment)."""
+    X, _, _ = data
+    idx = IPGMIndex(_params(), seed=0)
+    idx.insert(X[:20])
+    idx.insert_chunk = 7
+    idx.delete_chunk = 5
+    assert idx.insert_chunk == 7 and idx.delete_chunk == 5
+    ids = np.asarray(idx.insert(X[20:40]))
+    assert (ids != NULL).all()
+    idx.delete(ids[:6])
+    assert idx.stats()["n_alive"] == 34
+
+
+def test_stream_workload_recall_uses_stream_position_state(data):
+    """A query's ground truth must be evaluated against the graph at the
+    query's stream position, not the post-stream final state (regression:
+    the consume loop used to flush and brute-force the final graph)."""
+    X, Q, _ = data
+    stream_ops = [("query", Q), ("delete", np.arange(50))]
+    sess = _fresh_session()
+    sess.insert(X)
+    recs = run_workload(sess, list(stream_ops), k=5)
+    idx = IPGMIndex(_params(), seed=0)
+    idx.insert(X)
+    legacy = run_workload(idx, list(stream_ops), k=5)
+    # query results are parity-exact and GT now snapshots pre-churn state,
+    # so the two drivers must report the same recall
+    assert recs[0]["recall"] == pytest.approx(legacy[0]["recall"], abs=1e-9)
+
+
+def test_consumed_handles_retire_from_pending(data):
+    """Serving loops resolve every handle but may never flush(): consumed
+    handles must leave the session's pending set (regression: they
+    accumulated unboundedly) and the timer window must still close."""
+    X, Q, _ = data
+    sess = _fresh_session()
+    sess.insert(X).result()
+    for _ in range(5):
+        sess.query(Q[:4], k=3).result()
+    assert sess._pending == []
+    assert sess.timers.wall_s > 0.0
+    assert sess.timers.to_dict()["ops_per_s"] > 0.0
+    # an unconsumed handle stays pending until flush retires it
+    h = sess.query(Q[:4], k=3)
+    assert sess._pending == [h]
+    sess.flush()
+    assert sess._pending == []
+
+
+def test_timers_summary_and_stream_workload(data):
+    X, Q, rng = data
+    sess = _fresh_session()
+    sess.insert(X).result()
+    recs = run_workload(sess, [
+        ("delete", np.arange(5)),
+        ("insert", rng.normal(size=(5, DIM)).astype(np.float32)),
+        ("query", Q),
+    ], k=5)
+    assert [r["op"] for r in recs] == ["delete", "insert", "query", "summary"]
+    assert all("ops_per_s" in r for r in recs)
+    assert recs[2]["recall"] > 0.5
+    summary = recs[-1]
+    assert summary["n"] == 5 + 5 + len(Q)
+    t = summary["timers"]
+    for key in ("query_s", "insert_s", "delete_s", "flush_s", "wall_s",
+                "n_queries", "n_inserts", "n_deletes", "n_ops", "total_s",
+                "ops_per_s"):
+        assert key in t, key
+    assert t["n_queries"] == len(Q) and t["n_deletes"] == 5
+    assert t["ops_per_s"] > 0
