@@ -1,4 +1,10 @@
-"""IPGM core — the paper's contribution as a composable JAX module."""
+"""IPGM core — the paper's contribution as a composable JAX module.
+
+NOTE: the consolidation engine's functions live in ``repro.core.consolidate``
+and are intentionally NOT re-exported here — binding the ``consolidate``
+function at package level would shadow the submodule of the same name and
+break ``from repro.core import consolidate as consolidate_mod`` imports.
+"""
 from repro.core.graph import NULL, GraphState, graph_stats, init_graph
 from repro.core.maintenance import IPGMIndex, run_workload
 from repro.core.ops import OpBatch, apply_ops, apply_ops_step

@@ -4,60 +4,154 @@ The paper observes that MASK "space grows continuously as the stream
 performs, which may cause inevitable memory issues". Production systems
 (FreshDiskANN's streaming merge) periodically *consolidate*: physically
 remove tombstoned vertices while repairing connectivity with the best
-available strategy. This module implements that pass — MASK's cheap O(1)
-deletes between consolidations, GLOBAL-quality graph afterwards — giving
-the latency/quality trade-off knob a deployment actually runs.
+available strategy — MASK's cheap O(1) deletes between consolidations,
+GLOBAL-quality graph afterwards.
+
+Since the consolidation-engine rewrite (DESIGN.md §8) the pass is a
+first-class device-resident subsystem: :func:`consolidate_chunk_impl` is a
+traceable, fixed-shape compaction step built on the shared delete repair
+appliers (``delete.REPAIR_APPLIERS``) and the bulk scatter primitives —
+repair plans for a chunk of tombstones computed via the batched beam
+engine, applied in grouped scatters, freed slots returned to the allocator
+(``present=False`` → reusable by ``insert``). It runs inside the session as
+the ``OP_CONSOLIDATE`` op-IR branch (``core/ops.py``), auto-triggered by
+``MaintenanceParams.consolidate_threshold`` at delete/flush boundaries
+(``core/session.py``) and per-shard by ``ShardedSession``.
+
+The host-side helpers below keep the legacy surface: ``consolidate`` /
+``maybe_consolidate`` route an ``IPGMIndex`` or ``Session`` through the
+jitted pass; ``consolidate_reference`` is the pre-rewrite revive-then-delete
+path, now exception-safe (state/strategy roll back if repair raises) and
+kept as the semantic parity oracle (``tests/test_serving.py``).
 """
 from __future__ import annotations
 
+import dataclasses
+
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import delete as delete_mod
-from repro.core.graph import GraphState
-from repro.core.maintenance import IPGMIndex
+from repro.core.graph import NULL, GraphState
+from repro.core.params import IndexParams
 
 
 def masked_fraction(state: GraphState) -> float:
-    import jax.numpy as jnp
+    """Tombstone share of the traversable graph (host-side, synchronizes)."""
     n_masked = float(jnp.sum(state.masked))
     n_present = float(jnp.sum(state.present))
     return n_masked / max(n_present, 1.0)
 
 
-def consolidate(index: IPGMIndex, *, strategy: str = "global",
-                chunk: int | None = None) -> int:
-    """Physically remove every tombstone, repairing edges with ``strategy``.
+def consolidate_chunk_impl(
+    state: GraphState,
+    ids: jax.Array,       # i32[B]  tombstone slots (NULL padded)
+    valid: jax.Array,     # bool[B]
+    key: jax.Array,
+    params: IndexParams,
+) -> tuple[GraphState, jax.Array]:
+    """Traceable compaction of one tombstone chunk (the §8 device pass).
 
-    Returns the number of consolidated vertices. Tombstones are temporarily
-    revived (alive=True) so the repair delete path's precheck accepts them;
-    their in/out edges are then rewired exactly as a fresh delete would.
+    Lanes that are not actual tombstones (``present & ~alive``) are dropped,
+    so the step is idempotent and safe against stale frames. Phases:
+
+      1. repair — the configured ``consolidate_strategy``'s vectorized
+         applier rewires every surviving in-neighbor's row (LOCAL splice /
+         GLOBAL re-search via the batched beam engine; "pure" skips repair).
+         Tombstones are already non-alive, so repair searches and
+         SELECT-NEIGHBORS can never re-link them.
+      2. scrub + free — ``_finalize_removal`` NULLs every edge into the
+         chunk and clears ``present``, returning the slots to the allocator
+         (``size`` was already decremented when MASK tombstoned them).
+
+    Returns (state, n_consolidated i32[]).
     """
-    import dataclasses
+    strategy = params.maintenance.consolidate_strategy
+    valid = valid & (ids != NULL)
+    safe = jnp.where(valid, ids, 0)
+    valid = valid & state.masked[safe]
+    dead = delete_mod._dead_mask(state, ids, valid)
+    if strategy != "pure":
+        state = delete_mod.REPAIR_APPLIERS[strategy](
+            state, ids, valid, dead, key, params
+        )
+    state = delete_mod._finalize_removal(state, ids, valid)
+    return state, jnp.sum(valid).astype(jnp.int32)
 
-    import jax.numpy as jnp
 
-    state = index.state
+# ---------------------------------------------------------------------------
+# Host-side drivers (legacy surface) — route through the session's jitted
+# pass; accept an IPGMIndex (``.session``) or a Session directly.
+# ---------------------------------------------------------------------------
+
+def _session_of(index):
+    return getattr(index, "session", index)
+
+
+def consolidate(index, *, strategy: str | None = None,
+                chunk: int | None = None) -> int:
+    """Physically remove every tombstone through the jitted compaction pass.
+
+    ``strategy=None`` inherits the configured
+    ``MaintenanceParams.consolidate_strategy`` (same default as
+    ``IPGMIndex.consolidate``). Returns the number of consolidated vertices.
+    Synchronous: the session is flushed before returning, so the caller
+    observes the compacted state.
+    """
+    sess = _session_of(index)
+    n = sess.consolidate(strategy=strategy, chunk=chunk)
+    sess.flush()
+    return n
+
+
+def maybe_consolidate(index, *, threshold: float = 0.2,
+                      strategy: str | None = None) -> int:
+    """Consolidate when tombstones exceed ``threshold`` of the graph.
+
+    One-shot host-side check; for a standing policy set
+    ``MaintenanceParams.consolidate_threshold`` and let the session
+    auto-trigger at delete/flush boundaries instead (DESIGN.md §8).
+    """
+    if masked_fraction(_session_of(index).state) >= threshold:
+        return consolidate(index, strategy=strategy)
+    return 0
+
+
+def consolidate_reference(index, *, strategy: str = "global") -> int:
+    """The pre-rewrite revive-then-delete pass — the parity oracle.
+
+    Tombstones are temporarily revived (``alive=True``) so the delete
+    strategy's precheck accepts them, then deleted for real. Exception-safe:
+    the index's state and strategy are snapshotted up front and rolled back
+    if the repair raises, so a failed pass can no longer leave the index
+    half-revived with a foreign strategy installed. Semantically equivalent
+    to :func:`consolidate` (same alive/present sets, invariant-clean graph);
+    edge-level results differ because the repair searches draw from the
+    delete op-key chain rather than the consolidation chain.
+    """
+    sess = _session_of(index)
+    sess.flush()
+    state = sess.state
     masked_ids = np.flatnonzero(np.asarray(state.masked))
     if masked_ids.size == 0:
         return 0
-    # revive → alive so the strategy's precheck accepts the batch
-    alive = state.alive.at[jnp.asarray(masked_ids)].set(True)
-    index.state = dataclasses.replace(
-        state, alive=alive,
-        size=state.size + jnp.asarray(masked_ids.size, jnp.int32),
-    )
+    # rollback anchor: a deep copy — the delete path donates the live
+    # buffers, so the snapshot must own its memory
+    snapshot = jax.tree.map(jnp.copy, state)
     old_strategy = index.strategy
-    index.strategy = strategy
     try:
+        # revive → alive so the strategy's precheck accepts the batch
+        alive = state.alive.at[jnp.asarray(masked_ids)].set(True)
+        index.state = dataclasses.replace(
+            state, alive=alive,
+            size=state.size + jnp.asarray(masked_ids.size, jnp.int32),
+        )
+        index.strategy = strategy
         index.delete(masked_ids)
+    except BaseException:
+        index.state = snapshot
+        raise
     finally:
         index.strategy = old_strategy
     return int(masked_ids.size)
-
-
-def maybe_consolidate(index: IPGMIndex, *, threshold: float = 0.2,
-                      strategy: str = "global") -> int:
-    """Consolidate when tombstones exceed ``threshold`` of the graph."""
-    if masked_fraction(index.state) >= threshold:
-        return consolidate(index, strategy=strategy)
-    return 0

@@ -162,14 +162,17 @@ def _local_repair_plan(
     return u_flat, x_flat, z_flat, u_valid
 
 
-def delete_local(
-    state: GraphState, ids: jax.Array, valid: jax.Array, key, params: IndexParams
+def _local_repair_apply(
+    state: GraphState, ids: jax.Array, valid: jax.Array, dead: jax.Array,
+    key, params: IndexParams,
 ) -> GraphState:
-    """LOCAL with the vectorized applier: splices grouped per u, one scatter."""
-    del key
-    valid = _precheck(state, ids, valid)
-    state = _mark_dead(state, ids, valid)
-    dead = _dead_mask(state, ids, valid)
+    """LOCAL plan + vectorized applier: splices grouped per u, one scatter.
+
+    Shared by ``delete_local`` and the consolidation pass (DESIGN.md §8) —
+    the ``dead`` mask is the caller's batch, which for consolidation is a
+    chunk of tombstones rather than freshly marked deletions.
+    """
+    del key, params
     cap, d_out = state.capacity, state.d_out
     u_flat, _, z_flat, u_valid = _local_repair_plan(state, ids, valid, dead)
 
@@ -200,7 +203,17 @@ def delete_local(
         (old_rows != NULL) & dead[jnp.maximum(old_rows, 0)], NULL, old_rows
     )
     packed = pack_rows(jnp.concatenate([old_rows, adds_rows], axis=1))
-    state = set_out_edges_batch(state, uid, packed[:, :d_out], u_ok)
+    return set_out_edges_batch(state, uid, packed[:, :d_out], u_ok)
+
+
+def delete_local(
+    state: GraphState, ids: jax.Array, valid: jax.Array, key, params: IndexParams
+) -> GraphState:
+    """LOCAL with the vectorized applier: splices grouped per u, one scatter."""
+    valid = _precheck(state, ids, valid)
+    state = _mark_dead(state, ids, valid)
+    dead = _dead_mask(state, ids, valid)
+    state = _local_repair_apply(state, ids, valid, dead, key, params)
     return _finalize_removal(state, ids, valid)
 
 
@@ -282,6 +295,19 @@ def _global_repair_plan(
     return u_flat, u_valid, new_nbrs
 
 
+def _global_repair_apply(
+    state: GraphState, ids: jax.Array, valid: jax.Array, dead: jax.Array,
+    key, params: IndexParams,
+) -> GraphState:
+    """GLOBAL plan + vectorized applier: wholesale row replacement of every
+    repaired u in one ``set_out_edges_batch`` scatter. Shared by
+    ``delete_global`` and the consolidation pass (DESIGN.md §8)."""
+    u_flat, u_valid, new_nbrs = _global_repair_plan(
+        state, ids, valid, dead, key, params
+    )
+    return set_out_edges_batch(state, u_flat, new_nbrs, u_valid)
+
+
 def delete_global(
     state: GraphState, ids: jax.Array, valid: jax.Array, key, params: IndexParams
 ) -> GraphState:
@@ -290,10 +316,7 @@ def delete_global(
     valid = _precheck(state, ids, valid)
     state = _mark_dead(state, ids, valid)
     dead = _dead_mask(state, ids, valid)
-    u_flat, u_valid, new_nbrs = _global_repair_plan(
-        state, ids, valid, dead, key, params
-    )
-    state = set_out_edges_batch(state, u_flat, new_nbrs, u_valid)
+    state = _global_repair_apply(state, ids, valid, dead, key, params)
     return _finalize_removal(state, ids, valid)
 
 
@@ -316,6 +339,15 @@ def delete_global_reference(
     state = jax.lax.fori_loop(0, u_flat.shape[0], body, state)
     return _finalize_removal(state, ids, valid)
 
+
+# the vectorized repair appliers, keyed the way the consolidation pass
+# (core/consolidate.py) selects them; signature (state, ids, valid, dead,
+# key, params) → state — the ``dead`` mask is supplied by the caller so the
+# same appliers serve freshly marked deletions and long-lived tombstones
+REPAIR_APPLIERS = {
+    "local": _local_repair_apply,
+    "global": _global_repair_apply,
+}
 
 _STRATEGY_FNS = {
     "pure": delete_pure,

@@ -417,6 +417,28 @@ def free_slots(state: GraphState, ids: jax.Array, valid: jax.Array) -> GraphStat
     )
 
 
+def mask_to_slots(mask: jax.Array, n: int) -> tuple[jax.Array, jax.Array]:
+    """Compact the lowest ``n`` set positions of ``mask`` into a fixed frame.
+
+    Returns (ids i32[n] NULL padded, valid bool[n]): the ≤ n lowest True
+    indices of ``mask`` in ascending order, valid lanes first. The
+    fixed-shape bridge from a data-dependent slot set (e.g. the tombstone
+    mask consumed by a CONSOLIDATE micro-batch) to a batched op frame —
+    jit-safe, one ``top_k`` over negated ids.
+    """
+    cap = mask.shape[0]
+    take = min(n, cap)
+    sentinel = jnp.int32(-cap - 1)
+    score = jnp.where(mask, -jnp.arange(cap, dtype=jnp.int32), sentinel)
+    vals, ids = jax.lax.top_k(score, take)  # largest score = lowest set id
+    valid = vals > sentinel
+    ids = jnp.where(valid, ids, NULL).astype(jnp.int32)
+    if n > cap:
+        ids = jnp.concatenate([ids, jnp.full((n - cap,), NULL, jnp.int32)])
+        valid = jnp.concatenate([valid, jnp.zeros((n - cap,), bool)])
+    return ids, valid
+
+
 def next_free_slot(state: GraphState) -> jax.Array:
     """First non-present slot (freelist head). capacity if full."""
     return jnp.argmin(state.present)  # False < True; full graph → 0 (caller checks)

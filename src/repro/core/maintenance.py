@@ -136,6 +136,17 @@ class IPGMIndex:
         self.session.delete(ids)
         self.session.flush()
 
+    def consolidate(self, *, strategy: str | None = None,
+                    chunk: int | None = None) -> int:
+        """Physically remove every tombstone (jitted compaction, §8).
+
+        Synchronous like the other facade ops: dispatch + flush. Returns
+        the number of consolidated vertices.
+        """
+        n = self.session.consolidate(strategy=strategy, chunk=chunk)
+        self.session.flush()
+        return n
+
     def rebuild_from_alive(self) -> None:
         """ReBuild baseline: reconstruct the whole graph from alive vectors."""
         self.session.rebuild_from_alive()
@@ -159,7 +170,7 @@ def run_workload(
     """Drive an (op, payload) stream — Alg 3's outer loop as a stream compiler.
 
     ops: ("query", Q[B,dim]) | ("insert", X[B,dim]) | ("delete", ids[B])
-       | ("rebuild", None)
+       | ("rebuild", None) | ("consolidate", None)
 
     Given a :class:`Session`, the whole stream is dispatched up front
     (async, op-IR micro-batches) and results are consumed in order —
@@ -196,6 +207,8 @@ def run_workload(
         elif op == "rebuild":
             index.rebuild_from_alive()
             rec["n"] = 1
+        elif op == "consolidate":
+            rec["n"] = index.consolidate()
         else:
             raise ValueError(op)
         if "seconds" not in rec:
@@ -246,6 +259,13 @@ def _run_workload_stream(
             session.rebuild_from_alive()  # host path — synchronizes
             rec["seconds"] = time.perf_counter() - t0
             h, rec["n"] = None, 1
+        elif op == "consolidate":
+            # syncs on the dispatched stream (exact tombstone count), then
+            # dispatches the compaction micro-batches asynchronously
+            t0 = time.perf_counter()
+            rec["n"] = session.consolidate()
+            rec["seconds"] = time.perf_counter() - t0
+            h = None
         else:
             raise ValueError(op)
         staged.append((rec, h, gt))
@@ -269,7 +289,8 @@ def _run_workload_stream(
         records.append(rec)
     timers = session.flush()
     total = time.perf_counter() - t_start
-    n_items = sum(r["n"] for r in records if r["op"] != "rebuild")
+    n_items = sum(r["n"] for r in records
+                  if r["op"] not in ("rebuild", "consolidate"))
     records.append({
         "op": "summary",
         "n": n_items,

@@ -11,10 +11,19 @@ index every micro-batch, and queries alias it straight through
 
 Op codes::
 
-    OP_QUERY  (0)  payload = queries f32[B, dim]  → ids/scores [B, K]
-    OP_INSERT (1)  payload = vectors f32[B, dim]  → assigned ids in ids[:, 0]
-    OP_DELETE (2)  ids     = vertex ids i32[B]    → state change only
-    OP_NOOP   (3)  padding op — state unchanged, empty results
+    OP_QUERY       (0)  payload = queries f32[B, dim]  → ids/scores [B, K]
+    OP_INSERT      (1)  payload = vectors f32[B, dim]  → assigned ids in ids[:, 0]
+    OP_DELETE      (2)  ids     = vertex ids i32[B]    → state change only
+    OP_NOOP        (3)  padding op — state unchanged, empty results
+    OP_CONSOLIDATE (4)  no operands — compacts up to B tombstones (the
+                        lowest-id masked slots at this stream position,
+                        DESIGN.md §8); consolidated ids ride in ids[:, 0].
+                        Static-dispatch only: consolidation is always
+                        host-initiated (a maintenance pass, never a
+                        data-dependent stream op), so it is excluded from
+                        the traced switch — mixed-stream programs stay at
+                        four branches and sessions that never consolidate
+                        never compile the repair machinery
 
 ``valid`` masks the padded lanes of a ragged final micro-batch; ``offset``
 is the micro-batch's global item offset within its op, which keys the
@@ -44,19 +53,27 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import consolidate as consolidate_mod
 from repro.core import delete as delete_mod
 from repro.core import insert as insert_mod
 from repro.core import search
-from repro.core.graph import NULL, GraphState
+from repro.core.graph import NULL, GraphState, mask_to_slots
 from repro.core.params import IndexParams
 
 OP_QUERY = 0
 OP_INSERT = 1
 OP_DELETE = 2
 OP_NOOP = 3
+OP_CONSOLIDATE = 4
 
 OP_NAMES = {OP_QUERY: "query", OP_INSERT: "insert", OP_DELETE: "delete",
-            OP_NOOP: "noop"}
+            OP_NOOP: "noop", OP_CONSOLIDATE: "consolidate"}
+
+# PRNG stream id of the consolidation key chain (DESIGN.md §8): maintenance
+# keys are folded from fold_in(base_key, CONSOLIDATE_KEY_STREAM) + their own
+# counter, NEVER from the op-key chain — auto-triggered consolidations must
+# not shift the keys (and therefore the results) of subsequent stream ops.
+CONSOLIDATE_KEY_STREAM = 0x7FFFFFFF
 
 
 @functools.partial(
@@ -151,6 +168,21 @@ def apply_ops(
         )
         return st2, empty_ids, empty_scores
 
+    def _consolidate(st: GraphState):
+        # operand-free: the branch picks its own work — the B lowest-id
+        # tombstones at this stream position — so chunked dispatch drains
+        # the mask deterministically (DESIGN.md §8)
+        tomb, tv = mask_to_slots(st.masked, B)
+        st2, _ = consolidate_mod.consolidate_chunk_impl(
+            st, tomb, tv, key, params
+        )
+        out_ids = empty_ids.at[:, 0].set(jnp.where(tv, tomb, NULL))
+        return st2, out_ids, empty_scores
+
+    if static_op == OP_CONSOLIDATE:
+        # maintenance op, host-initiated by definition: compiled on its own,
+        # only by sessions that actually consolidate (see module docstring)
+        return _consolidate(state)
     branches = (_query, _insert, _delete, _noop)
     if static_op is not None:
         # Python-level selection: compiles only this branch (facade mode)

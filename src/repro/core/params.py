@@ -28,7 +28,7 @@ class SearchParams:
 
 @dataclasses.dataclass(frozen=True)
 class MaintenanceParams:
-    """Update-path knobs of the online index (DESIGN.md §7).
+    """Update-path knobs of the online index (DESIGN.md §7/§8).
 
     ``strategy`` is the delete strategy (Alg 4–6 / §5.2); the chunk sizes are
     the op-IR micro-batch widths: every insert/delete stream is chopped into
@@ -36,14 +36,30 @@ class MaintenanceParams:
     masked lanes), so one compiled ``apply_ops`` program serves any stream
     length. Keeping ``insert_chunk == delete_chunk`` lets a mixed stream run
     through a single compiled switch program (one shape family).
+
+    Consolidation (DESIGN.md §8) is what makes MASK's tombstones sustainable
+    on an unbounded stream: ``consolidate_threshold`` arms the session's
+    auto-trigger (fires when masked/present crosses it; ``None`` disables),
+    ``consolidate_strategy`` picks the repair used by the jitted compaction
+    pass ("pure" = scrub only, "local"/"global" = Alg 5/6 repair of the
+    survivors' rows), and ``consolidate_chunk`` is the tombstones-per-
+    micro-batch width (``None`` → ``delete_chunk``, keeping the stream in
+    one compiled shape family).
     """
 
     strategy: str = "global"   # "pure" | "mask" | "local" | "global" (+ _reference)
     insert_chunk: int = 64
     delete_chunk: int = 64
+    consolidate_threshold: float | None = None  # masked/present auto-trigger
+    consolidate_strategy: str = "global"        # "pure" | "local" | "global"
+    consolidate_chunk: int | None = None        # None → delete_chunk
 
     def __post_init__(self):
         assert self.insert_chunk >= 1 and self.delete_chunk >= 1
+        assert self.consolidate_strategy in ("pure", "local", "global")
+        assert (self.consolidate_threshold is None
+                or 0.0 < self.consolidate_threshold <= 1.0)
+        assert self.consolidate_chunk is None or self.consolidate_chunk >= 1
 
 
 @dataclasses.dataclass(frozen=True)

@@ -23,6 +23,12 @@ host dispatch time (tiny under async dispatch), ``flush_s`` the synchronous
 waits, and ``wall_s`` the busy wall-clock between the first dispatch of a
 window and the flush that closes it. ``timers.to_dict()`` is the summary the
 bench script consumes.
+
+Consolidation (DESIGN.md §8): when ``MaintenanceParams.consolidate_threshold``
+is set, the session auto-fires the jitted compaction pass
+(``consolidate()``, OP_CONSOLIDATE micro-batches) at delete-dispatch and
+flush boundaries once the tombstone share crosses it — which is what lets a
+MASK-strategy session survive an unbounded stream.
 """
 from __future__ import annotations
 
@@ -58,16 +64,19 @@ class PhaseTimers:
     insert_s: float = 0.0
     delete_s: float = 0.0
     rebuild_s: float = 0.0
+    consolidate_s: float = 0.0   # host dispatch + trigger sync of §8 passes
     flush_s: float = 0.0
     wall_s: float = 0.0
     n_queries: int = 0
     n_inserts: int = 0
     n_deletes: int = 0
+    n_consolidated: int = 0      # tombstones physically removed
+    n_consolidations: int = 0    # compaction passes run
     n_ops: int = 0
 
     def total(self) -> float:
         return (self.query_s + self.insert_s + self.delete_s
-                + self.rebuild_s + self.flush_s)
+                + self.rebuild_s + self.consolidate_s + self.flush_s)
 
     def to_dict(self) -> dict:
         d = dataclasses.asdict(self)
@@ -108,16 +117,17 @@ class OpHandle:
     def result(self):
         """Block until this op's results are on host.
 
-        query  → (ids i32[n, k], scores f32[n, k]) numpy arrays
-        insert → ids i32[n] (NULL where the index was full)
-        delete → None
+        query       → (ids i32[n, k], scores f32[n, k]) numpy arrays
+        insert      → ids i32[n] (NULL where the index was full)
+        delete      → None
+        consolidate → ids i32[n] of the compacted tombstone slots
         """
         try:
             if self.op == "delete" or self.n == 0:
                 if self.op == "query":
                     return (np.full((0, self.k), NULL, np.int32),
                             np.full((0, self.k), -np.inf, np.float32))
-                if self.op == "insert":
+                if self.op in ("insert", "consolidate"):
                     return np.zeros((0,), np.int32)
                 for ids, _, _ in self._chunks:
                     jax.block_until_ready(ids)
@@ -130,7 +140,7 @@ class OpHandle:
                     [np.asarray(s)[:nv, : self.k] for _, s, nv in self._chunks]
                 )
                 return ids, scores
-            # insert: assigned slot ids ride in column 0 of the result block
+            # insert/consolidate: slot ids ride in column 0 of the result block
             return np.concatenate(
                 [np.asarray(i)[:nv, 0] for i, _, nv in self._chunks]
             )
@@ -141,6 +151,16 @@ class OpHandle:
         for ids, scores, _ in self._chunks:
             jax.block_until_ready((ids, scores))
         self._finish()
+
+
+def consolidate_gate_crossed(thr: float | None, masked_hint: int,
+                             present_floor: int) -> bool:
+    """The free host-side consolidation gate (DESIGN.md §8), shared by
+    :class:`Session` and ``ShardedSession``: with an overestimated tombstone
+    count and an underestimated present count it only ever errs toward
+    *checking* — the device-exact measurement runs only when this crosses."""
+    return (thr is not None and masked_hint > 0
+            and masked_hint >= thr * max(present_floor, 1))
 
 
 def params_fingerprint(params: IndexParams, strategy: str) -> str:
@@ -196,6 +216,21 @@ class Session:
         # mixed stream); False selects the branch at trace time instead
         # (per-branch programs — the facade's compile-lean mode).
         self.unified_dispatch = unified_dispatch
+        # consolidation engine bookkeeping (DESIGN.md §8): a *separate* PRNG
+        # chain (so auto-triggered passes never shift op keys), plus cheap
+        # host-side hints that gate the trigger without syncing the stream —
+        # `_masked_hint` overestimates the tombstone count (every dispatched
+        # mask-delete lane bumps it), `_present_floor` underestimates the
+        # present count (inserts are ignored, hard deletes over-subtract);
+        # the ratio therefore only ever errs toward *checking*, and the
+        # device-exact measurement happens only when the gate crosses.
+        self._consolidate_counter = 0
+        self._in_consolidate = False
+        self._masked_hint = 0
+        self._present_floor = 0
+        self.last_consolidate_handle: OpHandle | None = None
+        if params.maintenance.consolidate_threshold is not None:
+            self._refresh_consolidate_hints()
         self._ckpt = None
         if checkpoint_dir is not None:
             from repro.checkpoint import CheckpointManager
@@ -211,6 +246,8 @@ class Session:
         """Replace the session state (flushes pending work first)."""
         self.flush()
         self._state = state
+        if self.params.maintenance.consolidate_threshold is not None:
+            self._refresh_consolidate_hints()
 
     @property
     def chunk(self) -> int:
@@ -227,6 +264,11 @@ class Session:
     def _dispatch(self, op_code: int, arr, chunk: int, *,
                   fold_chunk_key: bool = False) -> OpHandle:
         """Chop one op into padded OpBatches and enqueue them (no sync)."""
+        if op_code == ops_mod.OP_CONSOLIDATE:
+            # static-only op (DESIGN.md §8): the traced switch would silently
+            # clip it to NOOP — route through consolidate() instead
+            raise ValueError("OP_CONSOLIDATE is not a stream op; "
+                             "use Session.consolidate()")
         key = self._op_key()  # consumed even for empty ops: stable chain
         n = arr.shape[0]
         if n == 0:  # no device work: don't arm the busy-wall window
@@ -304,7 +346,12 @@ class Session:
         return h
 
     def delete(self, ids, *, chunk: int | None = None) -> OpHandle:
-        """Dispatch a batch delete with the session's strategy."""
+        """Dispatch a batch delete with the session's strategy.
+
+        A MASK delete is the only op that grows the tombstone set, so this
+        is one of the two consolidation trigger points (the other is
+        ``flush`` — DESIGN.md §8).
+        """
         arr = np.asarray(ids, np.int32)
         t0 = time.perf_counter()
         h = self._dispatch(OP_DELETE, arr,
@@ -312,11 +359,116 @@ class Session:
                            fold_chunk_key=True)
         self.timers.delete_s += time.perf_counter() - t0
         self.timers.n_deletes += arr.shape[0]
+        if self.strategy == "mask":
+            self._masked_hint += arr.shape[0]
+            self._maybe_consolidate()
+        else:
+            self._present_floor = max(self._present_floor - arr.shape[0], 0)
         return h
+
+    # -- consolidation engine (DESIGN.md §8) -------------------------------
+    def _consolidate_key(self) -> jax.Array:
+        """Next key of the consolidation chain — derived from the base key
+        but on its own stream, so firing (or not firing) a pass never
+        perturbs the op-key chain of the surrounding stream."""
+        base = jax.random.fold_in(self._base_key,
+                                  ops_mod.CONSOLIDATE_KEY_STREAM)
+        key = jax.random.fold_in(base, self._consolidate_counter)
+        self._consolidate_counter += 1
+        return key
+
+    def _refresh_consolidate_hints(self) -> None:
+        """Replace the host hints with device-exact counts (synchronizes)."""
+        self._masked_hint = int(jnp.sum(self._state.masked))
+        self._present_floor = int(jnp.sum(self._state.present))
+
+    def consolidate(self, *, strategy: str | None = None,
+                    chunk: int | None = None,
+                    _n_masked: int | None = None) -> int:
+        """Physically remove every tombstone: the jitted compaction pass.
+
+        Reads the exact tombstone count (synchronizing on the dispatched
+        stream; the auto-trigger passes the count it just measured via
+        ``_n_masked`` instead of reducing twice), then dispatches
+        ``ceil(n/chunk)`` OP_CONSOLIDATE micro-batches — each compacts the
+        lowest-id tombstones at its stream position, repairs the survivors'
+        rows with ``consolidate_strategy`` and returns the freed slots to
+        the allocator. Returns the number of consolidated vertices; the
+        dispatched work itself is async (settled by ``flush``/reads).
+        """
+        t0 = time.perf_counter()
+        n_masked = (int(jnp.sum(self._state.masked))
+                    if _n_masked is None else int(_n_masked))
+        if n_masked == 0:
+            self._masked_hint = 0
+            self.timers.consolidate_s += time.perf_counter() - t0
+            return 0
+        if self._window_t0 is None:
+            self._window_t0 = time.perf_counter()
+        mp = self.params.maintenance
+        chunk = int(chunk) if chunk else (mp.consolidate_chunk
+                                          or mp.delete_chunk)
+        params = self.params
+        if strategy is not None and strategy != mp.consolidate_strategy:
+            params = dataclasses.replace(
+                self.params,
+                maintenance=dataclasses.replace(
+                    mp, consolidate_strategy=strategy),
+            )
+        # always static-dispatched (ops.py): maintenance passes are
+        # host-initiated, so the mixed-stream switch never carries this
+        # branch and only consolidating sessions compile it
+        static_op = ops_mod.OP_CONSOLIDATE
+        chunks = []
+        # the op is operand-free: one encoded batch serves every drain step
+        batch = ops_mod.make_op(ops_mod.OP_CONSOLIDATE, chunk, self.params.dim)
+        for lo in range(0, n_masked, chunk):
+            self._state, ids, scores = ops_mod.apply_ops_step(
+                self._state, batch, self._consolidate_key(), params,
+                self.strategy, static_op=static_op,
+            )
+            chunks.append((ids, scores, min(chunk, n_masked - lo)))
+        handle = OpHandle(
+            "consolidate", n_masked, self.params.search.pool_size, chunks,
+            on_done=self._handle_done,
+        )
+        # the int return keeps the legacy contract; the compacted slot ids
+        # stay reachable through this handle until consumed/flushed
+        self.last_consolidate_handle = handle
+        self._pending.append(handle)
+        self.timers.n_ops += 1
+        self.timers.n_consolidations += 1
+        self.timers.n_consolidated += n_masked
+        self.timers.consolidate_s += time.perf_counter() - t0
+        self._masked_hint = 0
+        self._present_floor = max(self._present_floor - n_masked, 0)
+        return n_masked
+
+    def _maybe_consolidate(self) -> int:
+        """Auto-trigger: fire the compaction pass when the tombstone share
+        crosses ``consolidate_threshold``. The host-side hint gate is free
+        and conservative (only ever errs toward checking); the device-exact
+        measurement — which synchronizes — runs only when it crosses."""
+        thr = self.params.maintenance.consolidate_threshold
+        if self._in_consolidate or not consolidate_gate_crossed(
+                thr, self._masked_hint, self._present_floor):
+            return 0
+        self._refresh_consolidate_hints()  # device-exact (synchronizes)
+        if not consolidate_gate_crossed(
+                thr, self._masked_hint, self._present_floor):
+            return 0
+        self._in_consolidate = True
+        try:
+            return self.consolidate(_n_masked=self._masked_hint)
+        finally:
+            self._in_consolidate = False
 
     def flush(self) -> PhaseTimers:
         """Synchronize: block until every dispatched op (and the state) is
-        materialized; settle the timer window. Returns the timers."""
+        materialized; settle the timer window. Returns the timers. Also a
+        consolidation trigger point (DESIGN.md §8): the threshold check runs
+        first, so the flushed state is the compacted one."""
+        self._maybe_consolidate()
         t0 = time.perf_counter()
         for h in list(self._pending):  # block() retires handles in place
             h.block()
@@ -382,6 +534,7 @@ class Session:
             extra={
                 "fingerprint": params_fingerprint(self.params, self.strategy),
                 "op_counter": self._op_counter,
+                "consolidate_counter": self._consolidate_counter,
                 "timers": self.timers.to_dict(),
             },
         )
@@ -409,4 +562,7 @@ class Session:
         self._state = tree["graph"]
         self._base_key = tree["base_key"]
         self._op_counter = int(extra["op_counter"])
+        self._consolidate_counter = int(extra.get("consolidate_counter", 0))
+        if self.params.maintenance.consolidate_threshold is not None:
+            self._refresh_consolidate_hints()
         return step

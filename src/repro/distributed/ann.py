@@ -31,14 +31,17 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
 
+from repro.core import consolidate as consolidate_mod
 from repro.core import delete as delete_mod
 from repro.core import insert as insert_mod
+from repro.core import ops as ops_mod
 from repro.core import search as search_mod
-from repro.core.graph import NULL, GraphState, init_graph
+from repro.core.graph import NULL, GraphState, init_graph, mask_to_slots
 from repro.core.params import IndexParams
 
 
@@ -202,6 +205,40 @@ def make_delete_step(dp: DistParams, mesh, strategy: str):
     return jax.jit(smapped, donate_argnums=(0,))
 
 
+def make_consolidate_step(dp: DistParams, mesh):
+    """One per-shard compaction pass (DESIGN.md §8), SPMD over the mesh.
+
+    Every shard independently picks its ``consolidate_chunk`` lowest-id
+    tombstones and runs the jitted compaction step on its subgraph (repair
+    searches are shard-local by construction — there are no cross-shard
+    edges). Shards with fewer tombstones than the chunk run a partially
+    valid frame; fully drained shards no-op. The host loops passes until
+    the most-loaded shard is drained.
+    """
+    axes = dp.axes
+    state_spec = jax.tree.map(lambda _: P(axes), init_specs_tree(dp))
+    mp = dp.index.maintenance
+    chunk = mp.consolidate_chunk or mp.delete_chunk
+
+    def _step(state_stacked: GraphState, key):
+        state = _local(state_stacked)
+        shard = _shard_index(axes)
+        key = jax.random.fold_in(key, shard)
+        tomb, tv = mask_to_slots(state.masked, chunk)
+        state, _ = consolidate_mod.consolidate_chunk_impl(
+            state, tomb, tv, key, dp.index
+        )
+        return _restack(state)
+
+    smapped = compat.shard_map(
+        _step, mesh=mesh,
+        in_specs=(state_spec, P()),
+        out_specs=state_spec,
+        check_vma=False,
+    )
+    return jax.jit(smapped, donate_argnums=(0,))
+
+
 def init_specs_tree(dp: DistParams) -> GraphState:
     """A GraphState-shaped tree of placeholders (for building spec pytrees)."""
     import numpy as np
@@ -253,12 +290,20 @@ class ShardedSession:
         self._query_step = make_query_step(dp, mesh)
         self._insert_step = make_insert_step(dp, mesh)
         self._delete_step = make_delete_step(dp, mesh, self._strategy)
+        self._consolidate_step = make_consolidate_step(dp, mesh)
         self.state = init_sharded_state(dp, mesh)
         self._base_key = jax.random.PRNGKey(seed)
         self._op_counter = 0
         self._pending: list[jax.Array] = []  # result arrays not yet flushed
         self._window_t0: float | None = None
         self.timers = PhaseTimers()
+        # consolidation bookkeeping — same host-gate scheme as the core
+        # Session (DESIGN.md §8): overestimated tombstone count vs
+        # underestimated present count, device-exact check only on crossing
+        self._consolidate_counter = 0
+        self._in_consolidate = False
+        self._masked_hint = 0
+        self._present_floor = 0
 
     @property
     def strategy(self) -> str:
@@ -312,10 +357,80 @@ class ShardedSession:
         self.timers.delete_s += time.perf_counter() - t0
         self.timers.n_deletes += int(jnp.shape(gids)[0])
         self.timers.n_ops += 1
+        if self._strategy == "mask":
+            self._masked_hint += int(jnp.shape(gids)[0])
+            self._maybe_consolidate()
+        else:
+            self._present_floor = max(
+                self._present_floor - int(jnp.shape(gids)[0]), 0)
+
+    # -- consolidation (DESIGN.md §8, per-shard) ---------------------------
+    def _per_shard_masked(self) -> "np.ndarray":
+        """Per-shard tombstone counts (synchronizes on the stream)."""
+        return np.asarray(jnp.sum(
+            self.state.masked,
+            axis=tuple(range(1, self.state.present.ndim)),
+        ))
+
+    def consolidate(self, *, _per_shard=None) -> int:
+        """Drain every shard's tombstones through the per-shard compaction
+        step. Runs ``ceil(max_shard_tombstones / chunk)`` SPMD passes — the
+        least-loaded shards no-op while the stragglers drain. Returns the
+        total number of consolidated vertices (synchronizes on the count
+        read — the auto-trigger hands over the counts it just measured via
+        ``_per_shard`` instead of reducing twice; the passes themselves
+        dispatch async)."""
+        t0 = time.perf_counter()
+        per_shard = (self._per_shard_masked() if _per_shard is None
+                     else _per_shard)
+        total = int(per_shard.sum())
+        if total == 0:
+            self._masked_hint = 0
+            self.timers.consolidate_s += time.perf_counter() - t0
+            return 0
+        if self._window_t0 is None:
+            self._window_t0 = time.perf_counter()
+        mp = self.dp.index.maintenance
+        chunk = mp.consolidate_chunk or mp.delete_chunk
+        base = jax.random.fold_in(self._base_key,
+                                  ops_mod.CONSOLIDATE_KEY_STREAM)
+        for _ in range(-(-int(per_shard.max()) // chunk)):
+            key = jax.random.fold_in(base, self._consolidate_counter)
+            self._consolidate_counter += 1
+            self.state = self._consolidate_step(self.state, key)
+        self.timers.consolidate_s += time.perf_counter() - t0
+        self.timers.n_consolidations += 1
+        self.timers.n_consolidated += total
+        self.timers.n_ops += 1
+        self._masked_hint = 0
+        self._present_floor = max(self._present_floor - total, 0)
+        return total
+
+    def _maybe_consolidate(self) -> int:
+        from repro.core.session import consolidate_gate_crossed
+
+        thr = self.dp.index.maintenance.consolidate_threshold
+        if self._in_consolidate or not consolidate_gate_crossed(
+                thr, self._masked_hint, self._present_floor):
+            return 0
+        # exact check (synchronizes), then fire if the share really crossed
+        per_shard = self._per_shard_masked()
+        self._masked_hint = int(per_shard.sum())
+        self._present_floor = int(jnp.sum(self.state.present))
+        if not consolidate_gate_crossed(
+                thr, self._masked_hint, self._present_floor):
+            return 0
+        self._in_consolidate = True
+        try:
+            return self.consolidate(_per_shard=per_shard)
+        finally:
+            self._in_consolidate = False
 
     def flush(self):
         """Block until every dispatched op landed (state AND the result
-        arrays handed out since the last flush); settle the timers."""
+        arrays handed out since the last flush); settle the timers. Also a
+        consolidation trigger point (DESIGN.md §8)."""
+        self._maybe_consolidate()
         t0 = time.perf_counter()
         jax.block_until_ready(self._pending)
         jax.block_until_ready(self.state.adj)

@@ -58,6 +58,92 @@ def test_structure_mismatch_raises(tmp_path):
         mgr.restore(None, {"different": jnp.zeros(3)})
 
 
+def _session_params():
+    from repro.core import IndexParams, MaintenanceParams, SearchParams
+
+    return IndexParams(
+        capacity=128, dim=8, d_out=6,
+        search=SearchParams(pool_size=16, max_steps=48, num_starts=2),
+        maintenance=MaintenanceParams(
+            strategy="mask", insert_chunk=16, delete_chunk=16
+        ),
+    )
+
+
+def _churn_then_consolidate(sess, rng):
+    """The post-tombstone tail every run replays: consolidate, reuse the
+    freed slots, query. Returns everything bit-comparable."""
+    n = sess.consolidate()
+    tail_ids = sess.insert(
+        rng.normal(size=(10, 8)).astype(np.float32)).result()
+    q_ids, q_scores = sess.query(
+        rng.normal(size=(12, 8)).astype(np.float32), k=8).result()
+    sess.flush()
+    return n, tail_ids, q_ids, q_scores, np.asarray(sess.state.adj), \
+        np.asarray(sess.state.present)
+
+
+def test_consolidate_roundtrips_through_checkpoint(tmp_path):
+    """Save mid-stream with pending tombstones → restore → consolidate is
+    bit-exact vs never having checkpointed: graph, PRNG chains (op AND
+    consolidation counters) and the freed-slot allocator all resume."""
+    from repro.core import Session
+
+    def build(ckpt_dir):
+        rng = np.random.default_rng(6)
+        sess = Session(_session_params(), seed=11, checkpoint_dir=ckpt_dir)
+        X = rng.normal(size=(70, 8)).astype(np.float32)
+        ids = sess.insert(X).result()
+        sess.delete(ids[:25])  # tombstones pending at the checkpoint
+        sess.flush()
+        return sess, rng
+
+    # run A: save mid-stream, then continue
+    sess_a, rng_a = build(tmp_path / "a")
+    sess_a.save(step=1)
+    out_a = _churn_then_consolidate(sess_a, rng_a)
+
+    # run B: the identical stream, never checkpointed — save must be pure
+    sess_b, rng_b = build(tmp_path / "b")
+    out_b = _churn_then_consolidate(sess_b, rng_b)
+    for a, b in zip(out_a, out_b):
+        np.testing.assert_array_equal(a, b)
+
+    # run C: a fresh session restores A's checkpoint and replays the tail
+    # (its host rng advanced to the same point A's was after the build)
+    rng_c = np.random.default_rng(6)
+    rng_c.normal(size=(70, 8))
+    sess_c = Session(_session_params(), seed=11,
+                     checkpoint_dir=tmp_path / "a")
+    assert sess_c.restore() == 1
+    out_c = _churn_then_consolidate(sess_c, rng_c)
+    for a, c in zip(out_a, out_c):
+        np.testing.assert_array_equal(a, c)
+    assert out_c[0] == 25  # all pending tombstones consolidated post-restore
+
+
+def test_checkpoint_rejects_consolidation_params_mismatch(tmp_path):
+    """The params fingerprint covers the consolidation knobs: restoring a
+    graph under a different trigger policy must be refused."""
+    import dataclasses
+
+    from repro.core import MaintenanceParams, Session
+
+    p = _session_params()
+    sess = Session(p, seed=0, checkpoint_dir=tmp_path)
+    sess.insert(np.random.default_rng(0).normal(size=(20, 8))
+                .astype(np.float32))
+    sess.save(step=1)
+    other = Session(
+        dataclasses.replace(
+            p, maintenance=dataclasses.replace(
+                p.maintenance, consolidate_threshold=0.5)),
+        seed=0, checkpoint_dir=tmp_path,
+    )
+    with pytest.raises(ValueError, match="fingerprint"):
+        other.restore()
+
+
 @pytest.mark.slow
 def test_preempt_resume_exact(tmp_path):
     """Training 30 steps straight == train 20, preempt, resume 10 (bitwise

@@ -51,6 +51,31 @@ with compat.use_mesh(mesh):
     st2 = make_delete_step(dp, mesh, 'global')(st, dels, jax.random.PRNGKey(2))
     out['alive_after_delete'] = int(np.asarray(jax.device_get(st2.alive)).sum())
 
+    # per-shard consolidation (DESIGN.md section 8): mask-delete through a
+    # ShardedSession with an armed threshold, then drain the tombstones
+    from repro.distributed.ann import ShardedSession
+    from repro.core.params import MaintenanceParams
+    ipm = IndexParams(capacity=64, dim=16, d_out=8,
+                      search=SearchParams(pool_size=16, max_steps=32,
+                                          num_starts=2),
+                      maintenance=MaintenanceParams(
+                          strategy='mask', delete_chunk=16,
+                          consolidate_threshold=0.25, consolidate_chunk=16))
+    sess = ShardedSession(DistParams(index=ipm), mesh, strategy='mask')
+    gids2 = np.asarray(sess.insert(X, jnp.asarray(route)))
+    sess.delete(gids2[:40])
+    sess.flush()  # trigger point: 40/200 = 0.2 < 0.25 → explicit drain below
+    out['sharded_masked_mid'] = int(np.asarray(jnp.sum(sess.state.masked)))
+    n_cons = sess.consolidate()
+    sess.flush()
+    out['sharded_consolidated'] = n_cons
+    out['sharded_masked_after'] = int(np.asarray(jnp.sum(sess.state.masked)))
+    out['sharded_present_after'] = int(np.asarray(jnp.sum(sess.state.present)))
+    sess.delete(gids2[40:100])  # 60 more: crosses 0.25 → auto-trigger
+    sess.flush()
+    out['sharded_auto_masked'] = int(np.asarray(jnp.sum(sess.state.masked)))
+    out['sharded_n_consolidations'] = sess.timers.n_consolidations
+
     # multi-pod replica mesh
     mesh3 = jax.make_mesh((2, 2, 2), ('pod', 'data', 'model'))
     dp3 = DistParams(index=ip, pod_axis='pod')
@@ -84,5 +109,11 @@ def test_sharded_index_8dev():
     assert out["gids_unique"]
     assert out["recall"] > 0.9
     assert out["alive_after_delete"] == 150
+    assert out["sharded_masked_mid"] == 40
+    assert out["sharded_consolidated"] == 40
+    assert out["sharded_masked_after"] == 0
+    assert out["sharded_present_after"] == 160
+    assert out["sharded_auto_masked"] == 0, "threshold crossing must drain"
+    assert out["sharded_n_consolidations"] >= 2
     assert out["multipod_inserted"] == 80
     assert out["multipod_results_valid"]

@@ -1,9 +1,15 @@
 """Serving front-end: batching, pad stability, quorum degradation,
 MASK consolidation."""
 import numpy as np
+import pytest
 
 from helpers import build_index, check_invariants
-from repro.core.consolidate import consolidate, masked_fraction, maybe_consolidate
+from repro.core.consolidate import (
+    consolidate,
+    consolidate_reference,
+    masked_fraction,
+    maybe_consolidate,
+)
 from repro.core.graph import NULL
 from repro.serving.batcher import BatchedServer, ServeConfig, quorum_merge
 
@@ -141,3 +147,64 @@ def test_maybe_consolidate_threshold():
     assert maybe_consolidate(idx, threshold=0.2) == 0
     idx.delete(np.arange(10, 25))       # now 25% masked
     assert maybe_consolidate(idx, threshold=0.2) == 25
+
+
+def _masked_index(seed=8, n=120, n_del=35):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, 8)).astype(np.float32)
+    idx = build_index(X, strategy="mask", capacity=192)
+    idx.delete(rng.choice(n, size=n_del, replace=False))
+    return idx, rng
+
+
+def test_consolidate_reference_parity_pins_jitted_pass():
+    """The exception-safe revive-then-delete oracle and the jitted chunked
+    compaction agree semantically at small N: identical alive/present sets,
+    masked fraction 0, invariant-clean graphs, equivalent recall. (Edge
+    layouts differ by construction — the repair searches draw from
+    different key chains — so the pin is set-level, not byte-level.)"""
+    idx_ref, rng = _masked_index()
+    idx_jit, _ = _masked_index()
+    n_ref = consolidate_reference(idx_ref, strategy="global")
+    n_jit = consolidate(idx_jit, strategy="global")
+    assert n_ref == n_jit == 35
+    for idx in (idx_ref, idx_jit):
+        assert masked_fraction(idx.state) == 0.0
+        assert not check_invariants(idx.state)
+    np.testing.assert_array_equal(
+        np.asarray(idx_ref.state.alive), np.asarray(idx_jit.state.alive))
+    np.testing.assert_array_equal(
+        np.asarray(idx_ref.state.present), np.asarray(idx_jit.state.present))
+    Q = rng.normal(size=(48, 8)).astype(np.float32)
+    r_ref = idx_ref.recall(Q, k=10)
+    r_jit = idx_jit.recall(Q, k=10)
+    assert abs(r_ref - r_jit) < 0.1, (r_ref, r_jit)
+    assert min(r_ref, r_jit) > 0.6
+
+
+def test_consolidate_reference_is_exception_safe():
+    """Regression for the revive-then-delete hack: a repair failure used to
+    leave tombstones revived and a foreign strategy installed. Now the
+    state and strategy roll back, and a later pass still succeeds."""
+    idx, _ = _masked_index()
+    alive_before = np.asarray(idx.state.alive).copy()
+    present_before = np.asarray(idx.state.present).copy()
+
+    real_delete = idx.session.delete
+
+    def boom(*a, **k):
+        raise RuntimeError("injected repair failure")
+
+    idx.session.delete = boom
+    with pytest.raises(RuntimeError, match="injected"):
+        consolidate_reference(idx, strategy="global")
+    idx.session.delete = real_delete
+
+    assert idx.strategy == "mask", "strategy must roll back"
+    np.testing.assert_array_equal(np.asarray(idx.state.alive), alive_before)
+    np.testing.assert_array_equal(
+        np.asarray(idx.state.present), present_before)
+    assert not check_invariants(idx.state)
+    # the rolled-back index is fully functional: the real pass still drains
+    assert consolidate(idx, strategy="global") == 35
+    assert masked_fraction(idx.state) == 0.0
