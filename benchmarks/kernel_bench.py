@@ -686,6 +686,180 @@ def run_long_stream(smoke: bool = False) -> dict:
     return record
 
 
+# ---------------------------------------------------------------------------
+# net-growth sustainability: the dynamic capacity engine on an insert-heavy
+# stream (DESIGN.md §9) — appended to BENCH_stream.json as "growth_stream"
+# ---------------------------------------------------------------------------
+
+def run_growth_stream(smoke: bool = False) -> dict:
+    """Growth run: an insert-heavy 4i:4q:1d MASK stream with the growth
+    gate armed, from capacity 1024 until the index has grown ≥ 8× and
+    processed ≥ 20k stream items.
+
+    Without growth this stream is unservable — net-positive insert traffic
+    exhausts any fixed capacity and ``insert`` starts refusing. With
+    ``max_capacity`` armed the session moves through geometric capacity
+    tiers at insert-dispatch boundaries. Asserted (CI smoke runs this):
+
+      · ZERO insert refusals across the whole stream (``timers.n_refused``);
+      · ≤ ceil(log2(final/initial)) growth recompiles (geometric tiers);
+      · terminal recall@10 within 1 point of a control session built
+        statically at the final capacity and driven through the identical
+        logical stream.
+    """
+    import math
+
+    from repro.core import (
+        IndexParams, MaintenanceParams, SearchParams, Session,
+    )
+    from repro.core import metrics as metrics_mod
+    from repro.core.graph import NULL
+
+    n0, dim, d_out, pool = 512, 16, 12, 24
+    batch = 16
+    init_cap = 1024
+    growth_target = 8 * init_cap
+    min_items = 20_160 if smoke else 40_320
+    max_rounds = 400 if smoke else 800  # safety stop, never the exit path
+    threshold = 0.25
+    params = IndexParams(
+        capacity=init_cap, dim=dim, d_out=d_out,
+        search=SearchParams(pool_size=pool, max_steps=3 * pool, num_starts=2,
+                            use_pallas=False),
+        # ef_construction > ef_search (§8's churn-resistance note): wiring
+        # quality is what keeps the grown and static graphs comparable
+        insert_search=SearchParams(pool_size=48, max_steps=96, num_starts=2,
+                                   use_pallas=False),
+        maintenance=MaintenanceParams(
+            strategy="mask", insert_chunk=batch, delete_chunk=batch,
+            consolidate_threshold=threshold, consolidate_strategy="global",
+            consolidate_chunk=batch,
+            growth_factor=2.0, max_capacity=16 * init_cap,
+        ),
+    )
+    rng0 = np.random.default_rng(23)
+    X = rng0.normal(size=(n0, dim)).astype(np.float32)
+    probes = rng0.normal(size=(64, dim)).astype(np.float32)
+
+    def probe_recall(sess):
+        ids, _ = sess.query(probes, k=10).result()
+        _, true_ids = metrics_mod.brute_force_topk(
+            sess.state, jnp.asarray(probes), 10)
+        return float(metrics_mod.recall_at_k(jnp.asarray(ids), true_ids, 10))
+
+    def drive(sess, rng):
+        """4i:4q:1d rounds until the growth+items targets are both met.
+
+        Deletes address *positions* in the session's own alive pool, so a
+        control run replaying the same rng performs the identical logical
+        stream even where physical slot assignment diverges."""
+        alive_pool = [int(v) for v in np.asarray(sess.insert(X).result())]
+        items, rounds, windows = 0, 0, []
+        t_win = time.perf_counter()
+        items_win = 0
+        while True:
+            ins_handles = []
+            for _ in range(4):
+                sess.query(rng.normal(size=(batch, dim)).astype(np.float32))
+                ins_handles.append(sess.insert(
+                    rng.normal(size=(batch, dim)).astype(np.float32)))
+            n_del = min(batch, max(len(alive_pool) - batch, 0))
+            pick = rng.choice(len(alive_pool), size=n_del, replace=False)
+            victims = np.asarray([alive_pool[i] for i in pick], np.int32)
+            for i in sorted(pick.tolist(), reverse=True):
+                alive_pool.pop(i)
+            sess.delete(victims)
+            for h in ins_handles:
+                alive_pool.extend(
+                    int(v) for v in np.asarray(h.result()) if v != NULL)
+            items += 9 * batch
+            items_win += 9 * batch
+            rounds += 1
+            done = (sess.state.capacity >= growth_target
+                    and items >= min_items) or rounds >= max_rounds
+            if rounds % 25 == 0 or done:
+                sess.flush()
+                windows.append({
+                    "round": rounds,
+                    "items": items,
+                    "items_per_s": items_win / max(
+                        time.perf_counter() - t_win, 1e-9),
+                    "capacity": sess.state.capacity,
+                    "n_alive": len(alive_pool),
+                    "n_grows": sess.timers.n_grows,
+                    "n_refused": sess.timers.n_refused,
+                    "n_consolidations": sess.timers.n_consolidations,
+                })
+                t_win = time.perf_counter()
+                items_win = 0
+            if done:
+                break
+        sess.flush()
+        return items, rounds, windows
+
+    sess = Session(params, seed=0)
+    items, rounds, windows = drive(sess, np.random.default_rng(29))
+    final_cap = sess.state.capacity
+    grown_recall = probe_recall(sess)
+
+    # ---- control: statically sized at the final tier, identical logical
+    # stream — the recall yardstick growth must stay within 1 point of
+    ctrl_params = dataclasses.replace(
+        params, capacity=final_cap,
+        maintenance=dataclasses.replace(params.maintenance,
+                                        max_capacity=None))
+    ctrl = Session(ctrl_params, seed=0)
+    ctrl_items, _, _ = drive(ctrl, np.random.default_rng(29))
+    static_recall = probe_recall(ctrl)
+
+    # ---- acceptance asserts (ISSUE 5): zero refusals, bounded recompiles,
+    # growth-path recall within 1 point of the static control
+    recompile_bound = math.ceil(math.log2(final_cap / init_cap))
+    assert sess.timers.n_refused == 0, (
+        f"{sess.timers.n_refused} inserts refused on an armed session")
+    assert final_cap >= growth_target and items >= min_items, (
+        f"stream stopped early: capacity {final_cap}, items {items}")
+    assert sess.timers.n_grows <= recompile_bound, (
+        f"{sess.timers.n_grows} growth recompiles exceed the "
+        f"ceil(log2({final_cap}/{init_cap})) = {recompile_bound} bound")
+    assert ctrl.timers.n_refused == 0 and ctrl.timers.n_grows == 0
+    assert grown_recall >= static_recall - 0.01, (
+        f"grown-index recall {grown_recall:.3f} fell more than 1 point "
+        f"below the statically-sized control {static_recall:.3f}")
+
+    record = {
+        "config": {
+            "n0": n0, "dim": dim, "d_out": d_out, "pool_size": pool,
+            "batch": batch, "initial_capacity": init_cap,
+            "growth_target": growth_target, "max_capacity": 16 * init_cap,
+            "growth_factor": 2.0, "consolidate_threshold": threshold,
+            "mix": "per round: 4 insert / 4 query / 1 delete ops (mask)",
+            "min_items": min_items, "smoke": smoke,
+            "backend": jax.default_backend(),
+        },
+        "rounds": rounds,
+        "items": items,
+        "windows": windows,
+        "summary": {
+            "final_capacity": final_cap,
+            "n_grows": sess.timers.n_grows,
+            "recompile_bound": recompile_bound,
+            "n_refused": sess.timers.n_refused,
+            "n_consolidations": sess.timers.n_consolidations,
+            "grown_recall_at_10": grown_recall,
+            "static_control_recall_at_10": static_recall,
+            "recall_delta_vs_static": grown_recall - static_recall,
+            "timers": sess.timers.to_dict(),
+        },
+    }
+    print(f"growth_stream rounds={rounds} items={items} "
+          f"capacity {init_cap}->{final_cap} "
+          f"grows={sess.timers.n_grows}(<= {recompile_bound}) "
+          f"refused={sess.timers.n_refused} "
+          f"recall grown={grown_recall:.3f} static={static_recall:.3f}")
+    return record
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
@@ -711,6 +885,7 @@ def main(argv=None):
     print(f"wrote {args.update_out}")
     stream_record = run_stream(smoke=args.smoke)
     stream_record["long_stream"] = run_long_stream(smoke=args.smoke)
+    stream_record["growth_stream"] = run_growth_stream(smoke=args.smoke)
     args.stream_out.parent.mkdir(parents=True, exist_ok=True)
     args.stream_out.write_text(json.dumps(stream_record, indent=2) + "\n")
     print(f"wrote {args.stream_out}")

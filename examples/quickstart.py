@@ -13,11 +13,14 @@ from repro.core import IndexParams, MaintenanceParams, SearchParams, Session
 
 rng = np.random.default_rng(0)
 
-# 1. a session with capacity for 2k vectors of dim 64
+# 1. a session starting at a 2k-slot capacity tier; max_capacity arms the
+#    growth engine (DESIGN.md §9) so net-positive insert traffic grows the
+#    index through geometric tiers instead of refusing once the tier fills
 params = IndexParams(
     capacity=2048, dim=64, d_out=12,
     search=SearchParams(pool_size=32, max_steps=96, num_starts=2),
-    maintenance=MaintenanceParams(strategy="global"),  # paper's recommendation
+    maintenance=MaintenanceParams(strategy="global",  # paper's recommendation
+                                  max_capacity=65536),
 )
 session = Session(params)
 
@@ -39,7 +42,14 @@ session.delete(ids[:200])
 session.insert(rng.normal(size=(200, 64)).astype(np.float32))
 session.flush()
 print(f"recall@10 after churn:  {session.recall(Q, k=10):.3f}")
+
+# 5. net growth: push past the 2048-slot tier — the session grows to the
+#    next tier at the insert boundary (one recompile), nothing refuses
+session.insert(rng.normal(size=(1500, 64)).astype(np.float32))
+st = session.stats()
+print(f"after net growth: capacity={st['capacity']} "
+      f"n_grows={st['n_grows']} n_refused={st['n_refused']}")
 print("timers:", session.timers.to_dict())
 
-# 5. the per-op facade (`IPGMIndex`) keeps the seed API working and is
+# 6. the per-op facade (`IPGMIndex`) keeps the seed API working and is
 #    parity-tested bit-exact against the session — see tests/test_session.py

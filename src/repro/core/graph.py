@@ -1,7 +1,12 @@
-"""Fixed-capacity proximity-graph state — the TPU-native index layout.
+"""Proximity-graph state — the TPU-native index layout.
 
 The paper's adjacency lists / reverse graph become dense, fixed-degree
 ``int32`` arrays so every operation is a gather/scatter (no pointer chasing).
+Arrays are sized to a *capacity tier*: shapes are static inside any one
+compiled program, and the growth engine (DESIGN.md §9) moves the state to a
+larger tier with :func:`grow_state` — slot ids never move, new slots arrive
+empty (NULL rows, zero vectors, not present), so every graph invariant below
+is preserved verbatim by growth.
 
 Invariants maintained by every public op (property-tested in
 ``tests/test_graph_invariants.py``):
@@ -20,6 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 from typing import Any
 
 import jax
@@ -86,6 +92,71 @@ def init_graph(
         d_in=d_in,
         metric=metric,
     )
+
+
+# ---------------------------------------------------------------------------
+# Capacity growth (DESIGN.md §9) — the shape-family move between tiers.
+# ---------------------------------------------------------------------------
+
+def grow_state(state: GraphState, new_capacity: int, *, axis: int = 0) -> GraphState:
+    """Pad every per-slot array of ``state`` to ``new_capacity`` slots.
+
+    Existing slots keep their ids and contents byte-exactly; the new slots
+    are empty — zero vectors/sqnorms, NULL adjacency rows, not alive, not
+    present — so they are immediately visible to the allocator as free and
+    invisible to every traversal (I1–I4 hold trivially on exit). ``size`` is
+    unchanged. The returned state lives in a new shape family: the next
+    dispatch through any shape-specialized jitted step (``apply_ops_step``,
+    ``delete_batch``, ...) compiles once for the new tier.
+
+    ``axis`` is the capacity axis — 0 for a local state, 1 for the stacked
+    per-shard layout of ``ShardedSession`` (every shard grows in lockstep so
+    the stack stays one shape family).
+    """
+    cap = state.capacity
+    if new_capacity < cap:
+        raise ValueError(
+            f"grow_state cannot shrink: {cap} -> {new_capacity}")
+    if new_capacity == cap:
+        return state
+    extra = new_capacity - cap
+
+    def pad(x: jax.Array, fill) -> jax.Array:
+        pads = [(0, 0)] * x.ndim
+        pads[axis] = (0, extra)
+        return jnp.pad(x, pads, constant_values=fill)
+
+    return dataclasses.replace(
+        state,
+        vectors=pad(state.vectors, 0),
+        sqnorms=pad(state.sqnorms, 0.0),
+        adj=pad(state.adj, NULL),
+        radj=pad(state.radj, NULL),
+        alive=pad(state.alive, False),
+        present=pad(state.present, False),
+        capacity=new_capacity,
+    )
+
+
+def next_capacity_tier(
+    capacity: int,
+    needed: int,
+    growth_factor: float,
+    max_capacity: int | None,
+) -> int:
+    """Smallest geometric tier ≥ ``needed`` slots, clipped to ``max_capacity``.
+
+    Tiers are ``capacity · growth_factor^k`` (ceil), so a stream that grows
+    monotonically recompiles at most ``ceil(log_factor(final/initial))``
+    times regardless of how the demand arrives. Returns the current capacity
+    unchanged when it already covers ``needed`` or growth is capped out.
+    """
+    new = capacity
+    while new < needed and (max_capacity is None or new < max_capacity):
+        new = max(math.ceil(new * growth_factor), new + 1)
+    if max_capacity is not None:
+        new = min(new, max_capacity)
+    return max(new, capacity)
 
 
 # ---------------------------------------------------------------------------

@@ -43,6 +43,14 @@ Dispatch modes:
 
 Both modes run byte-identical branch code, so they are interchangeable
 result-wise — the parity suite (tests/test_session.py) pins this.
+
+Shape families & capacity tiers (DESIGN.md §9): ``apply_ops_step``'s jit
+cache is keyed on the argument shapes, and every branch reads the index
+size off ``state.capacity`` (never ``params.capacity``), so a session that
+grows compiles exactly ONE new switch program per capacity tier and the op
+encoding is untouched — op codes, micro-batch widths, key chains and
+per-lane PRNG folds are all capacity-independent, which is what makes
+logical streams growth-timing-invariant.
 """
 from __future__ import annotations
 

@@ -45,6 +45,14 @@ class MaintenanceParams:
     survivors' rows), and ``consolidate_chunk`` is the tombstones-per-
     micro-batch width (``None`` → ``delete_chunk``, keeping the stream in
     one compiled shape family).
+
+    Capacity growth (DESIGN.md §9) is what makes *net-growing* streams
+    sustainable: ``max_capacity`` arms the session's auto-grow gate at
+    insert-dispatch boundaries (``None`` keeps the legacy fixed-capacity
+    contract — a full index refuses further inserts, now counted in
+    ``PhaseTimers.n_refused``), and ``growth_factor`` is the geometric tier
+    step (default ×2), so growing from capacity C to C' recompiles the op
+    step at most ``ceil(log_factor(C'/C))`` times.
     """
 
     strategy: str = "global"   # "pure" | "mask" | "local" | "global" (+ _reference)
@@ -53,6 +61,8 @@ class MaintenanceParams:
     consolidate_threshold: float | None = None  # masked/present auto-trigger
     consolidate_strategy: str = "global"        # "pure" | "local" | "global"
     consolidate_chunk: int | None = None        # None → delete_chunk
+    growth_factor: float = 2.0                  # geometric capacity tier step
+    max_capacity: int | None = None             # auto-grow ceiling; None = fixed
 
     def __post_init__(self):
         assert self.insert_chunk >= 1 and self.delete_chunk >= 1
@@ -60,11 +70,18 @@ class MaintenanceParams:
         assert (self.consolidate_threshold is None
                 or 0.0 < self.consolidate_threshold <= 1.0)
         assert self.consolidate_chunk is None or self.consolidate_chunk >= 1
+        assert self.growth_factor > 1.0
+        assert self.max_capacity is None or self.max_capacity >= 1
 
 
 @dataclasses.dataclass(frozen=True)
 class IndexParams:
-    """Full index configuration (graph + search + maintenance)."""
+    """Full index configuration (graph + search + maintenance).
+
+    ``capacity`` is the *initial* capacity tier; with
+    ``maintenance.max_capacity`` armed the live state may grow past it
+    (DESIGN.md §9 — read the live tier off ``state.capacity``).
+    """
 
     capacity: int
     dim: int
@@ -82,6 +99,15 @@ class IndexParams:
     maintenance: MaintenanceParams = dataclasses.field(
         default_factory=MaintenanceParams
     )
+
+    def __post_init__(self):
+        # the growth ceiling must cover the initial tier: a ceiling below it
+        # would also corrupt the sharded gid encoding, which strides global
+        # ids by max_capacity when growth is armed (DESIGN.md §9)
+        mc = self.maintenance.max_capacity
+        assert mc is None or mc >= self.capacity, (
+            f"maintenance.max_capacity ({mc}) must be >= the initial "
+            f"capacity ({self.capacity})")
 
     @property
     def eff_d_in(self) -> int:

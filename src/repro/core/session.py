@@ -29,6 +29,16 @@ is set, the session auto-fires the jitted compaction pass
 (``consolidate()``, OP_CONSOLIDATE micro-batches) at delete-dispatch and
 flush boundaries once the tombstone share crosses it — which is what lets a
 MASK-strategy session survive an unbounded stream.
+
+Capacity growth (DESIGN.md §9): when ``MaintenanceParams.max_capacity`` is
+set, the session auto-grows the state to a larger capacity tier
+(``graph.grow_state``, geometric ``growth_factor`` steps) at
+insert-dispatch boundaries, gated exactly like the consolidation trigger —
+a free conservative host hint (``_free_hint`` underestimates the free-slot
+count), a device-exact check only on crossing, and grow-vs-consolidate
+arbitration that compacts tombstones before paying a recompile. Inserts a
+full index must refuse (growth disarmed or capped) are *counted* in
+``PhaseTimers.n_refused`` instead of silently returning NULL ids.
 """
 from __future__ import annotations
 
@@ -44,7 +54,14 @@ import numpy as np
 from repro.core import metrics, rebuild
 from repro.core import delete as delete_mod
 from repro.core import ops as ops_mod
-from repro.core.graph import NULL, GraphState, graph_stats, init_graph
+from repro.core.graph import (
+    NULL,
+    GraphState,
+    graph_stats,
+    grow_state,
+    init_graph,
+    next_capacity_tier,
+)
 from repro.core.ops import OP_DELETE, OP_INSERT, OP_QUERY
 from repro.core.params import IndexParams
 
@@ -65,6 +82,7 @@ class PhaseTimers:
     delete_s: float = 0.0
     rebuild_s: float = 0.0
     consolidate_s: float = 0.0   # host dispatch + trigger sync of §8 passes
+    grow_s: float = 0.0          # §9 capacity-tier moves (pad dispatch)
     flush_s: float = 0.0
     wall_s: float = 0.0
     n_queries: int = 0
@@ -72,11 +90,14 @@ class PhaseTimers:
     n_deletes: int = 0
     n_consolidated: int = 0      # tombstones physically removed
     n_consolidations: int = 0    # compaction passes run
+    n_refused: int = 0           # insert rows refused by a full index (§9)
+    n_grows: int = 0             # capacity-tier moves (≙ op-step recompiles)
     n_ops: int = 0
 
     def total(self) -> float:
         return (self.query_s + self.insert_s + self.delete_s
-                + self.rebuild_s + self.consolidate_s + self.flush_s)
+                + self.rebuild_s + self.consolidate_s + self.grow_s
+                + self.flush_s)
 
     def to_dict(self) -> dict:
         d = dataclasses.asdict(self)
@@ -164,13 +185,26 @@ def consolidate_gate_crossed(thr: float | None, masked_hint: int,
 
 
 def params_fingerprint(params: IndexParams, strategy: str) -> str:
-    """Stable identity of (index config, strategy) for checkpoint guarding."""
+    """Stable identity of (index geometry + policy, strategy) for checkpoint
+    guarding.
+
+    ``capacity`` is deliberately *excluded*: it is the one axis two
+    compatible configurations may legitimately differ on — the growth engine
+    (DESIGN.md §9) moves a session past its initial capacity tier, so a
+    checkpoint records its live capacity separately (``extra["capacity"]``)
+    and ``Session.restore`` range-checks it instead of fingerprinting it.
+    Everything else — geometry (dim/degrees/metric), search knobs, and the
+    maintenance policy including ``growth_factor``/``max_capacity`` — must
+    match exactly.
+    """
     def enc(obj):
         if dataclasses.is_dataclass(obj):
             return {f.name: enc(getattr(obj, f.name))
                     for f in dataclasses.fields(obj)}
         return obj
-    return json.dumps({"params": enc(params), "strategy": strategy},
+    d = enc(params)
+    d.pop("capacity", None)
+    return json.dumps({"params": d, "strategy": strategy},
                       sort_keys=True)
 
 
@@ -229,8 +263,15 @@ class Session:
         self._masked_hint = 0
         self._present_floor = 0
         self.last_consolidate_handle: OpHandle | None = None
-        if params.maintenance.consolidate_threshold is not None:
-            self._refresh_consolidate_hints()
+        # growth engine bookkeeping (DESIGN.md §9): `_free_hint`
+        # *underestimates* the free-slot count (every dispatched insert row
+        # subtracts, hard-delete frees are ignored), so an insert the hint
+        # covers can never refuse — the device-exact room check runs only
+        # when the hint crosses below the incoming batch size.
+        self._free_hint = self._state.capacity
+        if (state is not None
+                or params.maintenance.consolidate_threshold is not None):
+            self._refresh_hints()
         self._ckpt = None
         if checkpoint_dir is not None:
             from repro.checkpoint import CheckpointManager
@@ -246,8 +287,7 @@ class Session:
         """Replace the session state (flushes pending work first)."""
         self.flush()
         self._state = state
-        if self.params.maintenance.consolidate_threshold is not None:
-            self._refresh_consolidate_hints()
+        self._refresh_hints()
 
     @property
     def chunk(self) -> int:
@@ -336,11 +376,25 @@ class Session:
         return h
 
     def insert(self, vectors, *, chunk: int | None = None) -> OpHandle:
-        """Dispatch a batch insert; ``handle.result()`` → assigned ids."""
+        """Dispatch a batch insert; ``handle.result()`` → assigned ids.
+
+        The insert-dispatch boundary is the growth trigger point
+        (DESIGN.md §9): ``_ensure_room`` grows the capacity tier and/or
+        compacts tombstones before the batch runs, so an armed session
+        (``maintenance.max_capacity``) never returns NULL ids until the
+        ceiling is reached — and every refusal that does happen is counted
+        in ``timers.n_refused``.
+        """
         v = np.asarray(vectors, np.float32)
+        # the gate runs OUTSIDE the insert stopwatch: its consolidation /
+        # growth work bills to consolidate_s / grow_s (as the delete-path
+        # trigger does), so PhaseTimers.total() never double-counts
+        if v.shape[0]:
+            self._ensure_room(v.shape[0])
         t0 = time.perf_counter()
         h = self._dispatch(OP_INSERT, v, chunk or
                            self.params.maintenance.insert_chunk)
+        self._free_hint = max(self._free_hint - v.shape[0], 0)
         self.timers.insert_s += time.perf_counter() - t0
         self.timers.n_inserts += v.shape[0]
         return h
@@ -377,10 +431,11 @@ class Session:
         self._consolidate_counter += 1
         return key
 
-    def _refresh_consolidate_hints(self) -> None:
+    def _refresh_hints(self) -> None:
         """Replace the host hints with device-exact counts (synchronizes)."""
         self._masked_hint = int(jnp.sum(self._state.masked))
         self._present_floor = int(jnp.sum(self._state.present))
+        self._free_hint = self._state.capacity - self._present_floor
 
     def consolidate(self, *, strategy: str | None = None,
                     chunk: int | None = None,
@@ -442,6 +497,7 @@ class Session:
         self.timers.consolidate_s += time.perf_counter() - t0
         self._masked_hint = 0
         self._present_floor = max(self._present_floor - n_masked, 0)
+        self._free_hint += n_masked  # compacted slots return to the allocator
         return n_masked
 
     def _maybe_consolidate(self) -> int:
@@ -453,7 +509,7 @@ class Session:
         if self._in_consolidate or not consolidate_gate_crossed(
                 thr, self._masked_hint, self._present_floor):
             return 0
-        self._refresh_consolidate_hints()  # device-exact (synchronizes)
+        self._refresh_hints()  # device-exact (synchronizes)
         if not consolidate_gate_crossed(
                 thr, self._masked_hint, self._present_floor):
             return 0
@@ -462,6 +518,68 @@ class Session:
             return self.consolidate(_n_masked=self._masked_hint)
         finally:
             self._in_consolidate = False
+
+    # -- capacity growth engine (DESIGN.md §9) -----------------------------
+    def _ensure_room(self, n: int) -> None:
+        """Grow/consolidate gate at the insert-dispatch boundary.
+
+        ``_free_hint`` is a guaranteed underestimate of the free-slot count,
+        so when it covers the batch no refusal is possible and the gate is
+        free; the device-exact room check (which synchronizes the stream)
+        runs only on crossing. Arbitration then compacts tombstones before
+        paying a growth recompile — reclaiming masked slots is one
+        consolidation pass inside the already-compiled shape family, growing
+        is a whole new tier. Whatever shortfall survives (growth disarmed or
+        capped at ``max_capacity``) is counted into ``timers.n_refused`` —
+        exactly, because the allocator fills the lowest free slots first and
+        refuses the remaining rows deterministically.
+        """
+        if self._free_hint >= n:
+            return
+        mp = self.params.maintenance
+        self._refresh_hints()  # device-exact (synchronizes)
+        free = self._free_hint
+        if free < n and self._masked_hint > 0 and (
+                mp.consolidate_threshold is not None
+                or mp.max_capacity is not None):
+            free += self.consolidate(_n_masked=self._masked_hint)
+        if free < n and mp.max_capacity is not None:
+            cap = self._state.capacity
+            target = next_capacity_tier(
+                cap, cap - free + n, mp.growth_factor, mp.max_capacity)
+            if target > cap:
+                self.grow(target)
+                free += target - cap
+        if free < n:
+            self.timers.n_refused += n - free
+        self._free_hint = free
+
+    def grow(self, new_capacity: int) -> None:
+        """Move the state to a larger capacity tier (``graph.grow_state``).
+
+        Dispatches asynchronously like every other op — existing slots keep
+        their ids, new slots arrive free — and puts the session in a new
+        shape family: the next ``apply_ops_step`` dispatch compiles once for
+        the new tier (op-key chain and per-lane PRNG folds are untouched, so
+        logical streams are growth-timing-invariant, DESIGN.md §9). An
+        *armed* session enforces ``maintenance.max_capacity`` here too, so
+        every tier it can ever save is one its own config restores.
+        """
+        t0 = time.perf_counter()
+        if new_capacity == self._state.capacity:
+            return
+        ceiling = self.params.maintenance.max_capacity
+        if ceiling is not None and new_capacity > ceiling:
+            raise ValueError(
+                f"new_capacity {new_capacity} exceeds maintenance."
+                f"max_capacity {ceiling}")
+        if self._window_t0 is None:
+            self._window_t0 = t0
+        grown = grow_state(self._state, new_capacity)
+        self._free_hint += grown.capacity - self._state.capacity
+        self._state = grown
+        self.timers.n_grows += 1
+        self.timers.grow_s += time.perf_counter() - t0
 
     def flush(self) -> PhaseTimers:
         """Synchronize: block until every dispatched op (and the state) is
@@ -481,21 +599,38 @@ class Session:
             self._window_t0 = None
         return self.timers
 
+    def _live_params(self) -> IndexParams:
+        """``self.params`` with ``capacity`` pinned to the live state's tier
+        (they diverge once the growth engine moves past the initial tier)."""
+        if self.params.capacity == self._state.capacity:
+            return self.params
+        return dataclasses.replace(
+            self.params, capacity=self._state.capacity)
+
     # -- host-path maintenance --------------------------------------------
     def rebuild_from_alive(self) -> None:
-        """ReBuild baseline: reconstruct the whole graph from alive vectors."""
+        """ReBuild baseline: reconstruct the whole graph from alive vectors.
+
+        Rebuilds at the *live* capacity tier (``state.capacity``), not the
+        initial ``params.capacity`` — after a growth the two diverge, and
+        rebuilding at the stale tier would silently shrink the index.
+        """
         self.flush()
         t0 = time.perf_counter()
+        live_cap = self._state.capacity
         alive = np.asarray(self._state.alive)
         vecs = np.asarray(self._state.vectors)[alive]
         n = vecs.shape[0]
-        padded = np.zeros((self.params.capacity, self.params.dim), vecs.dtype)
+        padded = np.zeros((live_cap, self.params.dim), vecs.dtype)
         padded[:n] = vecs
-        valid = jnp.arange(self.params.capacity) < n
+        valid = jnp.arange(live_cap) < n
         self._state = rebuild.bulk_knn_build(
-            jnp.asarray(padded), valid, self.params
+            jnp.asarray(padded), valid, self._live_params()
         )
         jax.block_until_ready(self._state.adj)
+        self._masked_hint = 0
+        self._present_floor = n
+        self._free_hint = live_cap - n
         self.timers.rebuild_s += time.perf_counter() - t0
 
     # -- reporting ---------------------------------------------------------
@@ -510,8 +645,12 @@ class Session:
 
     def stats(self) -> dict:
         self.flush()
-        return {k: np.asarray(v).item()
-                for k, v in graph_stats(self._state).items()}
+        out = {k: np.asarray(v).item()
+               for k, v in graph_stats(self._state).items()}
+        out["capacity"] = self._state.capacity  # live tier, not params'
+        out["n_refused"] = self.timers.n_refused
+        out["n_grows"] = self.timers.n_grows
+        return out
 
     # -- checkpointing (DESIGN.md §7) --------------------------------------
     def _require_ckpt(self):
@@ -526,13 +665,19 @@ class Session:
         return {"graph": self._state, "base_key": self._base_key}
 
     def save(self, step: int) -> Path:
-        """Checkpoint GraphState + PRNG chain + timers + params fingerprint."""
+        """Checkpoint GraphState + PRNG chain + timers + params fingerprint.
+
+        The fingerprint covers geometry + policy only; the *live* capacity
+        tier (which growth may have moved past ``params.capacity``) is
+        recorded separately so ``restore`` can range-check it.
+        """
         mgr = self._require_ckpt()
         self.flush()
         return mgr.save(
             step, self._ckpt_tree(),
             extra={
                 "fingerprint": params_fingerprint(self.params, self.strategy),
+                "capacity": int(self._state.capacity),
                 "op_counter": self._op_counter,
                 "consolidate_counter": self._consolidate_counter,
                 "timers": self.timers.to_dict(),
@@ -544,7 +689,12 @@ class Session:
 
         Rejects checkpoints written under a different (params, strategy)
         fingerprint — restoring a graph into mismatched geometry would
-        corrupt it silently. Returns the restored step number.
+        corrupt it silently. Capacity is exempt from the fingerprint
+        (DESIGN.md §9): any saved tier ≥ ``params.capacity`` restores (the
+        allocator cannot shrink) and the session resumes at that tier;
+        ``max_capacity`` bounds *growth*, not restorability — the matching
+        policy fingerprint already guarantees the writer enforced the same
+        ceiling. Returns the restored step number.
         """
         mgr = self._require_ckpt()
         self.flush()
@@ -559,10 +709,20 @@ class Session:
                 "to restore an index saved under a different configuration"
             )
         tree = jax.tree.map(jnp.asarray, tree)
-        self._state = tree["graph"]
+        state = tree["graph"]
+        saved_cap = int(extra.get("capacity", state.alive.shape[0]))
+        if saved_cap < self.params.capacity:
+            raise ValueError(
+                f"checkpoint capacity {saved_cap} is below this "
+                f"configuration's initial capacity {self.params.capacity} "
+                "— shrinking an allocator is not supported, refusing to "
+                "restore"
+            )
+        # the unflatten used the *current* session's treedef, whose static
+        # capacity may be a different tier — re-pin it to the saved arrays
+        self._state = dataclasses.replace(state, capacity=saved_cap)
         self._base_key = tree["base_key"]
         self._op_counter = int(extra["op_counter"])
         self._consolidate_counter = int(extra.get("consolidate_counter", 0))
-        if self.params.maintenance.consolidate_threshold is not None:
-            self._refresh_consolidate_hints()
+        self._refresh_hints()
         return step

@@ -41,7 +41,14 @@ from repro.core import delete as delete_mod
 from repro.core import insert as insert_mod
 from repro.core import ops as ops_mod
 from repro.core import search as search_mod
-from repro.core.graph import NULL, GraphState, init_graph, mask_to_slots
+from repro.core.graph import (
+    NULL,
+    GraphState,
+    grow_state,
+    init_graph,
+    mask_to_slots,
+    next_capacity_tier,
+)
 from repro.core.params import IndexParams
 
 
@@ -60,6 +67,18 @@ class DistParams:
     @property
     def axes(self) -> tuple[str, ...]:
         return self.shard_axes
+
+    def gid_stride(self) -> int:
+        """Global-id stride: ``gid = shard · stride + local id``.
+
+        Pinned to ``maintenance.max_capacity`` when capacity growth is armed
+        (DESIGN.md §9), so gids handed out at one tier stay valid after
+        every shard grows to a larger one; with growth disarmed it equals
+        the (then-fixed) per-shard capacity — the legacy encoding.
+        """
+        mp = self.index.maintenance
+        return (mp.max_capacity if mp.max_capacity is not None
+                else self.index.capacity)
 
 
 def init_sharded_state(dp: DistParams, mesh) -> GraphState:
@@ -113,6 +132,8 @@ def make_query_step(dp: DistParams, mesh):
         top_s, idx = jax.lax.top_k(flat_s, k)
         return top_s, jnp.take_along_axis(flat_i, idx, axis=1)
 
+    stride = dp.gid_stride()
+
     def _step(state_stacked: GraphState, queries, key):
         state = _local(state_stacked)
         shard = _shard_index(axes)
@@ -125,7 +146,7 @@ def make_query_step(dp: DistParams, mesh):
         )
         res = search_mod.beam_search(state, queries, starts, sp)
         gids = jnp.where(
-            res.ids != NULL, res.ids + shard * dp.index.capacity, NULL
+            res.ids != NULL, res.ids + shard * stride, NULL
         )
         k = sp.pool_size
         if dp.hierarchical_merge and len(axes) > 1:
@@ -150,6 +171,7 @@ def make_insert_step(dp: DistParams, mesh):
     """Routed batch insert: vectors f32[B, dim] + router ids i32[B]."""
     axes = dp.axes
     state_spec = jax.tree.map(lambda _: P(axes), init_specs_tree(dp))
+    stride = dp.gid_stride()
 
     def _step(state_stacked, vecs, route, key):
         state = _local(state_stacked)
@@ -163,7 +185,7 @@ def make_insert_step(dp: DistParams, mesh):
         state, ids = insert_mod.insert_batch_impl(
             state, vecs, mine, key, dp.index
         )
-        gids = jnp.where(ids != NULL, ids + shard * dp.index.capacity, NULL)
+        gids = jnp.where(ids != NULL, ids + shard * stride, NULL)
         # owner announces its assigned gid; everyone else holds NULL(-1);
         # pmax is exact since real gids are >= 0
         gids = jax.lax.pmax(jnp.where(mine, gids, NULL), axes)
@@ -183,13 +205,17 @@ def make_delete_step(dp: DistParams, mesh, strategy: str):
     axes = dp.axes
     state_spec = jax.tree.map(lambda _: P(axes), init_specs_tree(dp))
 
+    stride = dp.gid_stride()
+
     def _step(state_stacked, gids, key):
         state = _local(state_stacked)
         shard = _shard_index(axes)
-        cap = dp.index.capacity
-        owner = gids // cap
-        lids = (gids % cap).astype(jnp.int32)
-        valid = (gids != NULL) & (owner == shard)
+        owner = gids // stride
+        lids = (gids % stride).astype(jnp.int32)
+        # with growth armed the stride exceeds the live tier — local ids are
+        # only valid below the *current* per-shard capacity
+        valid = ((gids != NULL) & (owner == shard)
+                 & (lids < dp.index.capacity))
         key = jax.random.fold_in(key, shard)
         state = delete_mod.delete_batch(
             state, lids, valid, key, strategy, dp.index
@@ -274,9 +300,13 @@ class ShardedSession:
     The distributed twin of :class:`repro.core.session.Session`: owns the
     stacked per-shard ``GraphState`` (donated through the jitted
     insert/delete steps — no stacked-buffer copies per update), builds each
-    mesh program once, derives op keys from one seed chain, and dispatches
-    asynchronously — callers hold the returned device arrays and the host
-    only blocks in ``flush()`` / result consumption.
+    mesh program once *per capacity tier* (DESIGN.md §9: with
+    ``maintenance.max_capacity`` armed, the insert gate grows every shard
+    in lockstep and the programs rebuild for the new tier; gids stay valid
+    because the encoding is strided by ``max_capacity``), derives op keys
+    from one seed chain, and dispatches asynchronously — callers hold the
+    returned device arrays and the host only blocks in ``flush()`` / result
+    consumption.
     """
 
     def __init__(self, dp: DistParams, mesh, *, strategy: str | None = None,
@@ -287,14 +317,12 @@ class ShardedSession:
         self.mesh = mesh
         self._strategy = (strategy if strategy is not None
                           else dp.index.maintenance.strategy)
-        self._query_step = make_query_step(dp, mesh)
-        self._insert_step = make_insert_step(dp, mesh)
-        self._delete_step = make_delete_step(dp, mesh, self._strategy)
-        self._consolidate_step = make_consolidate_step(dp, mesh)
+        self._build_steps()
         self.state = init_sharded_state(dp, mesh)
         self._base_key = jax.random.PRNGKey(seed)
         self._op_counter = 0
         self._pending: list[jax.Array] = []  # result arrays not yet flushed
+        self._insert_results: list[jax.Array] = []  # gid arrays → n_refused
         self._window_t0: float | None = None
         self.timers = PhaseTimers()
         # consolidation bookkeeping — same host-gate scheme as the core
@@ -304,6 +332,19 @@ class ShardedSession:
         self._in_consolidate = False
         self._masked_hint = 0
         self._present_floor = 0
+        # growth bookkeeping (DESIGN.md §9): `_free_floor` underestimates
+        # the free-slot count of the *most loaded* shard (each insert op
+        # subtracts its full batch — the router could land everything on one
+        # shard), so the per-shard device-exact check runs only on crossing
+        self._free_floor = dp.index.capacity
+
+    def _build_steps(self) -> None:
+        """(Re)build the four mesh programs for the current capacity tier."""
+        self._query_step = make_query_step(self.dp, self.mesh)
+        self._insert_step = make_insert_step(self.dp, self.mesh)
+        self._delete_step = make_delete_step(self.dp, self.mesh,
+                                             self._strategy)
+        self._consolidate_step = make_consolidate_step(self.dp, self.mesh)
 
     @property
     def strategy(self) -> str:
@@ -336,15 +377,27 @@ class ShardedSession:
         return gids, scores
 
     def insert(self, vecs, route) -> jax.Array:
-        """Routed insert; returns assigned global ids (async device array)."""
+        """Routed insert; returns assigned global ids (async device array).
+
+        The insert boundary is also the growth trigger point (DESIGN.md
+        §9): ``_ensure_room`` grows every shard in lockstep (and/or drains
+        tombstones) before the batch lands. Rows a full shard still refuses
+        come back as NULL gids and are counted into ``timers.n_refused`` at
+        the next ``flush``.
+        """
+        n = int(jnp.shape(vecs)[0])
+        if n:  # outside the insert stopwatch — gate work bills to its own
+            self._ensure_room(n)  # consolidate_s / grow_s phases
         t0 = time.perf_counter()
         self.state, gids = self._insert_step(
             self.state, jnp.asarray(vecs),
             jnp.asarray(route, jnp.int32), self._op_key(),
         )
+        self._free_floor = max(self._free_floor - n, 0)
         self._pending.append(gids)
+        self._insert_results.append(gids)
         self.timers.insert_s += time.perf_counter() - t0
-        self.timers.n_inserts += int(jnp.shape(vecs)[0])
+        self.timers.n_inserts += n
         self.timers.n_ops += 1
         return gids
 
@@ -363,6 +416,82 @@ class ShardedSession:
         else:
             self._present_floor = max(
                 self._present_floor - int(jnp.shape(gids)[0]), 0)
+
+    # -- capacity growth (DESIGN.md §9, lockstep over shards) --------------
+    def _per_shard_present(self) -> "np.ndarray":
+        """Per-shard present counts (synchronizes on the stream)."""
+        return np.asarray(jnp.sum(
+            self.state.present,
+            axis=tuple(range(1, self.state.present.ndim)),
+        ))
+
+    def _ensure_room(self, n: int) -> None:
+        """Per-shard grow/consolidate gate at the insert boundary.
+
+        Worst-case routing (whole batch on one shard) drives the host hint,
+        so the exact per-shard measurement runs only when the most-loaded
+        shard could conceivably refuse. Arbitration mirrors the core
+        session: drain tombstones inside the compiled tier first, grow all
+        shards to the next tier only when compaction cannot make room.
+        """
+        if self._free_floor >= n:
+            return
+        mp = self.dp.index.maintenance
+        cap = self.dp.index.capacity
+        present = self._per_shard_present()
+        masked = self._per_shard_masked()
+        self._masked_hint = int(masked.sum())
+        self._present_floor = int(present.sum())
+        free = cap - present
+        min_free = int(free.min())
+        if min_free < n and masked.sum() > 0 and (
+                mp.consolidate_threshold is not None
+                or mp.max_capacity is not None):
+            self.consolidate(_per_shard=masked)
+            min_free = int((free + masked).min())
+        if min_free < n and mp.max_capacity is not None:
+            target = next_capacity_tier(
+                cap, cap - min_free + n, mp.growth_factor, mp.max_capacity)
+            if target > cap:
+                self.grow(target)
+                min_free += target - cap
+        self._free_floor = min_free
+
+    def grow(self, new_capacity: int) -> None:
+        """Grow every shard to ``new_capacity`` slots in lockstep.
+
+        One `grow_state` pad over the stacked axis-1 layout keeps all
+        shards in a single shape family; the four mesh programs are rebuilt
+        once for the new tier. Requires ``maintenance.max_capacity`` to be
+        set — the global-id stride is pinned to it (``DistParams.
+        gid_stride``), which is what keeps gids handed out at smaller tiers
+        decodable after the move.
+        """
+        mp = self.dp.index.maintenance
+        if mp.max_capacity is None:
+            raise ValueError(
+                "ShardedSession growth requires maintenance.max_capacity: "
+                "the global-id stride is pinned to it so existing gids "
+                "survive the tier move")
+        if new_capacity > mp.max_capacity:
+            raise ValueError(
+                f"new_capacity {new_capacity} exceeds max_capacity "
+                f"{mp.max_capacity}")
+        if new_capacity == self.dp.index.capacity:
+            return
+        t0 = time.perf_counter()
+        if self._window_t0 is None:
+            self._window_t0 = t0
+        delta = new_capacity - self.dp.index.capacity
+        self.state = grow_state(self.state, new_capacity, axis=1)
+        self.dp = dataclasses.replace(
+            self.dp,
+            index=dataclasses.replace(self.dp.index, capacity=new_capacity),
+        )
+        self._build_steps()
+        self._free_floor += delta
+        self.timers.n_grows += 1
+        self.timers.grow_s += time.perf_counter() - t0
 
     # -- consolidation (DESIGN.md §8, per-shard) ---------------------------
     def _per_shard_masked(self) -> "np.ndarray":
@@ -434,6 +563,12 @@ class ShardedSession:
         t0 = time.perf_counter()
         jax.block_until_ready(self._pending)
         jax.block_until_ready(self.state.adj)
+        # refusal accounting (DESIGN.md §9): a full shard answers NULL gids;
+        # they are counted here (the arrays are already materialized) so a
+        # net-growing stream can never lose inserts silently
+        for gids in self._insert_results:
+            self.timers.n_refused += int((np.asarray(gids) == NULL).sum())
+        self._insert_results.clear()
         self._pending.clear()
         self.timers.flush_s += time.perf_counter() - t0
         if self._window_t0 is not None:

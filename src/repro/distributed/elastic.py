@@ -21,14 +21,33 @@ from repro.core.graph import GraphState
 from repro.core.params import IndexParams
 
 
-def gather_alive(state_stacked: GraphState) -> tuple[np.ndarray, np.ndarray]:
-    """Host-side: (vectors, global_ids) of every alive vertex across shards."""
+def _stride_of(params: IndexParams, cap_live: int) -> int:
+    """The gid stride of a sharded session under ``params``: pinned to
+    ``max_capacity`` when growth is armed (DESIGN.md §9 — gids survive tier
+    moves), the live per-shard capacity otherwise (legacy encoding). Must
+    mirror ``DistParams.gid_stride``."""
+    mp = params.maintenance
+    return mp.max_capacity if mp.max_capacity is not None else cap_live
+
+
+def gather_alive(
+    state_stacked: GraphState, *, stride: int | None = None
+) -> tuple[np.ndarray, np.ndarray]:
+    """Host-side: (vectors, global_ids) of every alive vertex across shards.
+
+    ``stride`` is the gid encoding stride (``gid = shard · stride + lid``);
+    defaults to the live per-shard capacity — pass the armed session's
+    stride (= ``max_capacity``) so the returned gids match the ids the
+    session actually handed out.
+    """
     vecs = np.asarray(jax.device_get(state_stacked.vectors))
     alive = np.asarray(jax.device_get(state_stacked.alive))
     P, cap, dim = vecs.shape
+    stride = cap if stride is None else stride
     flat = vecs.reshape(P * cap, dim)
     mask = alive.reshape(P * cap)
-    gids = np.flatnonzero(mask)
+    idx = np.flatnonzero(mask)
+    gids = (idx // cap) * stride + (idx % cap)
     return flat[mask], gids
 
 
@@ -43,9 +62,15 @@ def reshard(
     """Re-shard a stacked index to ``n_new_shards`` shards.
 
     Returns (new stacked state [P', cap', ...], id remap array old_gid →
-    new_gid). Each new shard is re-bulk-linked independently.
+    new_gid). Each new shard is re-bulk-linked independently. Both sides of
+    the remap live in the *session's* gid space (DESIGN.md §9): old gids are
+    decoded with the old config's stride, new gids encoded with the new
+    config's — so growth-armed sessions (stride = ``max_capacity``) can
+    translate the ids they handed out across the reshard.
     """
-    vecs, old_gids = gather_alive(state_stacked)
+    old_stride = _stride_of(old_params, int(state_stacked.vectors.shape[1]))
+    new_stride = _stride_of(new_params, new_params.capacity)
+    vecs, old_gids = gather_alive(state_stacked, stride=old_stride)
     n = vecs.shape[0]
     cap = new_params.capacity
     if route == "hash":
@@ -68,7 +93,7 @@ def reshard(
         valid = jnp.arange(cap) < count
         st = rebuild.bulk_knn_build(jnp.asarray(padded), valid, new_params)
         shard_states.append(st)
-        remap[old_gids[mine]] = s * cap + np.arange(count)
+        remap[old_gids[mine]] = s * new_stride + np.arange(count)
 
     stacked = jax.tree.map(
         lambda *xs: jnp.stack(xs), *shard_states

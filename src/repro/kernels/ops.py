@@ -3,6 +3,21 @@
 Handles padding to block multiples, invalid-id fixup, dtype policy (bf16/f32
 inputs, fp32 accumulation), and the interpret-mode switch (interpret=True on
 CPU — the container target; False when an actual TPU backend is present).
+
+Capacity-tier contract (DESIGN.md §9): the growth engine produces table
+sizes that are NOT powers of two (geometric tiers, ``max_capacity`` clips),
+so every wrapper must stay exact for arbitrary M. The padded-tail story,
+audited per kernel and pinned by the {2^k, 2^k+1, 3·2^k} sweep in
+``tests/test_kernels.py``:
+
+  · ``score_matrix`` — rows/cols padded up to block multiples, output
+    cropped ``[:B, :M]``; tail blocks compute garbage that is never read.
+  · ``score_topk``   — the kernel masks row ids ≥ ``n_valid`` to -inf
+    (authoritative for every metric) AND ``xsq`` is padded with +inf (l2
+    belt-and-braces), so a padded tail row can never win a top-k slot.
+  · ``gather_scores`` — ids are validated against the true M here and
+    clamped before the kernel; the row BlockSpec indexes exact rows, so no
+    tail row is ever DMA'd, and invalid lanes resolve to -inf outside.
 """
 from __future__ import annotations
 

@@ -144,6 +144,93 @@ def test_checkpoint_rejects_consolidation_params_mismatch(tmp_path):
         other.restore()
 
 
+def _growth_params(capacity=32, max_capacity=512):
+    from repro.core import IndexParams, MaintenanceParams, SearchParams
+
+    return IndexParams(
+        capacity=capacity, dim=8, d_out=6,
+        search=SearchParams(pool_size=16, max_steps=48, num_starts=2),
+        maintenance=MaintenanceParams(
+            strategy="mask", insert_chunk=16, delete_chunk=16,
+            max_capacity=max_capacity,
+        ),
+    )
+
+
+def test_checkpoint_capacity_roundtrip_across_growth(tmp_path):
+    """Save at a grown tier C → restore into a fresh session configured at
+    the *initial* tier → keep streaming (incl. a further growth): bit-exact
+    vs never having checkpointed (DESIGN.md §9 capacity compatibility)."""
+    from repro.core import Session
+
+    def build(ckpt_dir):
+        rng = np.random.default_rng(9)
+        sess = Session(_growth_params(), seed=3, checkpoint_dir=ckpt_dir)
+        X = rng.normal(size=(80, 8)).astype(np.float32)  # grows 32 → ≥ 80
+        ids = sess.insert(X).result()
+        sess.delete(ids[:10])  # tombstones pending at the checkpoint
+        sess.flush()
+        return sess, rng
+
+    def tail(sess, rng):
+        # forces the consolidate-then-grow arbitration and a further tier
+        ids2 = sess.insert(
+            rng.normal(size=(120, 8)).astype(np.float32)).result()
+        q_ids, q_scores = sess.query(
+            rng.normal(size=(12, 8)).astype(np.float32), k=8).result()
+        sess.flush()
+        return (np.asarray(ids2), q_ids, q_scores,
+                np.asarray(sess.state.adj), np.asarray(sess.state.present),
+                sess.state.capacity)
+
+    sess_a, rng_a = build(tmp_path / "a")
+    cap_saved = sess_a.state.capacity
+    assert cap_saved > 32, "the build must have grown before saving"
+    sess_a.save(step=1)
+    out_a = tail(sess_a, rng_a)
+    assert (out_a[0] != -1).all()
+    assert out_a[5] > cap_saved, "the tail must have grown again"
+
+    sess_b, rng_b = build(tmp_path / "b")  # never checkpointed
+    out_b = tail(sess_b, rng_b)
+    for a, b in zip(out_a, out_b):
+        np.testing.assert_array_equal(a, b)
+
+    # fresh session at the initial tier restores the grown checkpoint
+    rng_c = np.random.default_rng(9)
+    rng_c.normal(size=(80, 8))
+    sess_c = Session(_growth_params(), seed=3, checkpoint_dir=tmp_path / "a")
+    assert sess_c.restore() == 1
+    assert sess_c.state.capacity == cap_saved
+    out_c = tail(sess_c, rng_c)
+    for a, c in zip(out_a, out_c):
+        np.testing.assert_array_equal(a, c)
+
+
+def test_checkpoint_capacity_shrink_rejected(tmp_path):
+    """Geometry/policy fingerprints match ⇒ capacity is shrink-checked: a
+    session whose initial tier exceeds the saved one must refuse (the
+    allocator cannot shrink). A differing growth ceiling is a policy
+    change → fingerprint mismatch, before any capacity check."""
+    from repro.core import Session
+
+    sess = Session(_growth_params(), seed=0, checkpoint_dir=tmp_path)
+    rng = np.random.default_rng(0)
+    sess.insert(rng.normal(size=(80, 8)).astype(np.float32)).result()
+    assert sess.state.capacity > 32
+    sess.save(step=1)
+
+    bigger = Session(_growth_params(capacity=256), seed=0,
+                     checkpoint_dir=tmp_path)
+    with pytest.raises(ValueError, match="below this configuration"):
+        bigger.restore()
+
+    lower_ceiling = Session(_growth_params(max_capacity=64), seed=0,
+                            checkpoint_dir=tmp_path)
+    with pytest.raises(ValueError, match="fingerprint"):
+        lower_ceiling.restore()  # ceiling is policy → fingerprinted
+
+
 @pytest.mark.slow
 def test_preempt_resume_exact(tmp_path):
     """Training 30 steps straight == train 20, preempt, resume 10 (bitwise

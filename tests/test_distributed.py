@@ -76,6 +76,31 @@ with compat.use_mesh(mesh):
     out['sharded_auto_masked'] = int(np.asarray(jnp.sum(sess.state.masked)))
     out['sharded_n_consolidations'] = sess.timers.n_consolidations
 
+    # lockstep capacity growth (DESIGN.md section 9): armed max_capacity,
+    # inserts past the per-shard tier grow every shard at once, and gids
+    # handed out at the small tier stay decodable (stride = max_capacity)
+    ipg = IndexParams(capacity=16, dim=16, d_out=8,
+                      search=SearchParams(pool_size=16, max_steps=32,
+                                          num_starts=2),
+                      maintenance=MaintenanceParams(
+                          strategy='pure', insert_chunk=32, delete_chunk=32,
+                          max_capacity=128))
+    gs = ShardedSession(DistParams(index=ipg), mesh, strategy='pure')
+    g1 = np.asarray(gs.insert(X[:100], jnp.arange(100)))
+    g2 = np.asarray(gs.insert(X[100:200], jnp.arange(100, 200)))
+    gs.flush()
+    out['growth_cap'] = gs.dp.index.capacity
+    out['growth_n_grows'] = gs.timers.n_grows
+    out['growth_refused'] = gs.timers.n_refused
+    out['growth_gids_unique'] = (
+        len(set(g1.tolist()) | set(g2.tolist())) == 200)
+    out['growth_alive'] = int(np.asarray(jnp.sum(gs.state.alive)))
+    gs.delete(jnp.asarray(g1[:20]))  # pre-growth gids must still decode
+    gs.flush()
+    out['growth_alive_after_delete'] = int(np.asarray(jnp.sum(gs.state.alive)))
+    qi, _ = gs.query(Q[:8])
+    out['growth_query_valid'] = bool((np.asarray(qi)[:, 0] >= 0).all())
+
     # multi-pod replica mesh
     mesh3 = jax.make_mesh((2, 2, 2), ('pod', 'data', 'model'))
     dp3 = DistParams(index=ip, pod_axis='pod')
@@ -115,5 +140,13 @@ def test_sharded_index_8dev():
     assert out["sharded_present_after"] == 160
     assert out["sharded_auto_masked"] == 0, "threshold crossing must drain"
     assert out["sharded_n_consolidations"] >= 2
+    assert out["growth_cap"] > 16, "shards must have grown in lockstep"
+    assert out["growth_cap"] <= 128
+    assert out["growth_n_grows"] <= 3  # ceil(log2(128/16)) recompiles max
+    assert out["growth_refused"] == 0
+    assert out["growth_gids_unique"]
+    assert out["growth_alive"] == 200
+    assert out["growth_alive_after_delete"] == 180
+    assert out["growth_query_valid"]
     assert out["multipod_inserted"] == 80
     assert out["multipod_results_valid"]

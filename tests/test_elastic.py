@@ -57,6 +57,33 @@ def test_reshard_preserves_vectors_and_recall():
     assert int(res.ids[0]) != NULL
 
 
+def test_reshard_growth_armed_stride():
+    """Growth-armed sessions stride gids by max_capacity (DESIGN.md §9);
+    the reshard remap must be keyed in that gid space on BOTH sides, or
+    every id a caller held across the reshard translates wrongly."""
+    from repro.core import MaintenanceParams
+
+    rng = np.random.default_rng(2)
+    stacked, _, _ = _stacked_index(2, 64, 8, 60, rng)
+    armed = IndexParams(
+        capacity=64, dim=8, d_out=6,
+        search=SearchParams(pool_size=16, max_steps=48, num_starts=2),
+        maintenance=MaintenanceParams(max_capacity=256),
+    )
+    # the gids an armed session would have handed out for this state
+    _, held_gids = gather_alive(stacked, stride=256)
+    assert ((held_gids // 256) < 2).all() and ((held_gids % 256) < 64).all()
+    assert held_gids.max() >= 256, "shard 1 gids must be stride-encoded"
+
+    new_stacked, remap = reshard(stacked, armed, armed, 2)
+    new_gids = remap[held_gids]
+    assert (new_gids >= 0).all(), "every held gid must translate"
+    # the emitted gids live in the new config's (armed) stride space and
+    # match what gather_alive reads back off the new state
+    _, readback = gather_alive(new_stacked, stride=256)
+    assert set(new_gids.tolist()) == set(readback.tolist())
+
+
 def test_reshard_capacity_guard():
     rng = np.random.default_rng(1)
     stacked, params, _ = _stacked_index(4, 64, 8, 120, rng)

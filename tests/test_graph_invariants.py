@@ -185,6 +185,71 @@ def test_post_consolidation_invariants(seed, consolidate_strategy):
     assert not check_invariants(idx.state)
 
 
+# ---------------------------------------------------------------------------
+# post-growth states (DESIGN.md §9): byte-stable prefix, empty new slots
+# ---------------------------------------------------------------------------
+
+def test_grow_state_preserves_graph_and_adds_empty_slots():
+    """After ``grow_state``: old slots byte-identical, new slots edge-free
+    and invisible (not present, zero vectors), radj consistent with the
+    ``rebuild_radj_rows`` oracle at the new tier, invariants clean."""
+    import jax.numpy as jnp
+
+    from repro.core.graph import grow_state, rebuild_radj_rows
+
+    rng = np.random.default_rng(7)
+    X = rng.normal(size=(40, 8)).astype(np.float32)
+    idx = build_index(X, strategy="global", capacity=48)
+    st = idx.state
+    grown = grow_state(st, 100)
+    assert grown.capacity == 100
+    for fld in ("vectors", "sqnorms", "adj", "radj", "alive", "present"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(grown, fld))[:48],
+            np.asarray(getattr(st, fld)), err_msg=fld)
+    assert (np.asarray(grown.adj)[48:] == NULL).all()
+    assert (np.asarray(grown.radj)[48:] == NULL).all()
+    assert not np.asarray(grown.present)[48:].any()
+    assert not np.asarray(grown.alive)[48:].any()
+    assert (np.asarray(grown.vectors)[48:] == 0).all()
+    assert int(np.asarray(grown.size)) == int(np.asarray(st.size))
+    errs = check_invariants(grown)
+    assert not errs, errs[:5]
+    rebuilt = rebuild_radj_rows(grown, jnp.ones((100,), bool))
+    assert np.array_equal(np.asarray(rebuilt.adj), np.asarray(grown.adj))
+    radj = np.asarray(grown.radj)
+    reb = np.asarray(rebuilt.radj)
+    for v in range(100):
+        assert (set(radj[v][radj[v] != NULL].tolist())
+                == set(reb[v][reb[v] != NULL].tolist())), v
+    # no-op and shrink edges of the contract
+    from repro.core.graph import grow_state as gs
+    assert gs(st, 48) is st
+    with pytest.raises(ValueError, match="shrink"):
+        gs(st, 16)
+
+
+def test_grown_index_keeps_invariants_under_updates():
+    """Updates running at the grown tier (insert into the padded slots,
+    delete across the old/new boundary) keep I1–I4 and degree bounds."""
+    from repro.core.graph import grow_state
+
+    rng = np.random.default_rng(11)
+    X = rng.normal(size=(40, 8)).astype(np.float32)
+    idx = build_index(X, strategy="global", capacity=48)
+    idx.state = grow_state(idx.state, 96)
+    ids = idx.insert(rng.normal(size=(40, 8)).astype(np.float32))
+    assert (np.asarray(ids) != NULL).all()
+    alive_ids = np.flatnonzero(np.asarray(idx.state.alive))
+    idx.delete(rng.choice(alive_ids, size=20, replace=False))
+    errs = check_invariants(idx.state)
+    assert not errs, errs[:5]
+    adj = np.asarray(idx.state.adj)
+    radj = np.asarray(idx.state.radj)
+    assert (np.sum(adj != NULL, axis=1) <= idx.state.d_out).all()
+    assert (np.sum(radj != NULL, axis=1) <= idx.state.d_in).all()
+
+
 def test_delete_then_reinsert_no_stale_edges():
     """Reused slots must not inherit stale in-edges (the ABA hazard)."""
     rng = np.random.default_rng(5)

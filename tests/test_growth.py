@@ -1,0 +1,209 @@
+"""Capacity growth engine (DESIGN.md §9): gate, arbitration, refusal books.
+
+Session-level coverage of the dynamic growth subsystem. Graph-level
+``grow_state`` invariants live in test_graph_invariants.py, stream-level
+differential coverage in test_stream_fuzz.py, and checkpoint capacity
+compatibility in test_checkpoint.py.
+"""
+import numpy as np
+import pytest
+
+from helpers import check_invariants
+from repro.core import (
+    IndexParams,
+    IPGMIndex,
+    MaintenanceParams,
+    SearchParams,
+    Session,
+    run_workload,
+)
+from repro.core.graph import NULL, next_capacity_tier
+
+DIM = 8
+
+
+def _params(capacity=32, **mkw):
+    kw = dict(strategy="global", insert_chunk=16, delete_chunk=16)
+    kw.update(mkw)
+    return IndexParams(
+        capacity=capacity, dim=DIM, d_out=6,
+        search=SearchParams(pool_size=16, max_steps=48, num_starts=2),
+        maintenance=MaintenanceParams(**kw),
+    )
+
+
+def test_next_capacity_tier():
+    assert next_capacity_tier(1024, 1024, 2.0, None) == 1024
+    assert next_capacity_tier(1024, 1025, 2.0, None) == 2048
+    assert next_capacity_tier(1024, 9000, 2.0, None) == 16384
+    assert next_capacity_tier(1024, 9000, 2.0, 8192) == 8192  # clipped
+    assert next_capacity_tier(10, 11, 1.5, None) == 15
+    assert next_capacity_tier(16, 100, 2.0, 16) == 16  # capped out
+    assert next_capacity_tier(16, 8, 2.0, None) == 16  # never shrinks
+
+
+def test_full_index_reports_refusals():
+    """Regression (ISSUE 5): a full fixed-capacity index must *count* the
+    NULL ids it hands out — silently vanishing inserts are the bug."""
+    rng = np.random.default_rng(0)
+    sess = Session(_params(capacity=16), seed=0)
+    ids = np.asarray(
+        sess.insert(rng.normal(size=(20, DIM)).astype(np.float32)).result())
+    assert (ids[:16] != NULL).all() and (ids[16:] == NULL).all()
+    assert sess.timers.n_refused == 4
+    assert sess.stats()["n_refused"] == 4
+    ids2 = np.asarray(
+        sess.insert(rng.normal(size=(3, DIM)).astype(np.float32)).result())
+    assert (ids2 == NULL).all()
+    assert sess.timers.n_refused == 7
+    assert sess.timers.n_grows == 0 and sess.state.capacity == 16
+    assert "n_refused" in sess.timers.to_dict()
+
+
+def test_workload_summary_reports_refusals():
+    rng = np.random.default_rng(1)
+    sess = Session(_params(capacity=16), seed=0)
+    recs = run_workload(
+        sess, [("insert", rng.normal(size=(20, DIM)).astype(np.float32))])
+    assert recs[-1]["op"] == "summary"
+    assert recs[-1]["timers"]["n_refused"] == 4
+
+
+def test_armed_session_grows_instead_of_refusing():
+    rng = np.random.default_rng(2)
+    sess = Session(_params(capacity=16, max_capacity=256), seed=0)
+    ids = np.asarray(
+        sess.insert(rng.normal(size=(100, DIM)).astype(np.float32)).result())
+    assert (ids != NULL).all()
+    assert sess.timers.n_refused == 0
+    assert 100 <= sess.state.capacity <= 256
+    assert 1 <= sess.timers.n_grows <= 4  # ceil(log2(256/16))
+    assert not check_invariants(sess.state)
+    Q = rng.normal(size=(16, DIM)).astype(np.float32)
+    assert sess.recall(Q, 10) > 0.8
+    st = sess.stats()
+    assert st["capacity"] == sess.state.capacity and st["n_grows"] >= 1
+
+
+def test_growth_caps_at_max_capacity_then_refuses():
+    rng = np.random.default_rng(3)
+    sess = Session(_params(capacity=16, max_capacity=24), seed=0)
+    ids = np.asarray(
+        sess.insert(rng.normal(size=(30, DIM)).astype(np.float32)).result())
+    assert (ids[:24] != NULL).all() and (ids[24:] == NULL).all()
+    assert sess.state.capacity == 24
+    assert sess.timers.n_refused == 6
+
+
+def test_arbitration_prefers_consolidate_over_grow():
+    """Tombstones that cover the shortfall are compacted inside the current
+    shape family — the session must not pay a growth recompile for slots
+    consolidation can reclaim."""
+    rng = np.random.default_rng(4)
+    sess = Session(_params(capacity=32, strategy="mask", max_capacity=256),
+                   seed=0)
+    ids = sess.insert(rng.normal(size=(32, DIM)).astype(np.float32)).result()
+    sess.delete(np.asarray(ids[:16]))
+    new = np.asarray(
+        sess.insert(rng.normal(size=(10, DIM)).astype(np.float32)).result())
+    assert (new != NULL).all()
+    assert sess.timers.n_grows == 0, "tombstones covered the shortfall"
+    assert sess.timers.n_consolidations == 1
+    assert sess.timers.n_refused == 0
+    assert sess.state.capacity == 32
+    # the compacted slots were genuinely reused, lowest-first
+    assert np.array_equal(new, np.arange(10))
+
+
+def test_arbitration_grows_when_tombstones_insufficient():
+    rng = np.random.default_rng(5)
+    sess = Session(_params(capacity=32, strategy="mask", max_capacity=256),
+                   seed=0)
+    ids = sess.insert(rng.normal(size=(32, DIM)).astype(np.float32)).result()
+    sess.delete(np.asarray(ids[:4]))
+    new = np.asarray(
+        sess.insert(rng.normal(size=(10, DIM)).astype(np.float32)).result())
+    assert (new != NULL).all()
+    assert sess.timers.n_consolidations == 1  # compacted first ...
+    assert sess.timers.n_grows == 1           # ... then grew for the rest
+    assert sess.state.capacity > 32
+    assert sess.timers.n_refused == 0
+    assert not check_invariants(sess.state)
+
+
+def test_explicit_grow_and_allocator_handoff():
+    """Session.grow is callable directly (maintenance scripts); the new
+    slots join the allocator immediately and old results stay valid."""
+    rng = np.random.default_rng(6)
+    sess = Session(_params(capacity=16), seed=0)
+    ids = sess.insert(rng.normal(size=(16, DIM)).astype(np.float32)).result()
+    sess.grow(48)
+    assert sess.state.capacity == 48
+    new = np.asarray(
+        sess.insert(rng.normal(size=(20, DIM)).astype(np.float32)).result())
+    assert (new != NULL).all()
+    assert np.array_equal(new, np.arange(16, 36))  # appended free slots
+    assert (np.asarray(ids) < 16).all()
+    assert sess.timers.n_refused == 0
+    with pytest.raises(ValueError, match="shrink"):
+        sess.grow(16)
+    # an *armed* session refuses explicit grows past its ceiling — every
+    # tier it can save is one its own config restores
+    armed = Session(_params(capacity=16, max_capacity=64), seed=0)
+    with pytest.raises(ValueError, match="max_capacity"):
+        armed.grow(128)
+
+
+def test_max_capacity_below_initial_capacity_rejected():
+    with pytest.raises(AssertionError, match="max_capacity"):
+        _params(capacity=64, max_capacity=32)
+
+
+def test_rebuild_from_alive_uses_live_capacity():
+    """Regression (ISSUE 5): ``rebuild_from_alive`` padded to the *initial*
+    ``params.capacity`` — after a growth that both desyncs the tier and
+    cannot even hold the alive set. It must rebuild at ``state.capacity``."""
+    rng = np.random.default_rng(7)
+    sess = Session(_params(capacity=16, max_capacity=256), seed=0)
+    sess.insert(rng.normal(size=(60, DIM)).astype(np.float32)).result()
+    cap = sess.state.capacity
+    assert cap >= 60 > 16
+    sess.rebuild_from_alive()
+    assert sess.state.capacity == cap, "rebuild must keep the live tier"
+    assert sess.stats()["n_alive"] == 60
+    assert not check_invariants(sess.state)
+    ids = np.asarray(sess.insert(
+        rng.normal(size=(cap - 60, DIM)).astype(np.float32)).result())
+    assert (ids != NULL).all()
+    assert sess.timers.n_refused == 0
+
+
+def test_growth_timing_does_not_shift_op_keys():
+    """A session that grew mid-stream and one born at the final tier run the
+    same op-key chain: insert slot assignment is bit-identical (allocation
+    is lowest-free-first; growth only appends free slots)."""
+    rng = np.random.default_rng(8)
+    batches = [rng.normal(size=(n, DIM)).astype(np.float32)
+               for n in (30, 40, 50)]
+    grown = Session(_params(capacity=32, max_capacity=512), seed=5)
+    static = Session(_params(capacity=256, max_capacity=512), seed=5)
+    for b in batches:
+        g = np.asarray(grown.insert(b).result())
+        s = np.asarray(static.insert(b).result())
+        np.testing.assert_array_equal(g, s)
+    assert grown.timers.n_grows >= 1 and static.timers.n_grows == 0
+    assert grown._op_counter == static._op_counter
+    n = min(grown.state.capacity, static.state.capacity)
+    np.testing.assert_array_equal(np.asarray(grown.state.alive)[:n],
+                                  np.asarray(static.state.alive)[:n])
+
+
+def test_facade_growth_passthrough():
+    rng = np.random.default_rng(9)
+    idx = IPGMIndex(_params(capacity=16, max_capacity=128), seed=0)
+    ids = np.asarray(idx.insert(rng.normal(size=(50, DIM))
+                                .astype(np.float32)))
+    assert (ids != NULL).all()
+    st = idx.stats()
+    assert st["capacity"] >= 50 and st["n_refused"] == 0
+    assert not check_invariants(idx.state)

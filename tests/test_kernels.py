@@ -86,6 +86,44 @@ def test_topk_all_negative_ip_padding():
     assert (np.asarray(gi) == np.asarray(wi)).all()
 
 
+GROWN_TIERS = [2**5, 2**5 + 1, 3 * 2**5, 2**8, 2**8 + 1, 3 * 2**8]
+
+
+@pytest.mark.parametrize("M", GROWN_TIERS)
+def test_capacity_tier_sweep_masks_padded_tails(M):
+    """Grown capacity tiers (DESIGN.md §9) hit non-power-of-two table sizes:
+    {2^k, 2^k+1, 3·2^k} sweeps the block-grid padding of every kernel — no
+    padded tail row may leak into scores, top-k results, or gathers."""
+    d, B, k, C = 48, 13, 9, 17
+    rng = np.random.default_rng(M)
+    x = jnp.asarray(rng.normal(size=(M, d)).astype(np.float32))
+    q = jnp.asarray(rng.normal(size=(B, d)).astype(np.float32))
+    xsq = jnp.sum(x * x, 1)
+
+    got = ops.score_matrix(x, xsq, q)
+    want = ref_score_matrix(x, xsq, q, "l2")
+    assert got.shape == (B, M)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=1e-2)
+
+    gs, gi = ops.score_topk(x, xsq, q, k)
+    ws, wi = ref_score_topk(x, xsq, q, k, "l2")
+    assert (np.asarray(gi) == np.asarray(wi)).all()
+    assert (np.asarray(gi) < M).all(), "padded tail row reported"
+
+    ids = rng.integers(0, M, size=(B, C)).astype(np.int32)
+    ids[0, 0] = M - 1  # the exact tier boundary
+    ids[0, 1] = M      # one past it: must mask, not read the pad
+    ids[0, 2] = -1
+    ids = jnp.asarray(ids)
+    got_g = ops.gather_scores(x, xsq, ids, q)
+    want_g = ref_gather_scores(x, xsq, jnp.clip(ids, 0, M - 1), q, "l2")
+    want_g = jnp.where((ids >= 0) & (ids < M), want_g, -jnp.inf)
+    g, w = np.asarray(got_g), np.asarray(want_g)
+    assert ((g == -np.inf) == (w == -np.inf)).all()
+    m = np.isfinite(g)
+    np.testing.assert_allclose(g[m], w[m], rtol=1e-4, atol=1e-3)
+
+
 def test_kernel_matches_core_search_scoring():
     """gather_scores == the scoring used inside beam expansion."""
     from repro.core import distances

@@ -79,6 +79,12 @@ class Oracle:
             if i >= 0 and self.alive[i]:
                 self.alive[i] = False  # stays present: tombstone
 
+    def delete_hard(self, ids):
+        """PURE-style delete: the slot frees immediately (no tombstone)."""
+        for i in np.asarray(ids, np.int64).ravel():
+            if i >= 0 and self.alive[i]:
+                self.alive[i] = self.present[i] = False
+
     def consolidate(self):
         freed = self.present & ~self.alive
         self.present[freed] = False
@@ -103,11 +109,48 @@ class Oracle:
         return hits / max(len(true), 1)
 
 
+class UnboundedOracle(Oracle):
+    """Numpy mirror with an *unbounded* allocator (DESIGN.md §9): capacity
+    is virtual — insert never refuses, the arrays double on demand. Slot
+    assignment stays bit-comparable with a growing session regardless of
+    when (or in what tiers) the engine grows, because allocation is
+    lowest-free-first and growth only ever appends free slots."""
+
+    def insert(self, vecs):
+        ids = []
+        for v in np.asarray(vecs, np.float32):
+            free = np.flatnonzero(~self.present)
+            if free.size == 0:
+                cap = self.present.shape[0]
+                self.vectors = np.concatenate(
+                    [self.vectors, np.zeros_like(self.vectors)])
+                self.alive = np.concatenate(
+                    [self.alive, np.zeros(cap, bool)])
+                self.present = np.concatenate(
+                    [self.present, np.zeros(cap, bool)])
+                free = np.flatnonzero(~self.present)
+            s = int(free[0])
+            self.vectors[s] = v
+            self.alive[s] = self.present[s] = True
+            ids.append(s)
+        return np.asarray(ids, np.int32)
+
+
 def _assert_flag_parity(sess, oracle):
     np.testing.assert_array_equal(np.asarray(sess.state.alive), oracle.alive)
     np.testing.assert_array_equal(
         np.asarray(sess.state.present), oracle.present
     )
+
+
+def _assert_flag_parity_prefix(sess, oracle):
+    """Flag parity when the engine tier and the oracle's doubling diverge:
+    equal on the common prefix, empty beyond it on both sides."""
+    for eng, orc in ((np.asarray(sess.state.alive), oracle.alive),
+                     (np.asarray(sess.state.present), oracle.present)):
+        n = min(eng.shape[0], orc.shape[0])
+        np.testing.assert_array_equal(eng[:n], orc[:n])
+        assert not eng[n:].any() and not orc[n:].any()
 
 
 @pytest.mark.parametrize("seed", [0, 1, 2])
@@ -331,6 +374,176 @@ def test_run_workload_consolidate_op():
         "delete", "consolidate", "insert", "query"]
     assert recs_f[1]["n"] == 15
     assert recs_f[-1]["recall"] == pytest.approx(recs[-2]["recall"], abs=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# growth engine (DESIGN.md §9): net-growing streams vs the unbounded oracle
+# ---------------------------------------------------------------------------
+
+GROW_CAP = 64
+GROW_MAX = 1024
+
+
+def _growth_params(**maintenance_kw):
+    mkw = dict(strategy="mask", insert_chunk=CHUNK, delete_chunk=CHUNK,
+               max_capacity=GROW_MAX)
+    mkw.update(maintenance_kw)
+    p = _params(**mkw)
+    import dataclasses
+    return dataclasses.replace(p, capacity=GROW_CAP)
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_growth_stream_fuzz_differential(seed):
+    """Net-growing random mixed streams through an armed session vs the
+    unbounded-allocator oracle: insert-id parity across every tier move,
+    zero refusals, flag parity, recall floor, clean invariants."""
+    rng = np.random.default_rng(seed)
+    sess = Session(_growth_params(), seed=seed)
+    oracle = UnboundedOracle()
+    base = rng.normal(size=(50, DIM)).astype(np.float32)
+    np.testing.assert_array_equal(sess.insert(base).result(),
+                                  oracle.insert(base))
+
+    for step in range(20):
+        op = rng.choice(["insert", "delete", "query", "consolidate"],
+                        p=[0.45, 0.2, 0.25, 0.1])
+        if op == "insert":
+            n = int(rng.integers(5, 25))  # insert-heavy: the net-growth bias
+            V = rng.normal(size=(n, DIM)).astype(np.float32)
+            # the gate's arbitration may compact tombstones *before* this
+            # insert dispatches (grow-vs-consolidate, DESIGN.md §9) — the
+            # timer delta tells the oracle to mirror the compaction first
+            n_cons = sess.timers.n_consolidations
+            got = sess.insert(V).result()
+            if sess.timers.n_consolidations > n_cons:
+                oracle.consolidate()
+            np.testing.assert_array_equal(
+                got, oracle.insert(V),
+                err_msg=f"allocator parity broke across a tier move @ {step}",
+            )
+        elif op == "delete":
+            alive_ids = np.flatnonzero(oracle.alive)
+            if alive_ids.size < 20:
+                continue
+            victims = rng.choice(alive_ids, size=int(rng.integers(1, 8)),
+                                 replace=False)
+            sess.delete(victims.astype(np.int32))
+            oracle.delete_mask(victims)
+        elif op == "query":
+            Q = rng.normal(size=(int(rng.integers(1, 10)), DIM)).astype(
+                np.float32)
+            ids, _ = sess.query(Q, k=10).result()
+            assert oracle.recall(ids, Q, 10) >= RECALL_FLOOR, step
+        else:
+            assert sess.consolidate() == oracle.consolidate()
+            sess.flush()
+            _assert_flag_parity_prefix(sess, oracle)
+
+    sess.flush()
+    assert sess.timers.n_refused == 0, "armed sessions must never refuse"
+    assert sess.state.capacity > GROW_CAP, "the stream must have grown"
+    import math
+    bound = math.ceil(math.log2(sess.state.capacity / GROW_CAP))
+    assert sess.timers.n_grows <= bound, (sess.timers.n_grows, bound)
+    _assert_flag_parity_prefix(sess, oracle)
+    errs = check_invariants(sess.state)
+    assert not errs, errs[:5]
+    Q = rng.normal(size=(32, DIM)).astype(np.float32)
+    ids, _ = sess.query(Q, k=10).result()
+    assert oracle.recall(ids, Q, 10) >= RECALL_FLOOR
+
+
+def test_growth_timing_invariance():
+    """The same logical stream from different initial tiers (growth firing
+    at different stream positions, or never): identical slot assignment and
+    alive flags — allocation is lowest-free-first and the op-key chain
+    never sees a grow — plus the recall floor everywhere. PURE deletes keep
+    the physical layout schedule-independent (MASK's tombstone *compaction*
+    timing is a separate, already-pinned invariance — §8)."""
+    import dataclasses
+
+    base, events = _logical_stream(seed=5)
+    outs = []
+    for cap0 in (80, 160, 320):
+        params = dataclasses.replace(_growth_params(strategy="pure"),
+                                     capacity=cap0)
+        sess = Session(params, seed=7)
+        oracle = UnboundedOracle()
+        logical_to_slot = {}
+        ids = sess.insert(base).result()
+        np.testing.assert_array_equal(ids, oracle.insert(base))
+        for lg, s in enumerate(ids):
+            logical_to_slot[lg] = int(s)
+        next_logical = len(base)
+        recalls = []
+        for op, payload in events:
+            if op == "insert":
+                got = sess.insert(payload).result()
+                np.testing.assert_array_equal(got, oracle.insert(payload))
+                for v in got:
+                    logical_to_slot[next_logical] = int(v)
+                    next_logical += 1
+            elif op == "delete":
+                slots = np.asarray(
+                    [logical_to_slot[lg] for lg in payload], np.int32)
+                sess.delete(slots)
+                oracle.delete_hard(slots)
+            else:
+                found, _ = sess.query(payload, k=10).result()
+                recalls.append(oracle.recall(found, payload, 10))
+        sess.flush()
+        errs = check_invariants(sess.state)
+        assert not errs, (cap0, errs[:5])
+        outs.append((recalls, np.asarray(sess.state.alive), sess))
+
+    assert outs[0][2].timers.n_grows >= 1       # the small tier had to grow
+    assert outs[-1][2].timers.n_grows == 0      # the big tier never did
+    for sess in (o[2] for o in outs):
+        assert sess.timers.n_refused == 0
+    _, ref_alive, _ = outs[0]
+    for recalls, alive, _ in outs:
+        assert all(r >= RECALL_FLOOR for r in recalls), recalls
+        n = min(ref_alive.shape[0], alive.shape[0])
+        np.testing.assert_array_equal(
+            alive[:n], ref_alive[:n],
+            err_msg="growth timing must not change the alive slot set",
+        )
+        assert not alive[n:].any() and not ref_alive[n:].any()
+
+
+def test_save_grow_restore_bit_exact():
+    """save at tier C → restore → the *next growth* and everything after it
+    replay bit-exactly (tier sequence included)."""
+    import tempfile
+
+    def run(ckpt_dir=None, restore_from=None):
+        rng = np.random.default_rng(13)
+        sess = Session(_growth_params(), seed=1, checkpoint_dir=ckpt_dir)
+        X = rng.normal(size=(60, DIM)).astype(np.float32)
+        sess.insert(X).result()
+        if ckpt_dir is not None and restore_from is None:
+            sess.save(step=1)
+        if restore_from is not None:
+            rng = np.random.default_rng(13)
+            rng.normal(size=(60, DIM))
+            sess = Session(_growth_params(), seed=1,
+                           checkpoint_dir=restore_from)
+            sess.restore(1)
+        ids = sess.insert(
+            rng.normal(size=(40, DIM)).astype(np.float32)).result()
+        sess.flush()
+        return (np.asarray(ids), sess.state.capacity,
+                np.asarray(sess.state.adj), np.asarray(sess.state.alive))
+
+    with tempfile.TemporaryDirectory() as d:
+        out_a = run(ckpt_dir=d)            # save mid-stream, then grow more
+        out_b = run()                      # never checkpointed
+        out_c = run(restore_from=d)        # restore, then replay the tail
+    for a, b in zip(out_a, out_b):
+        np.testing.assert_array_equal(a, b)
+    for a, c in zip(out_a, out_c):
+        np.testing.assert_array_equal(a, c)
 
 
 def test_consolidate_handle_reports_compacted_slots():
