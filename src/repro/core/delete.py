@@ -91,7 +91,15 @@ def _finalize_removal(
     # slots already counted out of `size` by _mark_dead; free presence only
     safe = jnp.where(valid, ids, 0)
     present = state.present.at[safe].min(~valid)  # collision-safe scatter
-    return dataclasses.replace(state, present=present)
+    # freed slots scrub their compressed codes (invariant I5): `vectors`
+    # keeps stale bytes but codes/scales return to the empty-slot encoding.
+    # The dead boolean mask + where is immune to duplicate/parked lanes.
+    return dataclasses.replace(
+        state,
+        present=present,
+        codes=jnp.where(dead[:, None], 0, state.codes),
+        scales=jnp.where(dead, 0.0, state.scales),
+    )
 
 
 # ---------------------------------------------------------------------------

@@ -20,6 +20,12 @@ Invariants maintained by every public op (property-tested in
   I3  a slot is ``alive`` ⇒ it is ``present``; MASK-deleted slots are
       present but not alive (traversable, never reported).
   I4  no self-edges, no duplicate entries within a row.
+  I5  compressed-scoring sync (DESIGN.md §10): for every *present* slot,
+      ``(codes[i], scales[i]) == quantize_rows(vectors[i])`` exactly; for
+      every non-present slot the codes row and scale are zero. Every mutator
+      that writes ``vectors`` quantizes in the same transaction; every path
+      that frees a slot scrubs its codes (``vectors`` of freed slots keep
+      stale bytes — codes do not, so the invariant is checkable).
 """
 from __future__ import annotations
 
@@ -37,7 +43,8 @@ NULL = -1  # padding id for empty adjacency entries
 @functools.partial(
     jax.tree_util.register_dataclass,
     data_fields=[
-        "vectors", "sqnorms", "adj", "radj", "alive", "present", "size",
+        "vectors", "sqnorms", "codes", "scales", "adj", "radj", "alive",
+        "present", "size",
     ],
     meta_fields=["capacity", "dim", "d_out", "d_in", "metric"],
 )
@@ -48,6 +55,8 @@ class GraphState:
     # --- data ---
     vectors: jax.Array   # f32[capacity, dim]
     sqnorms: jax.Array   # f32[capacity]            ||x||^2 cache (L2 metric)
+    codes: jax.Array     # i8[capacity, dim]        per-row int8 vector codes
+    scales: jax.Array    # f32[capacity]            per-row dequant scales
     adj: jax.Array       # i32[capacity, d_out]     out-neighbors, NULL padded
     radj: jax.Array      # i32[capacity, d_in]      in-neighbors,  NULL padded
     alive: jax.Array     # bool[capacity]           reportable as a result
@@ -81,6 +90,8 @@ def init_graph(
     return GraphState(
         vectors=jnp.zeros((capacity, dim), dtype),
         sqnorms=jnp.zeros((capacity,), jnp.float32),
+        codes=jnp.zeros((capacity, dim), jnp.int8),
+        scales=jnp.zeros((capacity,), jnp.float32),
         adj=jnp.full((capacity, d_out), NULL, jnp.int32),
         radj=jnp.full((capacity, d_in), NULL, jnp.int32),
         alive=jnp.zeros((capacity,), bool),
@@ -130,6 +141,8 @@ def grow_state(state: GraphState, new_capacity: int, *, axis: int = 0) -> GraphS
         state,
         vectors=pad(state.vectors, 0),
         sqnorms=pad(state.sqnorms, 0.0),
+        codes=pad(state.codes, 0),
+        scales=pad(state.scales, 0.0),
         adj=pad(state.adj, NULL),
         radj=pad(state.radj, NULL),
         alive=pad(state.alive, False),
@@ -483,8 +496,14 @@ def free_slots(state: GraphState, ids: jax.Array, valid: jax.Array) -> GraphStat
     n_freed = jnp.sum(valid & state.alive[safe])
     alive = state.alive.at[safe].min(~valid)
     present = state.present.at[safe].min(~valid)
+    # freed slots scrub their compressed codes (invariant I5); the boolean
+    # mask + where is collision-free under duplicate/parked lanes
+    freed = jnp.zeros((state.capacity,), bool).at[safe].max(valid)
     return dataclasses.replace(
-        state, alive=alive, present=present, size=state.size - n_freed.astype(jnp.int32)
+        state, alive=alive, present=present,
+        codes=jnp.where(freed[:, None], 0, state.codes),
+        scales=jnp.where(freed, 0.0, state.scales),
+        size=state.size - n_freed.astype(jnp.int32),
     )
 
 

@@ -28,7 +28,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core import distances, search, select
+from repro.core import distances, quantize, search, select
 from repro.core.graph import (
     NULL,
     GraphState,
@@ -92,10 +92,18 @@ def insert_one(
     new_sqnorms = state.sqnorms.at[slot].set(
         jnp.where(ok, distances.sqnorm(vec_cast), state.sqnorms[slot])
     )
+    # codes land in the same transaction as the vector write (invariant I5)
+    code_row, code_scale = quantize.quantize_rows(vec_cast)
     state = dataclasses.replace(
         state,
         vectors=new_vectors,
         sqnorms=new_sqnorms,
+        codes=state.codes.at[slot].set(
+            jnp.where(ok, code_row, state.codes[slot])
+        ),
+        scales=state.scales.at[slot].set(
+            jnp.where(ok, code_scale, state.scales[slot])
+        ),
         alive=state.alive.at[slot].set(jnp.where(ok, True, state.alive[slot])),
         present=state.present.at[slot].set(
             jnp.where(ok, True, state.present[slot])
@@ -184,12 +192,15 @@ def insert_batch_impl(
     vec_cast = vecs.astype(state.vectors.dtype)
     if params.metric == "cos":
         vec_cast = distances.normalize(vec_cast)
+    code_rows, code_scales = quantize.quantize_rows(vec_cast)
     state = dataclasses.replace(
         state,
         vectors=state.vectors.at[wslots].set(vec_cast, mode="drop"),
         sqnorms=state.sqnorms.at[wslots].set(
             distances.sqnorm(vec_cast), mode="drop"
         ),
+        codes=state.codes.at[wslots].set(code_rows, mode="drop"),
+        scales=state.scales.at[wslots].set(code_scales, mode="drop"),
         alive=state.alive.at[wslots].set(True, mode="drop"),
         present=state.present.at[wslots].set(True, mode="drop"),
         size=state.size + jnp.sum(ok).astype(jnp.int32),

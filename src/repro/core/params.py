@@ -19,11 +19,22 @@ class SearchParams:
                                     # fused Pallas gather kernel
                                     # (kernels.ops.gather_scores);
                                     # None → auto (on for TPU backends)
+    quantized: bool = False  # walk the beam on int8 codes (asymmetric
+                             # distance, DESIGN.md §10); fp32 rows are then
+                             # only touched by the exact re-rank below.
+                             # False (default) = the exact fp32 engine,
+                             # which stays the parity oracle.
+    rerank_depth: int = 0    # with quantized=True: exact fp32 re-rank of
+                             # the top-r pool entries; the final top-k is
+                             # reported from those r candidates ONLY, so
+                             # keep r ≥ the k you consume. 0 = report
+                             # compressed scores directly (no exact pass).
 
     def __post_init__(self):
         assert self.pool_size >= 1 and self.max_steps >= 1
         assert 1 <= self.num_starts <= self.pool_size
         assert 1 <= self.beam_width <= self.pool_size
+        assert 0 <= self.rerank_depth <= self.pool_size
 
 
 @dataclasses.dataclass(frozen=True)

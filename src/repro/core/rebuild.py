@@ -13,7 +13,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core import distances, insert, select
+from repro.core import distances, insert, quantize, select
 from repro.core.graph import NULL, GraphState, init_graph
 from repro.core.params import IndexParams
 
@@ -67,10 +67,13 @@ def bulk_knn_build(
     if params.metric == "cos":
         vec_cast = distances.normalize(vec_cast)
     sq = distances.sqnorm(vec_cast)
+    code_rows, code_scales = quantize.quantize_rows(vec_cast)
     state = dataclasses.replace(
         state,
         vectors=state.vectors.at[:n].set(jnp.where(valid[:, None], vec_cast, 0)),
         sqnorms=state.sqnorms.at[:n].set(jnp.where(valid, sq, 0.0)),
+        codes=state.codes.at[:n].set(jnp.where(valid[:, None], code_rows, 0)),
+        scales=state.scales.at[:n].set(jnp.where(valid, code_scales, 0.0)),
         alive=state.alive.at[:n].set(valid),
         present=state.present.at[:n].set(valid),
         size=jnp.sum(valid).astype(jnp.int32),

@@ -38,6 +38,15 @@ entry remains in any query's pool (every frontier candidate is already worse
 than the current top-k) — plus a hard ``max_steps`` cap on loop trips.
 ``n_expanded`` reports the per-query count of actually expanded entries
 (≤ W·max_steps), which is the paper's hop-count QPS denominator.
+
+Compressed two-stage mode (DESIGN.md §10): with ``SearchParams.quantized``
+the walk above scores candidate blocks on the int8 codes (asymmetric
+distance, Pallas ``gather_scores_q8`` or the jnp fallback) — ~4x fewer
+hot-loop bytes — and, when ``rerank_depth > 0``, a single exact fp32 pass
+re-ranks the top-r alive pool entries before reporting (FreshDiskANN's
+compressed-first/exact-rerank split). ``quantized=False`` (default) is the
+exact fp32 engine, bit-identical to the pre-§10 behavior, and remains the
+parity oracle.
 """
 from __future__ import annotations
 
@@ -47,7 +56,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import distances
+from repro.core import distances, quantize
 from repro.core.graph import NULL, GraphState
 from repro.core.params import SearchParams
 from repro.kernels import ops as kernel_ops
@@ -115,10 +124,24 @@ def _score_block(
     ids: jax.Array,        # i32[B, C]
     valid: jax.Array,      # bool[B, C]
     use_pallas: bool,
+    quantized: bool = False,
 ) -> jax.Array:
     """f32[B, C] scores of each query against its candidate block (invalid
     lanes → -inf). The Pallas path drives the table-row DMA straight from the
-    candidate ids (no [B, C, d] HBM intermediate)."""
+    candidate ids (no [B, C, d] HBM intermediate). ``quantized`` scores the
+    block on int8 codes (asymmetric distance, DESIGN.md §10) — ~4x fewer
+    hot-loop bytes per candidate, with the exact fp32 table untouched."""
+    if quantized:
+        if use_pallas:
+            masked = jnp.where(valid, ids, NULL).astype(jnp.int32)
+            return kernel_ops.gather_scores_q8(
+                state.codes, state.scales, masked, queries, metric=state.metric
+            )
+        safe = jnp.where(valid, ids, 0)
+        s = jax.vmap(
+            lambda c, sc, q: quantize.scores_vs_codes(c, sc, q, state.metric)
+        )(state.codes[safe], state.scales[safe], queries)
+        return jnp.where(valid, s, NEG_INF)
     if use_pallas:
         masked = jnp.where(valid, ids, NULL).astype(jnp.int32)
         return kernel_ops.gather_scores(
@@ -173,7 +196,9 @@ def beam_search(
     eq = (start_ids[:, :, None] == start_ids[:, None, :])
     eq = eq & sv[:, :, None] & sv[:, None, :]
     sv = sv & (jnp.argmax(eq, axis=2) == jnp.arange(S)[None, :])
-    seed_scores = _score_block(state, queries, start_ids, sv, use_pallas)
+    seed_scores = _score_block(
+        state, queries, start_ids, sv, use_pallas, params.quantized
+    )
     bs = _BeamState(
         pool_ids=jnp.full((B, K), NULL, jnp.int32),
         pool_scores=jnp.full((B, K), NEG_INF, jnp.float32),
@@ -220,7 +245,9 @@ def beam_search(
             )
             nv = nv & ~dup
 
-        nscores = _score_block(state, queries, nbrs, nv, use_pallas)
+        nscores = _score_block(
+            state, queries, nbrs, nv, use_pallas, params.quantized
+        )
         b = b._replace(
             pool_expanded=expanded,
             n_expanded=b.n_expanded + jnp.sum(valid_w, axis=1, dtype=jnp.int32),
@@ -231,10 +258,35 @@ def beam_search(
     bs = jax.lax.while_loop(cond, body, bs)
 
     if raw:
+        # raw pools feed insert/repair internals, which re-score exact
+        # vectors inside SELECT-NEIGHBORS — no re-rank here (on the
+        # quantized walk the raw pool scores are the compressed scores)
         return SearchResult(bs.pool_ids, bs.pool_scores, bs.n_expanded)
     ids = bs.pool_ids
     ok = (ids != NULL) & state.alive[jnp.maximum(ids, 0)]
     rep_scores = jnp.where(ok, bs.pool_scores, NEG_INF)
+
+    if params.quantized and params.rerank_depth > 0:
+        # ---- stage 2 (DESIGN.md §10): one exact fp32 pass over the top-r
+        # alive pool entries by compressed score; the reported top-k comes
+        # from those r candidates only, with exact scores
+        r = min(params.rerank_depth, K)
+        top_comp, idx = jax.lax.top_k(rep_scores, r)
+        cand = jnp.take_along_axis(ids, idx, axis=1)
+        cv = top_comp > NEG_INF
+        exact = _score_block(state, queries, cand, cv, use_pallas)
+        exact = jnp.where(cv, exact, NEG_INF)
+        if r < K:
+            exact = jnp.pad(exact, ((0, 0), (0, K - r)),
+                            constant_values=NEG_INF)
+            cand = jnp.pad(cand, ((0, 0), (0, K - r)), constant_values=NULL)
+        top_scores, idx2 = jax.lax.top_k(exact, K)
+        rep_ids = jnp.where(
+            top_scores > NEG_INF,
+            jnp.take_along_axis(cand, idx2, axis=1), NULL,
+        )
+        return SearchResult(rep_ids, top_scores, bs.n_expanded)
+
     top_scores, idx = jax.lax.top_k(rep_scores, K)
     rep_ids = jnp.where(
         top_scores > NEG_INF, jnp.take_along_axis(ids, idx, axis=1), NULL

@@ -51,7 +51,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import metrics, rebuild
+from repro.core import metrics, quantize, rebuild
 from repro.core import delete as delete_mod
 from repro.core import ops as ops_mod
 from repro.core.graph import (
@@ -195,7 +195,11 @@ def params_fingerprint(params: IndexParams, strategy: str) -> str:
     and ``Session.restore`` range-checks it instead of fingerprinting it.
     Everything else — geometry (dim/degrees/metric), search knobs, and the
     maintenance policy including ``growth_factor``/``max_capacity`` — must
-    match exactly.
+    match exactly. The vector-code scheme (DESIGN.md §10) is part of the
+    geometry: a checkpoint's int8 codes are only meaningful to an engine
+    that scores them under the same quantization scheme, so
+    ``quantize.VECTOR_CODE_SCHEME`` is folded in and a scheme change
+    invalidates old checkpoints instead of silently mis-scoring them.
     """
     def enc(obj):
         if dataclasses.is_dataclass(obj):
@@ -204,7 +208,8 @@ def params_fingerprint(params: IndexParams, strategy: str) -> str:
         return obj
     d = enc(params)
     d.pop("capacity", None)
-    return json.dumps({"params": d, "strategy": strategy},
+    return json.dumps({"params": d, "strategy": strategy,
+                       "vector_codes": quantize.VECTOR_CODE_SCHEME},
                       sort_keys=True)
 
 

@@ -273,6 +273,7 @@ def init_specs_tree(dp: DistParams) -> GraphState:
     z = lambda *s: np.zeros(s, np.int8)  # noqa: E731 — structure only
     return GraphState(
         vectors=z(1, cap, dim), sqnorms=z(1, cap),
+        codes=z(1, cap, dim), scales=z(1, cap),
         adj=z(1, cap, dp.index.d_out), radj=z(1, cap, dp.index.eff_d_in),
         alive=z(1, cap), present=z(1, cap), size=z(1),
         capacity=cap, dim=dim, d_out=dp.index.d_out,

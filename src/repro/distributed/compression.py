@@ -17,6 +17,16 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+# The *deterministic* per-row quantizer used for the index's vector codes
+# (DESIGN.md §10) lives in core (no key — the transactional invariant
+# ``codes == quantize_rows(vectors)`` must be exactly re-checkable);
+# re-exported here so both int8 schemes are visible from one module.
+from repro.core.quantize import (  # noqa: F401
+    VECTOR_CODE_SCHEME,
+    dequantize_rows,
+    quantize_rows,
+)
+
 
 def quantize_int8(x: jax.Array, key: jax.Array) -> tuple[jax.Array, jax.Array]:
     """Stochastic-rounding int8 quantization. Returns (q, scale)."""

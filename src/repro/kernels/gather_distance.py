@@ -61,3 +61,53 @@ def gather_scores_pallas(
         out_shape=jax.ShapeDtypeStruct((B, C), jnp.float32),
         interpret=interpret,
     )(ids, table, tsq, q)
+
+
+# ---------------------------------------------------------------------------
+# Compressed variant — int8 codes + per-row scale, dequantized in-register
+# (DESIGN.md §10). Same scalar-prefetch DMA pattern, but each gathered row
+# moves d bytes instead of 4·d: the beam expansion's HBM traffic drops ~4x
+# at identical grid/BlockSpec structure.
+# ---------------------------------------------------------------------------
+
+def _gdq_kernel(ids_ref, c_ref, s_ref, q_ref, o_ref, *, metric: str):
+    del ids_ref  # consumed by the index_maps
+    row = c_ref[0, :].astype(jnp.float32)
+    qv = q_ref[0, :].astype(jnp.float32)
+    s = s_ref[0]
+    dot = jnp.sum(row * qv)
+    if metric == "l2":
+        # asymmetric l2 on the dequantized row x̂ = s·codes:
+        #   2<x̂,q> − ||x̂||² = s·(2·<codes,q> − s·Σcodes²)
+        o_ref[0, 0] = s * (2.0 * dot - s * jnp.sum(row * row))
+    else:
+        o_ref[0, 0] = s * dot
+
+
+def gather_scores_q8_pallas(
+    codes: jax.Array,   # i8[N, d]  (d padded to 128 lanes by ops.py)
+    scales: jax.Array,  # f32[N]
+    ids: jax.Array,     # i32[B, C]  pre-clamped to [0, N)
+    q: jax.Array,       # [B, d] uncompressed queries
+    *,
+    metric: str = "l2",
+    interpret: bool = True,
+) -> jax.Array:
+    B, C = ids.shape
+    d = codes.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, C),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda b, c, ids_ref: (ids_ref[b, c], 0)),
+            pl.BlockSpec((1,), lambda b, c, ids_ref: (ids_ref[b, c],)),
+            pl.BlockSpec((1, d), lambda b, c, ids_ref: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda b, c, ids_ref: (b, c)),
+    )
+    return pl.pallas_call(
+        functools.partial(_gdq_kernel, metric=metric),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, C), jnp.float32),
+        interpret=interpret,
+    )(ids, codes, scales, q)

@@ -18,6 +18,9 @@ audited per kernel and pinned by the {2^k, 2^k+1, 3·2^k} sweep in
   · ``gather_scores`` — ids are validated against the true M here and
     clamped before the kernel; the row BlockSpec indexes exact rows, so no
     tail row is ever DMA'd, and invalid lanes resolve to -inf outside.
+  · ``gather_scores_q8`` — identical id-validation/clamp/-inf contract as
+    ``gather_scores``, over int8 codes + per-row scales (DESIGN.md §10);
+    the dim pad value 0 is inert in both the dot and the Σcodes² term.
 """
 from __future__ import annotations
 
@@ -138,6 +141,32 @@ def gather_scores(
     qp = _pad_to(q, 1, 128)
     s = _gd.gather_scores_pallas(
         tp, tsq.astype(jnp.float32), safe, qp, metric=metric,
+        interpret=interpret,
+    )
+    return jnp.where(valid, s, NEG_INF)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "interpret"))
+def gather_scores_q8(
+    codes: jax.Array,   # i8[N, d] per-row int8 vector codes
+    scales: jax.Array,  # f32[N]   per-row dequant scales
+    ids: jax.Array,     # i32[B, C] candidate ids (any value; validated here)
+    q: jax.Array,       # f32[B, d] uncompressed queries
+    *,
+    metric: str = "l2",
+    interpret: bool | None = None,
+) -> jax.Array:
+    """[B, C] fused gather+asymmetric-distance over int8 codes; invalid ids
+    (< 0 or >= N) → -inf. Same contract as ``gather_scores`` with the fp32
+    row read replaced by a d-byte code row dequantized in-register."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    N = codes.shape[0]
+    valid = (ids >= 0) & (ids < N)
+    safe = jnp.where(valid, ids, 0).astype(jnp.int32)
+    cp = _pad_to(codes, 1, 128, value=0)
+    qp = _pad_to(q, 1, 128)
+    s = _gd.gather_scores_q8_pallas(
+        cp, scales.astype(jnp.float32), safe, qp, metric=metric,
         interpret=interpret,
     )
     return jnp.where(valid, s, NEG_INF)

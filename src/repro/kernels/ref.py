@@ -48,3 +48,20 @@ def ref_gather_scores(
     if metric == "l2":
         return 2.0 * dots - tsq[ids].astype(jnp.float32)
     return dots
+
+
+def ref_gather_scores_q8(
+    codes: jax.Array,   # i8[N, d] per-row int8 vector codes
+    scales: jax.Array,  # f32[N]   per-row dequant scales
+    ids: jax.Array,     # i32[B, C] candidate ids (assumed in-range)
+    q: jax.Array,       # [B, d] uncompressed queries
+    metric: str = "l2",
+) -> jax.Array:
+    """[B, C] asymmetric scores of each query vs its gathered int8 rows:
+    l2 → s·(2·<codes,q> − s·Σcodes²), ip/cos → s·<codes,q> (DESIGN.md §10)."""
+    rows = codes[ids].astype(jnp.float32)   # [B, C, d]
+    s = scales[ids].astype(jnp.float32)     # [B, C]
+    dots = jnp.einsum("bcd,bd->bc", rows, q.astype(jnp.float32))
+    if metric == "l2":
+        return s * (2.0 * dots - s * jnp.sum(rows * rows, axis=-1))
+    return s * dots

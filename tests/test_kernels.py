@@ -4,9 +4,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core.quantize import quantize_rows
 from repro.kernels import ops
 from repro.kernels.ref import (
     ref_gather_scores,
+    ref_gather_scores_q8,
     ref_score_matrix,
     ref_score_topk,
 )
@@ -74,6 +76,47 @@ def test_gather_scores(shape, metric):
     np.testing.assert_allclose(g[m], w[m], rtol=1e-4, atol=1e-3)
 
 
+@pytest.mark.parametrize("shape", SHAPES[:3])
+@pytest.mark.parametrize("metric", METRICS)
+def test_gather_scores_q8(shape, metric):
+    """Compressed gather kernel vs its numpy-style oracle, including the
+    invalid-id (-1 and >= M) → -inf contract shared with gather_scores."""
+    M, B, d, _ = shape
+    C = 24
+    rng = np.random.default_rng(hash((shape, metric, 3)) % 2**31)
+    x = jnp.asarray(rng.normal(size=(M, d)).astype(np.float32))
+    q = jnp.asarray(rng.normal(size=(B, d)).astype(np.float32))
+    codes, scales = quantize_rows(x)
+    ids = jnp.asarray(rng.integers(-1, M, size=(B, C)).astype(np.int32))
+    got = ops.gather_scores_q8(codes, scales, ids, q, metric=metric)
+    want = ref_gather_scores_q8(codes, scales, jnp.maximum(ids, 0), q, metric)
+    want = jnp.where(ids >= 0, want, -jnp.inf)
+    g, w = np.asarray(got), np.asarray(want)
+    assert ((g == -np.inf) == (w == -np.inf)).all()
+    m = np.isfinite(g)
+    np.testing.assert_allclose(g[m], w[m], rtol=1e-4, atol=1e-3)
+
+
+def test_gather_scores_q8_tracks_exact_scores():
+    """Asymmetric distance on codes ≈ exact distance on the fp32 rows,
+    within the quantization error bound (scale ≤ maxabs/127 per row)."""
+    rng = np.random.default_rng(5)
+    M, B, d, C = 300, 7, 48, 12
+    x = jnp.asarray(rng.normal(size=(M, d)).astype(np.float32))
+    q = jnp.asarray(rng.normal(size=(B, d)).astype(np.float32))
+    xsq = jnp.sum(x * x, 1)
+    codes, scales = quantize_rows(x)
+    ids = jnp.asarray(rng.integers(0, M, size=(B, C)).astype(np.int32))
+    approx = np.asarray(ops.gather_scores_q8(codes, scales, ids, q))
+    exact = np.asarray(ops.gather_scores(x, xsq, ids, q))
+    # per-element dequant error ≤ scale/2 → score error is O(scale·(|q|₁+|x|₁))
+    bound = np.asarray(scales)[np.asarray(ids)] * (
+        2.0 * np.abs(np.asarray(q)).sum(1)[:, None]
+        + np.abs(np.asarray(x)).sum(1)[np.asarray(ids)]
+    )
+    assert (np.abs(approx - exact) <= 0.5 * bound + 1e-4).all()
+
+
 def test_topk_all_negative_ip_padding():
     """Padded zero rows must not displace negative true scores (regression)."""
     rng = np.random.default_rng(3)
@@ -119,6 +162,18 @@ def test_capacity_tier_sweep_masks_padded_tails(M):
     want_g = ref_gather_scores(x, xsq, jnp.clip(ids, 0, M - 1), q, "l2")
     want_g = jnp.where((ids >= 0) & (ids < M), want_g, -jnp.inf)
     g, w = np.asarray(got_g), np.asarray(want_g)
+    assert ((g == -np.inf) == (w == -np.inf)).all()
+    m = np.isfinite(g)
+    np.testing.assert_allclose(g[m], w[m], rtol=1e-4, atol=1e-3)
+
+    # the compressed gather honors the same tier-boundary contract: id M-1
+    # reads the last real row, ids M and -1 mask to -inf, no padded tail
+    codes, scales = quantize_rows(x)
+    got_q = ops.gather_scores_q8(codes, scales, ids, q)
+    want_q = ref_gather_scores_q8(
+        codes, scales, jnp.clip(ids, 0, M - 1), q, "l2")
+    want_q = jnp.where((ids >= 0) & (ids < M), want_q, -jnp.inf)
+    g, w = np.asarray(got_q), np.asarray(want_q)
     assert ((g == -np.inf) == (w == -np.inf)).all()
     m = np.isfinite(g)
     np.testing.assert_allclose(g[m], w[m], rtol=1e-4, atol=1e-3)

@@ -1,0 +1,214 @@
+"""Compressed scoring (DESIGN.md §10) — transactional int8 codes + two-stage
+search.
+
+The invariant under test is I5: for every *present* slot,
+``(codes, scales) == quantize_rows(vectors)`` exactly, and freed slots hold
+the zero encoding — maintained transactionally by every mutator (insert,
+delete, consolidate, grow, bulk build) and therefore checkable at any flush
+boundary of any stream. Plus the two-stage search semantics: quantized walk,
+exact fp32 re-rank, bit-exact checkpoint round-trip.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    IndexParams,
+    MaintenanceParams,
+    SearchParams,
+    Session,
+    metrics,
+    rebuild,
+    search,
+)
+from repro.core.graph import NULL, grow_state
+from repro.core.quantize import dequantize_rows, quantize_rows
+
+
+def _assert_codes_consistent(state):
+    """Invariant I5, checked bit-exactly from the host."""
+    codes, scales = quantize_rows(state.vectors)
+    present = np.asarray(state.present)
+    got_c, got_s = np.asarray(state.codes), np.asarray(state.scales)
+    want_c, want_s = np.asarray(codes), np.asarray(scales)
+    np.testing.assert_array_equal(got_c[present], want_c[present])
+    np.testing.assert_array_equal(got_s[present], want_s[present])
+    assert (got_c[~present] == 0).all(), "freed slot kept stale codes"
+    assert (got_s[~present] == 0.0).all(), "freed slot kept a stale scale"
+
+
+def _params(capacity=128, dim=8, strategy="mask", **maint):
+    return IndexParams(
+        capacity=capacity, dim=dim, d_out=6,
+        search=SearchParams(pool_size=16, max_steps=48, num_starts=2,
+                            use_pallas=False),
+        maintenance=MaintenanceParams(
+            strategy=strategy, insert_chunk=16, delete_chunk=16, **maint),
+    )
+
+
+@pytest.mark.parametrize("strategy", ["mask", "global"])
+def test_mixed_stream_codes_consistent(strategy):
+    """Seeded insert/delete/consolidate/grow stream: I5 holds at every flush
+    boundary, through tombstone scrubbing, slot reuse, and capacity growth."""
+    dim = 8
+    p = _params(
+        capacity=64, dim=dim, strategy=strategy,
+        consolidate_threshold=0.3, consolidate_strategy="global",
+        max_capacity=512,
+    )
+    sess = Session(p, seed=3)
+    rng = np.random.default_rng(17)
+    alive = []
+    for rnd in range(12):
+        ids = sess.insert(rng.normal(size=(24, dim)).astype(np.float32))
+        alive.extend(int(v) for v in np.asarray(ids.result()) if v != NULL)
+        n_del = min(8, len(alive) - 4)
+        pick = rng.choice(len(alive), size=n_del, replace=False)
+        victims = np.asarray([alive[i] for i in pick], np.int32)
+        for i in sorted(pick.tolist(), reverse=True):
+            alive.pop(i)
+        sess.delete(victims)
+        sess.flush()
+        _assert_codes_consistent(sess.state)   # every flush boundary
+    assert sess.state.capacity > 64, "stream never exercised growth"
+    if strategy == "mask":
+        assert sess.timers.n_consolidations > 0, \
+            "stream never exercised consolidation"
+    # an explicit consolidation pass scrubs the remaining tombstones
+    sess.consolidate()
+    sess.flush()
+    _assert_codes_consistent(sess.state)
+
+
+def test_bulk_build_and_grow_pad_codes():
+    """bulk_knn_build quantizes on construction; grow_state pads the new
+    tier with the zero encoding on both capacity-axis layouts."""
+    rng = np.random.default_rng(0)
+    p = _params(capacity=48, dim=8)
+    X = jnp.asarray(rng.normal(size=(48, 8)).astype(np.float32))
+    valid = jnp.arange(48) < 40
+    state = rebuild.bulk_knn_build(X, valid, p)
+    _assert_codes_consistent(state)
+
+    grown = grow_state(state, 97)
+    assert grown.codes.shape == (97, 8) and grown.scales.shape == (97,)
+    np.testing.assert_array_equal(
+        np.asarray(grown.codes[:48]), np.asarray(state.codes))
+    assert (np.asarray(grown.codes[48:]) == 0).all()
+    assert (np.asarray(grown.scales[48:]) == 0.0).all()
+    _assert_codes_consistent(grown)
+
+    # stacked per-shard layout (ShardedSession): capacity axis is 1
+    stacked = jax.tree.map(lambda x: jnp.stack([x, x]), state)
+    stacked = dataclasses.replace(stacked)  # same meta, stacked data
+    grown2 = grow_state(stacked, 97, axis=1)
+    assert grown2.codes.shape == (2, 97, 8)
+    assert grown2.scales.shape == (2, 97)
+    np.testing.assert_array_equal(
+        np.asarray(grown2.codes[:, :48]), np.asarray(stacked.codes))
+    assert (np.asarray(grown2.codes[:, 48:]) == 0).all()
+
+
+def test_quantized_checkpoint_roundtrip_bitexact(tmp_path):
+    """save → restore → search on the quantized path is bit-exact: codes,
+    scales, and the reported (ids, scores) of a quantized+rerank query."""
+    p = dataclasses.replace(
+        _params(capacity=128, dim=8),
+        search=SearchParams(pool_size=16, max_steps=48, num_starts=2,
+                            use_pallas=False, quantized=True,
+                            rerank_depth=16),
+    )
+    rng = np.random.default_rng(5)
+    X = rng.normal(size=(90, 8)).astype(np.float32)
+    Q = rng.normal(size=(12, 8)).astype(np.float32)
+
+    sess = Session(p, seed=9, checkpoint_dir=tmp_path)
+    ids = np.asarray(sess.insert(X).result())
+    sess.delete(ids[:20])
+    sess.flush()
+    sess.save(step=1)
+    a_ids, a_scores = sess.query(Q, k=10).result()
+
+    other = Session(p, seed=9, checkpoint_dir=tmp_path)
+    assert other.restore() == 1
+    np.testing.assert_array_equal(
+        np.asarray(sess.state.codes), np.asarray(other.state.codes))
+    np.testing.assert_array_equal(
+        np.asarray(sess.state.scales), np.asarray(other.state.scales))
+    _assert_codes_consistent(other.state)
+    b_ids, b_scores = other.query(Q, k=10).result()
+    np.testing.assert_array_equal(np.asarray(a_ids), np.asarray(b_ids))
+    np.testing.assert_array_equal(np.asarray(a_scores), np.asarray(b_scores))
+
+
+def test_rerank_reports_exact_scores():
+    """Stage-2 semantics: the reported scores of the quantized+rerank path
+    are the EXACT fp32 similarities of the reported ids (not compressed)."""
+    from repro.core import distances
+
+    rng = np.random.default_rng(1)
+    n, dim = 200, 12
+    p = _params(capacity=n, dim=dim)
+    X = jnp.asarray(rng.normal(size=(n, dim)).astype(np.float32))
+    state = rebuild.bulk_knn_build(X, jnp.ones((n,), bool), p)
+    Q = jnp.asarray(rng.normal(size=(6, dim)).astype(np.float32))
+    sp = SearchParams(pool_size=16, max_steps=48, num_starts=2,
+                      use_pallas=False, quantized=True, rerank_depth=16)
+    res = search.search_batch(state, Q, jax.random.PRNGKey(2), sp)
+    ids, scores = np.asarray(res.ids), np.asarray(res.scores)
+    for b in range(ids.shape[0]):
+        for j in range(ids.shape[1]):
+            if ids[b, j] == NULL:
+                continue
+            exact = float(distances.scores_vs_rows(
+                state.vectors[ids[b, j]][None],
+                state.sqnorms[ids[b, j]][None],
+                Q[b], state.metric)[0])
+            # jit vs eager accumulation order differs by a few ULP
+            np.testing.assert_allclose(scores[b, j], exact, rtol=1e-4,
+                                       atol=1e-4)
+    # exact scores must be sorted descending per query (post-rerank order)
+    finite = np.where(np.isfinite(scores), scores, -np.inf)
+    assert (np.diff(finite, axis=1) <= 1e-6).all()
+
+
+def test_quantized_rerank_recall_close_to_fp32():
+    """The acceptance frontier in miniature: quantized walk + full-pool
+    rerank holds recall@10 within 0.02 of the exact fp32 engine."""
+    rng = np.random.default_rng(8)
+    n, dim = 600, 16
+    p = _params(capacity=n, dim=dim)
+    X = jnp.asarray(rng.normal(size=(n, dim)).astype(np.float32))
+    state = rebuild.bulk_knn_build(X, jnp.ones((n,), bool), p)
+    Q = jnp.asarray(rng.normal(size=(32, dim)).astype(np.float32))
+    key = jax.random.PRNGKey(0)
+    _, true_ids = metrics.brute_force_topk(state, Q, 10)
+
+    sp_fp = SearchParams(pool_size=24, max_steps=72, num_starts=2,
+                         use_pallas=False)
+    sp_q8 = dataclasses.replace(sp_fp, quantized=True, rerank_depth=24)
+    rec_fp = float(metrics.recall_at_k(
+        search.search_batch(state, Q, key, sp_fp).ids[:, :10], true_ids, 10))
+    rec_q8 = float(metrics.recall_at_k(
+        search.search_batch(state, Q, key, sp_q8).ids[:, :10], true_ids, 10))
+    assert rec_q8 >= rec_fp - 0.02, (rec_fp, rec_q8)
+
+
+def test_dequantized_rows_approximate_vectors():
+    """End-to-end storage sanity: dequantize(state.codes) ≈ state.vectors
+    within the per-row bound for every present slot."""
+    rng = np.random.default_rng(13)
+    p = _params(capacity=64, dim=8)
+    sess = Session(p, seed=1)
+    sess.insert(rng.normal(size=(50, 8)).astype(np.float32)).result()
+    sess.flush()
+    st = sess.state
+    present = np.asarray(st.present)
+    err = np.abs(np.asarray(dequantize_rows(st.codes, st.scales))
+                 - np.asarray(st.vectors))[present]
+    bound = np.asarray(st.scales)[present, None] * 0.5 + 1e-7
+    assert (err <= bound).all()
