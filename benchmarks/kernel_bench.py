@@ -22,8 +22,15 @@ Three sections:
     sequential reference appliers, at streaming micro-batch sizes. Results
     land in BENCH_update.json (target: ≥3x on the insert path at batch 64).
 
+  · recovery — the durability tax and the restart story (DESIGN.md §11):
+    journal-on vs journal-off mixed-stream throughput (asserted ≤ 10%
+    overhead at fsync="flush"), replay ops/s, recovery wall-time at three
+    journal depths, and the crash-point matrix re-run end to end. Results
+    land in BENCH_recover.json.
+
 Usage: python benchmarks/kernel_bench.py [--smoke] [--out BENCH_search.json]
                                          [--update-out BENCH_update.json]
+                                         [--recover-out BENCH_recover.json]
 """
 from __future__ import annotations
 
@@ -52,6 +59,7 @@ _ROOT = pathlib.Path(__file__).resolve().parent.parent
 DEFAULT_OUT = _ROOT / "BENCH_search.json"
 DEFAULT_UPDATE_OUT = _ROOT / "BENCH_update.json"
 DEFAULT_STREAM_OUT = _ROOT / "BENCH_stream.json"
+DEFAULT_RECOVER_OUT = _ROOT / "BENCH_recover.json"
 
 
 def _time(f, *args, iters=3):
@@ -970,6 +978,195 @@ def run_growth_stream(smoke: bool = False) -> dict:
     return record
 
 
+def run_recovery(smoke: bool = False) -> dict:
+    """Durability bench (DESIGN.md §11): journal overhead, replay speed,
+    recovery wall-time vs journal depth, and the crash-point matrix.
+
+    The headline number is the journal tax on the mixed-stream hot path —
+    the write-ahead append rides every dispatched op, so it must cost
+    ≤ 10% of plain throughput (asserted). Replay speed and the per-depth
+    recovery wall-times size the restart story; the matrix re-checks that
+    a kill at every registered session crash point recovers bit-exact.
+    """
+    import shutil
+    import tempfile
+
+    from repro.core import IndexParams, MaintenanceParams, SearchParams, \
+        Session
+    from repro.testing import faults
+
+    dim, pool = 16, 16
+    rounds = 6 if smoke else 20
+    ins_b, del_b, q_b = 32, 8, 16
+    cap = 64 + rounds * ins_b
+    params = IndexParams(
+        capacity=cap, dim=dim, d_out=8,
+        search=SearchParams(pool_size=pool, max_steps=3 * pool, num_starts=2),
+        maintenance=MaintenanceParams(
+            strategy="mask", insert_chunk=32, delete_chunk=16,
+            consolidate_threshold=0.3, max_capacity=4 * cap),
+    )
+
+    def drive(sess, save_at=None):
+        t0 = time.perf_counter()
+        for r in range(rounds):
+            rng = np.random.default_rng(100 + r)
+            sess.insert(rng.normal(size=(ins_b, dim)).astype(np.float32))
+            sess.delete(rng.integers(0, cap, size=del_b).astype(np.int32))
+            sess.query(rng.normal(size=(q_b, dim)).astype(np.float32), k=10)
+            sess.flush()
+            if save_at is not None and r == save_at:
+                sess.save(r)
+        return time.perf_counter() - t0
+
+    items = rounds * (ins_b + del_b + q_b)
+    drive(Session(params, seed=0))  # compile warmup, untimed
+
+    def best_of(mk_sess, n=5):
+        best = float("inf")
+        for _ in range(n):
+            sess, cleanup = mk_sess()
+            best = min(best, drive(sess))
+            cleanup()
+        return best
+
+    def plain():
+        return Session(params, seed=0), (lambda: None)
+
+    def journaled(fsync):
+        d = tempfile.mkdtemp(prefix="bench_jrnl_")
+        s = Session(params, seed=0, checkpoint_dir=d, journal_fsync=fsync)
+        return s, (lambda: shutil.rmtree(d, ignore_errors=True))
+
+    t_plain = best_of(plain)
+    t_flush = best_of(lambda: journaled("flush"))
+    t_always = best_of(lambda: journaled("always"))
+    plain_ips = items / t_plain
+    flush_ips = items / t_flush
+    overhead = 1.0 - flush_ips / plain_ips
+    assert flush_ips >= 0.9 * plain_ips, (
+        f"journal (fsync=flush) costs {overhead:.1%} of mixed-stream "
+        f"throughput — the ≤10% budget is blown")
+
+    # replay speed + recovery wall-time at three journal depths: the whole
+    # stream, the post-midpoint-save suffix, and the post-final-save residue
+    depths = {}
+    for name, save_at in (("full_stream", None),
+                          ("half_stream", rounds // 2 - 1),
+                          ("tail_only", rounds - 1)):
+        d = tempfile.mkdtemp(prefix="bench_recover_")
+        drive(Session(params, seed=0, checkpoint_dir=d), save_at=save_at)
+        t0 = time.perf_counter()
+        rec = Session.recover(d, params, seed=0)
+        wall = time.perf_counter() - t0
+        info = rec.recovery_info
+        depths[name] = {
+            "n_replayed": info["n_replayed"],
+            "replay_s": info["replay_s"],
+            "recover_wall_s": wall,
+            "replay_ops_per_s": info["n_replayed"] / max(info["replay_s"],
+                                                         1e-9),
+        }
+        shutil.rmtree(d, ignore_errors=True)
+
+    # crash matrix: kill at the middle occurrence of every registered
+    # session crash point over a small deterministic stream; recovery must
+    # land bit-identical to the uninterrupted control
+    mcap, mdim, n_ops = 96, 8, 60
+    mparams = IndexParams(
+        capacity=mcap, dim=mdim, d_out=6,
+        search=SearchParams(pool_size=16, max_steps=48, num_starts=2),
+        maintenance=MaintenanceParams(
+            strategy="mask", insert_chunk=16, delete_chunk=16,
+            consolidate_threshold=0.3, max_capacity=4 * mcap),
+    )
+
+    def m_run(sess, start=0):
+        def events(t):
+            if (t + 1) % 7 == 0:
+                sess.flush()
+            if (t + 1) % 20 == 0:
+                sess.save(t + 1)
+        if start > 0:
+            events(start - 1)
+        for t in range(start, n_ops):
+            kind = "iidiq"[t % 5]
+            rng = np.random.default_rng(1000 + t)
+            if kind == "i":
+                sess.insert(rng.normal(size=(5, mdim)).astype(np.float32))
+            elif kind == "d":
+                sess.delete(rng.integers(0, mcap, size=3).astype(np.int32))
+            else:
+                sess.query(rng.normal(size=(2, mdim)).astype(np.float32))
+            events(t)
+        sess.flush()
+
+    def m_summary(sess):
+        st = sess.state
+        return (np.asarray(st.adj), np.asarray(st.vectors),
+                np.asarray(st.alive), np.asarray(st.present),
+                st.capacity, sess._op_counter)
+
+    probe = faults.FaultPlan()
+    with tempfile.TemporaryDirectory() as d, faults.inject(probe):
+        ctrl = Session(mparams, seed=3, checkpoint_dir=d)
+        m_run(ctrl)
+        want = m_summary(ctrl)
+        del ctrl
+    matrix = {}
+    for point in faults.SESSION_CRASH_POINTS:
+        n_hits = probe.hits.get(point, 0)
+        if n_hits == 0:
+            matrix[point] = None  # the stream never reaches this site
+            continue
+        d = tempfile.mkdtemp(prefix="bench_crash_")
+        try:
+            plan = faults.crash_once(point, hit=(n_hits + 1) // 2)
+            sess = Session(mparams, seed=3, checkpoint_dir=d)
+            try:
+                with faults.inject(plan):
+                    m_run(sess)
+                matrix[point] = None  # armed hit never fired (unexpected)
+                continue
+            except faults.SimulatedCrash:
+                pass
+            del sess
+            rec = Session.recover(d, mparams, seed=3)
+            m_run(rec, start=rec._op_counter)
+            got = m_summary(rec)
+            matrix[point] = all(
+                np.array_equal(g, w) for g, w in zip(got, want))
+        finally:
+            shutil.rmtree(d, ignore_errors=True)
+    assert all(ok for ok in matrix.values() if ok is not None), matrix
+    assert any(ok for ok in matrix.values()), "matrix never crashed at all"
+
+    record = {
+        "config": {
+            "dim": dim, "pool_size": pool, "rounds": rounds,
+            "capacity": cap, "items_per_run": items,
+            "mix": f"per round: insert {ins_b} / delete {del_b} / "
+                   f"query {q_b}, one flush",
+            "smoke": smoke, "backend": jax.default_backend(),
+        },
+        "journal_overhead": {
+            "plain_items_per_s": plain_ips,
+            "journal_flush_items_per_s": flush_ips,
+            "journal_always_items_per_s": items / t_always,
+            "overhead_fraction_fsync_flush": overhead,
+            "budget": 0.10,
+        },
+        "recovery_depths": depths,
+        "crash_matrix": matrix,
+    }
+    print(f"recovery: plain={plain_ips:.0f} items/s "
+          f"journaled(flush)={flush_ips:.0f} ({overhead:+.1%} overhead, "
+          f"budget 10%) replay={depths['full_stream']['replay_ops_per_s']:.0f} "
+          f"ops/s matrix={sum(bool(v) for v in matrix.values())}"
+          f"/{sum(v is not None for v in matrix.values())} bit-exact")
+    return record
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
@@ -982,6 +1179,9 @@ def main(argv=None):
     ap.add_argument("--stream-out", type=pathlib.Path,
                     default=DEFAULT_STREAM_OUT,
                     help="where to write the mixed-stream session record")
+    ap.add_argument("--recover-out", type=pathlib.Path,
+                    default=DEFAULT_RECOVER_OUT,
+                    help="where to write the durability/recovery record")
     args = ap.parse_args(argv)
     kernel_rows = run(SMOKE_SHAPES if args.smoke else SHAPES)
     record = run_search(smoke=args.smoke)
@@ -1000,6 +1200,10 @@ def main(argv=None):
     args.stream_out.parent.mkdir(parents=True, exist_ok=True)
     args.stream_out.write_text(json.dumps(stream_record, indent=2) + "\n")
     print(f"wrote {args.stream_out}")
+    recover_record = run_recovery(smoke=args.smoke)
+    args.recover_out.parent.mkdir(parents=True, exist_ok=True)
+    args.recover_out.write_text(json.dumps(recover_record, indent=2) + "\n")
+    print(f"wrote {args.recover_out}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,226 @@
+"""Write-ahead op journal — the redo log between checkpoints (DESIGN.md §11).
+
+Checkpoints (manager.py) bound recovery *state*; the journal bounds recovery
+*loss*: every op the session acknowledges is appended here before device
+dispatch, so a crash loses at most the ops whose records were not yet
+durable under the configured fsync policy. Recovery = newest complete
+checkpoint + deterministic replay of the journaled suffix (bit-exact because
+op keys are a pure function of logical stream position — DESIGN.md §7/§8).
+
+Record format (little-endian)::
+
+    u32 MAGIC | u32 body_len | u32 crc32(body) | body
+    body = u32 header_len | header JSON | payload f32 bytes | ids i32 bytes
+
+The header carries ``code`` (OP_*/JR_*), ``seq`` (op counter at append),
+``cseq`` (consolidate counter), free-form ``aux`` (e.g. the delete chunk
+width — delete results legitimately depend on it), and the array shapes.
+Self-delimiting + per-record CRC means a torn tail (partial write at the
+kill point) or bit rot is detected at scan; everything from the first bad
+byte on is dropped — redo-log prefix semantics, exactly what a write-ahead
+discipline guarantees.
+
+fsync policy (``"always" | "flush" | "never"``): ``"always"`` flushes and
+fsyncs per record (max durability, max cost); ``"flush"`` — the default —
+buffers appends and makes them durable when the session syncs
+(``Session.flush`` / checkpoint save): a crash then loses at most the ops
+since the last flush, which is also the session's acknowledgement barrier,
+so nothing acknowledged is ever lost; ``"never"`` flushes the userspace
+buffer at sync but leaves persistence to the OS.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import struct
+import zlib
+from pathlib import Path
+from typing import Any
+
+import numpy as np
+
+MAGIC = 0x4C4E524A  # "JRNL" little-endian
+_REC = struct.Struct("<III")   # magic, body_len, crc32
+_U32 = struct.Struct("<I")
+# A body larger than this is framing corruption, not a real record (largest
+# legitimate record is one op chunk of f32 rows — far below this).
+_MAX_BODY = 1 << 28
+
+FSYNC_POLICIES = ("always", "flush", "never")
+
+
+@dataclasses.dataclass(frozen=True)
+class JournalRecord:
+    """One decoded journal record."""
+
+    code: int
+    seq: int            # session op counter at append time
+    cseq: int           # session consolidate counter at append time
+    aux: dict[str, Any]
+    payload: np.ndarray | None  # f32[n, dim] (query/insert rows)
+    ids: np.ndarray | None      # i32[n] (delete targets)
+
+
+def _encode(code: int, seq: int, cseq: int,
+            payload: np.ndarray | None, ids: np.ndarray | None,
+            aux: dict[str, Any] | None) -> bytes:
+    header: dict[str, Any] = {"code": int(code), "seq": int(seq),
+                              "cseq": int(cseq), "aux": aux or {}}
+    p_bytes = b""
+    if payload is not None:
+        p = np.ascontiguousarray(payload, dtype=np.float32)
+        header["p_shape"] = list(p.shape)
+        p_bytes = p.tobytes()
+    i_bytes = b""
+    if ids is not None:
+        i = np.ascontiguousarray(ids, dtype=np.int32)
+        header["i_shape"] = list(i.shape)
+        i_bytes = i.tobytes()
+    h = json.dumps(header, separators=(",", ":")).encode()
+    body = _U32.pack(len(h)) + h + p_bytes + i_bytes
+    return _REC.pack(MAGIC, len(body), zlib.crc32(body)) + body
+
+
+def _decode_body(body: bytes) -> JournalRecord:
+    (hlen,) = _U32.unpack_from(body, 0)
+    off = _U32.size
+    header = json.loads(body[off:off + hlen].decode())
+    off += hlen
+    payload = ids = None
+    if "p_shape" in header:
+        shape = tuple(header["p_shape"])
+        n = int(np.prod(shape, dtype=np.int64)) * 4
+        payload = np.frombuffer(body[off:off + n], np.float32).reshape(shape)
+        off += n
+    if "i_shape" in header:
+        shape = tuple(header["i_shape"])
+        n = int(np.prod(shape, dtype=np.int64)) * 4
+        ids = np.frombuffer(body[off:off + n], np.int32).reshape(shape)
+        off += n
+    if off != len(body):
+        raise ValueError("journal body length mismatch")
+    return JournalRecord(code=header["code"], seq=header["seq"],
+                         cseq=header["cseq"], aux=header["aux"],
+                         payload=payload, ids=ids)
+
+
+def scan_file(path: str | Path) -> tuple[list[JournalRecord], int, int]:
+    """Decode the longest valid record prefix of ``path``.
+
+    Returns ``(records, valid_bytes, dropped_bytes)``. Never raises on
+    corruption: a bad magic, an oversized length, a CRC mismatch or a torn
+    final record simply ends the prefix — redo-log semantics. A missing
+    file is an empty journal.
+    """
+    path = Path(path)
+    if not path.exists():
+        return [], 0, 0
+    data = path.read_bytes()
+    records: list[JournalRecord] = []
+    off = 0
+    while off + _REC.size <= len(data):
+        magic, body_len, crc = _REC.unpack_from(data, off)
+        if magic != MAGIC or body_len > _MAX_BODY:
+            break
+        start = off + _REC.size
+        end = start + body_len
+        if end > len(data):
+            break  # torn tail: header landed, body didn't
+        body = data[start:end]
+        if zlib.crc32(body) != crc:
+            break
+        try:
+            records.append(_decode_body(body))
+        except Exception:
+            break
+        off = end
+    return records, off, len(data) - off
+
+
+class OpJournal:
+    """Appendable write-ahead log over one file.
+
+    The constructor opens for append without touching existing bytes —
+    callers decide whether the file is a live tail to extend
+    (``Session.recover`` repairs torn bytes first via :meth:`repair`) or a
+    dead timeline to discard (a *fresh* session calls :meth:`reset`).
+    """
+
+    def __init__(self, path: str | Path, *, fsync: str = "flush"):
+        if fsync not in FSYNC_POLICIES:
+            raise ValueError(
+                f"fsync policy {fsync!r} not in {FSYNC_POLICIES}")
+        self.path = Path(path)
+        self.fsync_policy = fsync
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        self._f = open(self.path, "ab")
+        self.n_appended = 0
+
+    # -- write side ---------------------------------------------------------
+
+    def append(self, code: int, *, seq: int, cseq: int = 0,
+               payload: np.ndarray | None = None,
+               ids: np.ndarray | None = None,
+               aux: dict[str, Any] | None = None) -> None:
+        self._f.write(_encode(code, seq, cseq, payload, ids, aux))
+        # only "always" pays a barrier per record; under "flush"/"never"
+        # bytes may sit in the userspace buffer until sync() — consistent
+        # with the documented loss window (durability is promised at the
+        # ack barrier, not per append), and a partially buffered record at
+        # a kill is exactly the torn-tail case scan_file already drops
+        if self.fsync_policy == "always":
+            self._f.flush()
+            os.fsync(self._f.fileno())
+        self.n_appended += 1
+
+    def sync(self) -> None:
+        """Durability barrier (no-op only under policy ``"never"``)."""
+        self._f.flush()
+        if self.fsync_policy != "never":
+            os.fsync(self._f.fileno())
+
+    def truncate(self) -> None:
+        """Drop every record — called after a checkpoint publishes, which
+        subsumes the journal's whole prefix."""
+        self._f.flush()
+        self._f.truncate(0)
+        self._f.seek(0)
+        os.fsync(self._f.fileno())
+        self.n_appended = 0
+
+    def reset(self, *, meta: dict[str, Any] | None = None) -> None:
+        """Truncate and stamp a fresh JR_META header record.
+
+        The META record pins the session fingerprint so a journal can never
+        be silently replayed into a session with different geometry/policy.
+        """
+        from repro.core import ops as ops_mod
+
+        self.truncate()
+        self.append(ops_mod.JR_META, seq=0, cseq=0, aux=meta or {})
+        self._f.flush()  # resets are rare; keep the META header on disk
+
+    def repair(self) -> tuple[list[JournalRecord], int]:
+        """Scan, physically drop the torn/corrupt tail, return the prefix.
+
+        After this the file ends exactly at the last valid record, so
+        subsequent appends extend a clean prefix. Returns
+        ``(records, dropped_bytes)``.
+        """
+        self._f.flush()
+        records, valid, dropped = scan_file(self.path)
+        if dropped:
+            self._f.truncate(valid)
+            self._f.seek(valid)
+            os.fsync(self._f.fileno())
+        return records, dropped
+
+    def close(self) -> None:
+        try:
+            self._f.close()
+        except Exception:
+            pass
+
+    def __del__(self):  # best effort — tests create many short-lived logs
+        self.close()

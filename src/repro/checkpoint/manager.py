@@ -13,7 +13,11 @@ Guarantees:
   · elastic restore — arrays are saved with GLOBAL shapes; restore reshards
     to whatever mesh/device count the new job runs (device_put with the new
     sharding), so scale-up/scale-down restarts work;
-  · keep-k retention and restore-latest-complete (a crashed write is ignored).
+  · keep-k retention and restore-latest-complete (a crashed write is ignored);
+  · corruption containment — a truncated/garbled manifest or shard raises a
+    typed :class:`CheckpointCorruptError`, and ``restore(None, ...)`` falls
+    back through older complete steps instead of crashing on ``np.load``
+    (DESIGN.md §11: a half-dead checkpoint must degrade recovery, not end it).
 
 For the sharded ANN index the per-shard subgraph arrays restore bit-exact;
 re-sharding to a different shard count triggers the documented re-bulk-link
@@ -24,11 +28,18 @@ from __future__ import annotations
 import json
 import shutil
 import time
+import zlib
 from pathlib import Path
 from typing import Any
 
 import jax
 import numpy as np
+
+from repro.testing import faults
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A step directory exists but cannot be trusted (torn or garbled)."""
 
 
 def _flatten_with_paths(tree: Any):
@@ -40,10 +51,13 @@ def _flatten_with_paths(tree: Any):
 
 
 class CheckpointManager:
-    def __init__(self, directory: str | Path, *, keep: int = 3):
+    def __init__(self, directory: str | Path, *, keep: int = 3,
+                 keep_last: int | None = None):
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
-        self.keep = keep
+        # ``keep_last`` is the retention-GC spelling used in ops configs;
+        # both name the same K (keep_last wins when given).
+        self.keep = keep if keep_last is None else keep_last
 
     # ------------------------------------------------------------------ save
     def save(self, step: int, tree: Any, *, extra: dict | None = None) -> Path:
@@ -56,11 +70,16 @@ class CheckpointManager:
         for i, (k, leaf) in enumerate(zip(keys, leaves)):
             arrays[f"leaf_{i}"] = np.asarray(jax.device_get(leaf))
         np.savez(tmp_dir / "shard_0.npz", **arrays)
+        shard_crc = zlib.crc32((tmp_dir / "shard_0.npz").read_bytes())
+
+        # the classic torn-save window: data written, manifest/publish not
+        faults.crash_point("mid-checkpoint-save")
 
         manifest = {
             "step": step,
             "keys": keys,
             "n_leaves": len(leaves),
+            "shard_crc": {"shard_0.npz": shard_crc},
             "time": time.time(),
             "extra": extra or {},
         }
@@ -93,17 +112,68 @@ class CheckpointManager:
                 out.append(int(p.name.split("_")[-1]))
         return sorted(out)
 
+    def _load_step(self, step: int) -> tuple[dict, Any]:
+        """Read + validate one step dir; CheckpointCorruptError on any rot."""
+        step_dir = self.dir / f"step_{step:012d}"
+        try:
+            manifest = json.loads((step_dir / "manifest.json").read_text())
+        except FileNotFoundError:
+            raise CheckpointCorruptError(f"{step_dir}: no manifest")
+        except (json.JSONDecodeError, UnicodeDecodeError) as e:
+            raise CheckpointCorruptError(f"{step_dir}: bad manifest: {e}")
+        shard = step_dir / "shard_0.npz"
+        want_crc = manifest.get("shard_crc", {}).get("shard_0.npz")
+        try:
+            if want_crc is not None:
+                got_crc = zlib.crc32(shard.read_bytes())
+                if got_crc != want_crc:
+                    raise CheckpointCorruptError(
+                        f"{shard}: crc mismatch "
+                        f"(manifest {want_crc:#x}, file {got_crc:#x})")
+            data = np.load(shard)
+            n = manifest.get("n_leaves")
+            if n is not None and len(data.files) != n:
+                raise CheckpointCorruptError(
+                    f"{shard}: {len(data.files)} arrays, manifest says {n}")
+        except CheckpointCorruptError:
+            raise
+        except FileNotFoundError:
+            raise CheckpointCorruptError(f"{shard}: missing shard")
+        except Exception as e:  # truncated zip, bad npy header, ...
+            raise CheckpointCorruptError(f"{shard}: unreadable: {e}")
+        return manifest, data
+
     def restore(
         self, step: int | None, like: Any, *, shardings: Any = None
     ) -> tuple[Any, dict]:
         """Restore into the structure of ``like``; optionally device_put with
-        ``shardings`` (elastic re-shard onto the current mesh)."""
-        step = self.latest_step() if step is None else step
-        if step is None:
-            raise FileNotFoundError(f"no checkpoint in {self.dir}")
-        step_dir = self.dir / f"step_{step:012d}"
-        manifest = json.loads((step_dir / "manifest.json").read_text())
-        data = np.load(step_dir / "shard_0.npz")
+        ``shardings`` (elastic re-shard onto the current mesh).
+
+        ``step=None`` restores the newest step that validates, falling back
+        through older complete steps past any corrupt ones (each skip is a
+        durability loss already paid — better a stale index than none). An
+        explicit ``step`` raises :class:`CheckpointCorruptError` instead.
+        """
+        if step is not None:
+            manifest, data = self._load_step(step)
+        else:
+            latest = self.latest_step()
+            if latest is None:
+                raise FileNotFoundError(f"no checkpoint in {self.dir}")
+            candidates = [s for s in sorted(self.all_steps()) if s <= latest]
+            candidates += [s for s in sorted(self.all_steps()) if s > latest]
+            errors: list[str] = []
+            manifest = data = None
+            for s in reversed(candidates):
+                try:
+                    manifest, data = self._load_step(s)
+                    break
+                except CheckpointCorruptError as e:
+                    errors.append(str(e))
+            if manifest is None:
+                raise CheckpointCorruptError(
+                    "every checkpoint step is corrupt:\n  "
+                    + "\n  ".join(errors))
 
         keys, leaves, treedef = _flatten_with_paths(like)
         if keys != manifest["keys"]:

@@ -77,6 +77,20 @@ OP_CONSOLIDATE = 4
 OP_NAMES = {OP_QUERY: "query", OP_INSERT: "insert", OP_DELETE: "delete",
             OP_NOOP: "noop", OP_CONSOLIDATE: "consolidate"}
 
+# Journal-only record codes (checkpoint/journal.py, DESIGN.md §11) — never
+# dispatched to the device. Stream ops journal under their OP_* code above;
+# these mark host-initiated events that replay must reproduce: the journal
+# header, flush points (a consolidation trigger site), and *explicit*
+# consolidate/grow calls (auto-triggered maintenance is NOT journaled — the
+# replayed op stream re-derives it from the same device-exact state).
+JR_META = 16
+JR_FLUSH = 17
+JR_CONSOLIDATE = 18
+JR_GROW = 19
+
+JR_NAMES = {JR_META: "meta", JR_FLUSH: "flush",
+            JR_CONSOLIDATE: "consolidate!", JR_GROW: "grow!"}
+
 # PRNG stream id of the consolidation key chain (DESIGN.md §8): maintenance
 # keys are folded from fold_in(base_key, CONSOLIDATE_KEY_STREAM) + their own
 # counter, NEVER from the op-key chain — auto-triggered consolidations must

@@ -11,8 +11,16 @@ scheme is the simplest one that keeps a checkable transactional invariant:
     quantizer in ``distributed/compression.py`` (which trades determinism
     for unbiasedness; vector codes need the opposite trade so the invariant
     ``codes == quantize(vectors)`` is exactly re-checkable at any barrier);
-  · the zero row maps to (zero codes, zero scale), so freed/never-used slots
-    scrubbed to zero are exactly the quantization of an empty slot;
+  · a *present* all-zero row maps to (zero codes, ``ZERO_ROW_SCALE``) — a
+    positive sentinel scale — while freed/never-used slots are scrubbed to
+    (zero codes, ``0.0``) by the delete/consolidate/grow paths. The v1
+    scheme mapped zero rows to scale 0.0 too, which made a legitimately
+    inserted zero vector byte-identical to a freed slot: invariant I5
+    became unable to distinguish live from dead, and any tooling keying on
+    the scrub pattern would treat the row as deleted. The sentinel breaks
+    the collision without perturbing a single score — the codes are all
+    zero, so every metric's similarity below is exactly 0.0 no matter the
+    scale (ip/cos: scale·0; l2: scale·(0 − scale·0));
   · asymmetric distance against an uncompressed fp32 query ``q``:
         ip/cos:  scale · <codes, q>
         l2:      scale · (2·<codes, q> − scale · Σ codes²)
@@ -22,13 +30,20 @@ scheme is the simplest one that keeps a checkable transactional invariant:
 ``VECTOR_CODE_SCHEME`` names this scheme; it is folded into the checkpoint
 fingerprint so a state whose codes were produced under a different scheme
 can never be silently restored into an engine that scores them differently.
+(The zero-row sentinel bumped it v1 → v2: v1 checkpoints hold codes whose
+zero rows this engine would re-encode differently, failing I5's re-check.)
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-VECTOR_CODE_SCHEME = "int8-rowmax-rne-v1"
+VECTOR_CODE_SCHEME = "int8-rowmax-rne-v2"
+
+# Scale stamped on present all-zero rows: positive (distinguishes them from
+# the freed-slot 0.0 scrub) and the smallest normal f32, so even an
+# (impossible) nonzero code under it would contribute ~nothing to a score.
+ZERO_ROW_SCALE = jnp.float32(2.0 ** -126)
 
 
 def quantize_rows(x: jax.Array) -> tuple[jax.Array, jax.Array]:
@@ -46,7 +61,10 @@ def quantize_rows(x: jax.Array) -> tuple[jax.Array, jax.Array]:
     # inside jit, so spelling it out keeps jit and eager bit-identical —
     # which the re-checkable invariant I5 requires
     scales = maxabs * jnp.float32(1.0 / 127.0)
-    safe = jnp.where(scales > 0, scales, 1.0)
+    # zero rows take the positive sentinel scale so a present zero vector
+    # can never collide with the freed-slot (0 codes, 0.0 scale) scrub
+    scales = jnp.where(maxabs > 0, scales, ZERO_ROW_SCALE)
+    safe = jnp.where(maxabs > 0, scales, 1.0)
     codes = jnp.clip(jnp.round(x32 / safe[..., None]), -127, 127)
     return codes.astype(jnp.int8), scales
 

@@ -39,6 +39,20 @@ count), a device-exact check only on crossing, and grow-vs-consolidate
 arbitration that compacts tombstones before paying a recompile. Inserts a
 full index must refuse (growth disarmed or capped) are *counted* in
 ``PhaseTimers.n_refused`` instead of silently returning NULL ids.
+
+Durability (DESIGN.md §11): a session with a ``checkpoint_dir`` arms a
+write-ahead op journal by default — every acknowledged op appends a
+checksummed record *before* device dispatch, checkpoint ``save`` truncates
+the log, and :meth:`Session.recover` rebuilds a crashed session as
+(newest complete checkpoint) + (deterministic replay of the journaled
+suffix). Replay is bit-exact by construction: op keys are a pure function
+of logical stream position, auto-maintenance decisions are a pure function
+of device-exact state (the conservative hints only gate *when the exact
+check runs*, never its outcome), and the two host-initiated trigger sites
+replay needs — flush boundaries and explicit ``consolidate``/``grow``
+calls — are themselves journaled as marker records. Auto-triggered
+maintenance is deliberately NOT journaled: the replayed op stream
+re-derives it, so it can never double-apply.
 """
 from __future__ import annotations
 
@@ -64,6 +78,7 @@ from repro.core.graph import (
 )
 from repro.core.ops import OP_DELETE, OP_INSERT, OP_QUERY
 from repro.core.params import IndexParams
+from repro.testing import faults
 
 
 @dataclasses.dataclass
@@ -92,6 +107,8 @@ class PhaseTimers:
     n_consolidations: int = 0    # compaction passes run
     n_refused: int = 0           # insert rows refused by a full index (§9)
     n_grows: int = 0             # capacity-tier moves (≙ op-step recompiles)
+    n_rejected: int = 0          # insert rows rejected at dispatch (NaN/Inf)
+    n_retries: int = 0           # transient dispatch failures absorbed (§11)
     n_ops: int = 0
 
     def total(self) -> float:
@@ -128,6 +145,12 @@ class OpHandle:
         self._chunks = chunks  # [(ids_dev[B,K], scores_dev[B,K], n_valid)]
         self._on_done = on_done
         self._done = False
+        # set by Session.insert when dispatch-time validation dropped rows:
+        # positions of the dispatched rows within the caller's batch, so
+        # result() reports NULL at the rejected positions instead of
+        # silently shrinking the id array (DESIGN.md §11)
+        self.row_map: np.ndarray | None = None
+        self.total_rows: int | None = None
 
     def _finish(self) -> None:
         if not self._done:
@@ -144,6 +167,13 @@ class OpHandle:
         consolidate → ids i32[n] of the compacted tombstone slots
         """
         try:
+            if self.op == "insert" and self.total_rows is not None:
+                out = (np.concatenate(
+                    [np.asarray(i)[:nv, 0] for i, _, nv in self._chunks]
+                ) if self.n else np.zeros((0,), np.int32))
+                full = np.full((self.total_rows,), NULL, np.int32)
+                full[self.row_map] = out
+                return full
             if self.op == "delete" or self.n == 0:
                 if self.op == "query":
                     return (np.full((0, self.k), NULL, np.int32),
@@ -233,6 +263,10 @@ class Session:
         checkpoint_dir: str | Path | None = None,
         checkpoint_keep: int = 3,
         unified_dispatch: bool = True,
+        journal: bool | None = None,
+        journal_fsync: str = "flush",
+        flush_retries: int = 3,
+        flush_backoff_s: float = 0.005,
     ):
         known = delete_mod.STRATEGIES + delete_mod.REFERENCE_STRATEGIES
         strategy = strategy if strategy is not None else params.maintenance.strategy
@@ -281,6 +315,22 @@ class Session:
         if checkpoint_dir is not None:
             from repro.checkpoint import CheckpointManager
             self._ckpt = CheckpointManager(checkpoint_dir, keep=checkpoint_keep)
+        # durability layer (DESIGN.md §11): journal=None arms the write-ahead
+        # op log whenever a checkpoint_dir is set. A *constructed* session is
+        # a fresh timeline, so attach resets the log (stamping a META record
+        # with the params fingerprint); Session.recover is the only path
+        # that extends an existing journal. Single writer per directory.
+        self.recovering = False
+        self.recovery_info: dict | None = None
+        self._journal = None
+        self._journal_fsync = journal_fsync
+        self._flush_retries = int(flush_retries)
+        self._flush_backoff_s = float(flush_backoff_s)
+        if journal is None:
+            journal = checkpoint_dir is not None
+        if journal:
+            self._require_ckpt()
+            self._attach_journal(fresh=True)
 
     # -- state ownership ---------------------------------------------------
     @property
@@ -304,6 +354,37 @@ class Session:
         key = jax.random.fold_in(self._base_key, self._op_counter)
         self._op_counter += 1
         return key
+
+    # -- write-ahead journal (DESIGN.md §11) -------------------------------
+    def _attach_journal(self, *, fresh: bool) -> None:
+        from repro.checkpoint.journal import OpJournal
+
+        path = Path(self._ckpt.dir) / "journal.bin"
+        self._journal = OpJournal(path, fsync=self._journal_fsync)
+        if fresh:
+            self._journal.reset(meta={
+                "fingerprint": params_fingerprint(self.params, self.strategy),
+            })
+        else:
+            # recovery path: physically drop the torn/corrupt tail so new
+            # appends extend a clean record prefix
+            self._journal.repair()
+
+    def _journal_append(self, code: int, *, payload=None, ids=None,
+                        aux: dict | None = None) -> None:
+        """Append one record *before* the action it describes (write-ahead).
+
+        ``seq``/``cseq`` snapshot the op and consolidate counters at append
+        time, which is what lets recovery skip records a later checkpoint
+        already subsumes (the crash window between checkpoint publish and
+        journal truncation would otherwise double-replay).
+        """
+        if self._journal is None:
+            return
+        self._journal.append(code, seq=self._op_counter,
+                             cseq=self._consolidate_counter,
+                             payload=payload, ids=ids, aux=aux)
+        faults.crash_point("post-journal-append")
 
     # -- dispatch core -----------------------------------------------------
     def _dispatch(self, op_code: int, arr, chunk: int, *,
@@ -373,6 +454,9 @@ class Session:
         """
         q = np.asarray(queries, np.float32)
         k = k if k is not None else self.params.search.pool_size
+        # queries don't mutate state but DO consume an op key, so replay must
+        # know they happened — a count-only record keeps the journal cheap
+        self._journal_append(OP_QUERY, aux={"n": int(q.shape[0])})
         t0 = time.perf_counter()
         h = self._dispatch(OP_QUERY, q, chunk or self.chunk)
         h.k = min(k, self.params.search.pool_size)
@@ -391,6 +475,20 @@ class Session:
         in ``timers.n_refused``.
         """
         v = np.asarray(vectors, np.float32)
+        self._journal_append(OP_INSERT, payload=v, aux={"chunk": chunk})
+        # dispatch-time validation: a NaN/Inf row would poison every distance
+        # it ever participates in, so it is rejected here (counted in
+        # timers.n_rejected, NULL id at its position in result()). Exact-zero
+        # rows are legitimate and insert normally — the quantizer gives them
+        # a positive sentinel scale so their codes can never collide with
+        # the freed-slot (0, 0.0) scrub pattern of invariant I5 (§10/§11).
+        total, keep = v.shape[0], None
+        if total:
+            finite = np.isfinite(v).all(axis=1)
+            if not finite.all():
+                self.timers.n_rejected += int(total - finite.sum())
+                keep = np.flatnonzero(finite)
+                v = v[keep]
         # the gate runs OUTSIDE the insert stopwatch: its consolidation /
         # growth work bills to consolidate_s / grow_s (as the delete-path
         # trigger does), so PhaseTimers.total() never double-counts
@@ -399,6 +497,8 @@ class Session:
         t0 = time.perf_counter()
         h = self._dispatch(OP_INSERT, v, chunk or
                            self.params.maintenance.insert_chunk)
+        if keep is not None:
+            h.row_map, h.total_rows = keep, total
         self._free_hint = max(self._free_hint - v.shape[0], 0)
         self.timers.insert_s += time.perf_counter() - t0
         self.timers.n_inserts += v.shape[0]
@@ -412,9 +512,13 @@ class Session:
         ``flush`` — DESIGN.md §8).
         """
         arr = np.asarray(ids, np.int32)
+        eff_chunk = chunk or self.params.maintenance.delete_chunk
+        # delete repair keys fold the chunk index (chunk-local lanes), so the
+        # effective width is part of the op's identity — journal it
+        self._journal_append(OP_DELETE, ids=arr,
+                             aux={"chunk": int(eff_chunk)})
         t0 = time.perf_counter()
-        h = self._dispatch(OP_DELETE, arr,
-                           chunk or self.params.maintenance.delete_chunk,
+        h = self._dispatch(OP_DELETE, arr, eff_chunk,
                            fold_chunk_key=True)
         self.timers.delete_s += time.perf_counter() - t0
         self.timers.n_deletes += arr.shape[0]
@@ -444,7 +548,8 @@ class Session:
 
     def consolidate(self, *, strategy: str | None = None,
                     chunk: int | None = None,
-                    _n_masked: int | None = None) -> int:
+                    _n_masked: int | None = None,
+                    _auto: bool = False) -> int:
         """Physically remove every tombstone: the jitted compaction pass.
 
         Reads the exact tombstone count (synchronizing on the dispatched
@@ -455,7 +560,15 @@ class Session:
         rows with ``consolidate_strategy`` and returns the freed slots to
         the allocator. Returns the number of consolidated vertices; the
         dispatched work itself is async (settled by ``flush``/reads).
+
+        Only *explicit* calls journal (JR_CONSOLIDATE): auto-triggered
+        passes (``_auto=True``) are a pure function of the replayed op
+        stream and would double-apply if recorded (DESIGN.md §11).
         """
+        if not _auto:
+            self._journal_append(ops_mod.JR_CONSOLIDATE,
+                                 aux={"strategy": strategy, "chunk": chunk})
+        faults.crash_point("pre-consolidate")
         t0 = time.perf_counter()
         n_masked = (int(jnp.sum(self._state.masked))
                     if _n_masked is None else int(_n_masked))
@@ -503,6 +616,7 @@ class Session:
         self._masked_hint = 0
         self._present_floor = max(self._present_floor - n_masked, 0)
         self._free_hint += n_masked  # compacted slots return to the allocator
+        faults.crash_point("post-consolidate")
         return n_masked
 
     def _maybe_consolidate(self) -> int:
@@ -520,7 +634,7 @@ class Session:
             return 0
         self._in_consolidate = True
         try:
-            return self.consolidate(_n_masked=self._masked_hint)
+            return self.consolidate(_n_masked=self._masked_hint, _auto=True)
         finally:
             self._in_consolidate = False
 
@@ -547,19 +661,19 @@ class Session:
         if free < n and self._masked_hint > 0 and (
                 mp.consolidate_threshold is not None
                 or mp.max_capacity is not None):
-            free += self.consolidate(_n_masked=self._masked_hint)
+            free += self.consolidate(_n_masked=self._masked_hint, _auto=True)
         if free < n and mp.max_capacity is not None:
             cap = self._state.capacity
             target = next_capacity_tier(
                 cap, cap - free + n, mp.growth_factor, mp.max_capacity)
             if target > cap:
-                self.grow(target)
+                self.grow(target, _auto=True)
                 free += target - cap
         if free < n:
             self.timers.n_refused += n - free
         self._free_hint = free
 
-    def grow(self, new_capacity: int) -> None:
+    def grow(self, new_capacity: int, *, _auto: bool = False) -> None:
         """Move the state to a larger capacity tier (``graph.grow_state``).
 
         Dispatches asynchronously like every other op — existing slots keep
@@ -578,6 +692,12 @@ class Session:
             raise ValueError(
                 f"new_capacity {new_capacity} exceeds maintenance."
                 f"max_capacity {ceiling}")
+        if not _auto:
+            # explicit tier moves are journaled; auto-growth re-derives from
+            # the replayed op stream (same rationale as consolidate)
+            self._journal_append(ops_mod.JR_GROW,
+                                 aux={"new_capacity": int(new_capacity)})
+        faults.crash_point("pre-grow")
         if self._window_t0 is None:
             self._window_t0 = t0
         grown = grow_state(self._state, new_capacity)
@@ -585,24 +705,60 @@ class Session:
         self._state = grown
         self.timers.n_grows += 1
         self.timers.grow_s += time.perf_counter() - t0
+        faults.crash_point("post-grow")
 
     def flush(self) -> PhaseTimers:
         """Synchronize: block until every dispatched op (and the state) is
         materialized; settle the timer window. Returns the timers. Also a
         consolidation trigger point (DESIGN.md §8): the threshold check runs
-        first, so the flushed state is the compacted one."""
+        first, so the flushed state is the compacted one.
+
+        Because the trigger can compact, *when* a flush happened is part of
+        the stream's logical identity — so a journaled session records a
+        JR_FLUSH marker before the trigger and replay re-flushes at the same
+        positions (DESIGN.md §11). The marker precedes the trigger for the
+        same write-ahead reason as every other record.
+        """
+        faults.crash_point("pre-flush")
+        self._journal_append(ops_mod.JR_FLUSH)
         self._maybe_consolidate()
+        self._sync()
+        faults.crash_point("post-flush")
+        return self.timers
+
+    def _sync(self) -> None:
+        """The synchronization body of :meth:`flush`, without the trigger or
+        the journal marker — recovery settles replayed work through this so
+        it cannot fire a compaction the original timeline never saw.
+
+        Transient dispatch/sync failures (a device runtime hiccup — injected
+        in tests via ``faults.transient``) are absorbed with bounded
+        exponential backoff; exhaustion re-raises, counted retries land in
+        ``timers.n_retries``.
+        """
         t0 = time.perf_counter()
-        for h in list(self._pending):  # block() retires handles in place
-            h.block()
-        jax.block_until_ready(self._state.adj)
+        attempt = 0
+        while True:
+            try:
+                faults.transient_point("flush")
+                for h in list(self._pending):  # block() retires in place
+                    h.block()
+                jax.block_until_ready(self._state.adj)
+                break
+            except faults.TransientDispatchError:
+                if attempt >= self._flush_retries:
+                    raise
+                self.timers.n_retries += 1
+                time.sleep(self._flush_backoff_s * (2.0 ** attempt))
+                attempt += 1
         self._pending.clear()
+        if self._journal is not None and self._journal.fsync_policy == "flush":
+            self._journal.sync()  # flush is the acknowledgement barrier
         dt = time.perf_counter() - t0
         self.timers.flush_s += dt
         if self._window_t0 is not None:
             self.timers.wall_s += time.perf_counter() - self._window_t0
             self._window_t0 = None
-        return self.timers
 
     def _live_params(self) -> IndexParams:
         """``self.params`` with ``capacity`` pinned to the live state's tier
@@ -678,7 +834,7 @@ class Session:
         """
         mgr = self._require_ckpt()
         self.flush()
-        return mgr.save(
+        path = mgr.save(
             step, self._ckpt_tree(),
             extra={
                 "fingerprint": params_fingerprint(self.params, self.strategy),
@@ -688,6 +844,15 @@ class Session:
                 "timers": self.timers.to_dict(),
             },
         )
+        # the published checkpoint subsumes the whole journal prefix; a crash
+        # in this window (before truncation) is safe — recovery skips records
+        # whose seq/cseq the restored counters already cover
+        faults.crash_point("post-checkpoint-save")
+        if self._journal is not None:
+            self._journal.reset(meta={
+                "fingerprint": params_fingerprint(self.params, self.strategy),
+            })
+        return path
 
     def restore(self, step: int | None = None) -> int:
         """Restore the session to a saved step (latest when ``step=None``).
@@ -700,13 +865,37 @@ class Session:
         ``max_capacity`` bounds *growth*, not restorability — the matching
         policy fingerprint already guarantees the writer enforced the same
         ceiling. Returns the restored step number.
+
+        ``step=None`` walks back past corrupt steps (a torn manifest or
+        garbled shard raises :class:`~repro.checkpoint.manager.
+        CheckpointCorruptError` per step and the next-older complete step is
+        tried); an explicit ``step`` propagates the typed error instead.
+        Restoring rewinds the timeline, so an attached journal is reset —
+        its suffix described a future this session no longer has.
         """
+        from repro.checkpoint.manager import CheckpointCorruptError
+
         mgr = self._require_ckpt()
         self.flush()
-        step = mgr.latest_step() if step is None else step
         if step is None:
-            raise FileNotFoundError(f"no checkpoint in {mgr.dir}")
-        tree, extra = mgr.restore(step, self._ckpt_tree())
+            steps = mgr.all_steps()
+            if not steps:
+                raise FileNotFoundError(f"no checkpoint in {mgr.dir}")
+            tree = extra = None
+            errors: list[str] = []
+            for s in reversed(steps):
+                try:
+                    tree, extra = mgr.restore(s, self._ckpt_tree())
+                    step = s
+                    break
+                except CheckpointCorruptError as e:
+                    errors.append(str(e))
+            if tree is None:
+                raise CheckpointCorruptError(
+                    "every checkpoint step is corrupt:\n  "
+                    + "\n  ".join(errors))
+        else:
+            tree, extra = mgr.restore(step, self._ckpt_tree())
         want = params_fingerprint(self.params, self.strategy)
         if extra.get("fingerprint") != want:
             raise ValueError(
@@ -730,4 +919,122 @@ class Session:
         self._op_counter = int(extra["op_counter"])
         self._consolidate_counter = int(extra.get("consolidate_counter", 0))
         self._refresh_hints()
+        if self._journal is not None:
+            self._journal.reset(meta={
+                "fingerprint": params_fingerprint(self.params, self.strategy),
+            })
         return step
+
+    @classmethod
+    def recover(
+        cls,
+        checkpoint_dir: str | Path,
+        params: IndexParams,
+        *,
+        strategy: str | None = None,
+        seed: int = 0,
+        checkpoint_keep: int = 3,
+        unified_dispatch: bool = True,
+        journal_fsync: str = "flush",
+        flush_retries: int = 3,
+        flush_backoff_s: float = 0.005,
+    ) -> "Session":
+        """Rebuild a crashed session from ``checkpoint_dir`` (DESIGN.md §11).
+
+        Restores the newest checkpoint that validates (walking past corrupt
+        steps), scans the write-ahead journal — dropping any torn/corrupt
+        tail — and replays the suffix through the normal op pipeline:
+        records whose ``seq``/``cseq`` the restored counters already cover
+        are skipped (the checkpoint subsumes them), queries advance the key
+        chain without re-executing, and JR_FLUSH markers re-run the flush
+        trigger so auto-compactions land at their original stream positions.
+        The result is bit-identical to the uninterrupted run over the same
+        acknowledged prefix. ``params``/``strategy``/``seed`` must match the
+        crashed session's (the checkpoint and journal fingerprints enforce
+        the first two).
+
+        The replayed records stay in the journal (truncation happens only at
+        the next checkpoint ``save``), so a crash *during or after* recovery
+        recovers again from the same disk state.
+        """
+        from repro.checkpoint import journal as journal_mod
+
+        sess = cls(
+            params, strategy=strategy, seed=seed,
+            checkpoint_dir=checkpoint_dir, checkpoint_keep=checkpoint_keep,
+            unified_dispatch=unified_dispatch, journal=False,
+            journal_fsync=journal_fsync, flush_retries=flush_retries,
+            flush_backoff_s=flush_backoff_s,
+        )
+        sess.recovering = True
+        t0 = time.perf_counter()
+        records, _, dropped = journal_mod.scan_file(
+            Path(sess._ckpt.dir) / "journal.bin")
+        step = None
+        try:
+            step = sess.restore(None)  # journal not attached: no reset
+        except FileNotFoundError:
+            pass  # crashed before the first checkpoint: replay from empty
+        want = params_fingerprint(sess.params, sess.strategy)
+        n_replayed = n_skipped = n_unreplayable = 0
+        for idx, rec in enumerate(records):
+            code = rec.code
+            if code == ops_mod.JR_META:
+                fp = rec.aux.get("fingerprint")
+                if fp is not None and fp != want:
+                    raise ValueError(
+                        "journal params/strategy fingerprint mismatch — "
+                        "refusing to replay ops recorded under a different "
+                        "configuration")
+                continue
+            if code in (OP_QUERY, OP_INSERT, OP_DELETE, ops_mod.JR_FLUSH):
+                if rec.seq < sess._op_counter:
+                    n_skipped += 1
+                    continue
+                if code != ops_mod.JR_FLUSH and rec.seq > sess._op_counter:
+                    # sequence gap: the newest checkpoint was corrupt AND the
+                    # journal had already been truncated past the fallback
+                    # step — the ops in between are genuinely gone, so this
+                    # suffix belongs to a timeline the session can no longer
+                    # reach. Stop replaying, surface the loss, come up on
+                    # the longest recoverable prefix (a stale index beats
+                    # refusing to serve).
+                    n_unreplayable = len(records) - idx
+                    break
+            if code == OP_QUERY:
+                sess._op_key()  # results are gone; only the chain advances
+            elif code == OP_INSERT:
+                sess.insert(rec.payload, chunk=rec.aux.get("chunk"))
+            elif code == OP_DELETE:
+                sess.delete(rec.ids, chunk=rec.aux.get("chunk"))
+            elif code == ops_mod.JR_FLUSH:
+                sess.flush()
+            elif code == ops_mod.JR_CONSOLIDATE:
+                if rec.cseq < sess._consolidate_counter:
+                    n_skipped += 1
+                    continue
+                sess.consolidate(strategy=rec.aux.get("strategy"),
+                                 chunk=rec.aux.get("chunk"))
+            elif code == ops_mod.JR_GROW:
+                target = int(rec.aux["new_capacity"])
+                if target <= sess._state.capacity:
+                    n_skipped += 1
+                    continue
+                sess.grow(target)
+            else:
+                raise ValueError(f"unknown journal record code {code}")
+            n_replayed += 1
+        sess._sync()  # settle WITHOUT the flush trigger (no extra compaction)
+        # a gapped suffix is a dead timeline — it can never replay against
+        # this state, so start a fresh journal rather than extend it
+        sess._attach_journal(fresh=n_unreplayable > 0)
+        sess.recovering = False
+        sess.recovery_info = {
+            "step": step,
+            "n_replayed": n_replayed,
+            "n_skipped": n_skipped,
+            "n_unreplayable": n_unreplayable,
+            "dropped_bytes": int(dropped),
+            "replay_s": time.perf_counter() - t0,
+        }
+        return sess

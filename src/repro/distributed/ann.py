@@ -50,6 +50,7 @@ from repro.core.graph import (
     next_capacity_tier,
 )
 from repro.core.params import IndexParams
+from repro.testing import faults
 
 
 @dataclasses.dataclass(frozen=True)
@@ -389,6 +390,7 @@ class ShardedSession:
         n = int(jnp.shape(vecs)[0])
         if n:  # outside the insert stopwatch — gate work bills to its own
             self._ensure_room(n)  # consolidate_s / grow_s phases
+        faults.crash_point("sharded-pre-dispatch")
         t0 = time.perf_counter()
         self.state, gids = self._insert_step(
             self.state, jnp.asarray(vecs),
@@ -400,10 +402,12 @@ class ShardedSession:
         self.timers.insert_s += time.perf_counter() - t0
         self.timers.n_inserts += n
         self.timers.n_ops += 1
+        faults.crash_point("sharded-post-dispatch")
         return gids
 
     def delete(self, gids) -> None:
         """Owner-masked distributed delete of global ids (async)."""
+        faults.crash_point("sharded-pre-dispatch")
         t0 = time.perf_counter()
         self.state = self._delete_step(
             self.state, jnp.asarray(gids, jnp.int32), self._op_key()
@@ -417,6 +421,7 @@ class ShardedSession:
         else:
             self._present_floor = max(
                 self._present_floor - int(jnp.shape(gids)[0]), 0)
+        faults.crash_point("sharded-post-dispatch")
 
     # -- capacity growth (DESIGN.md §9, lockstep over shards) --------------
     def _per_shard_present(self) -> "np.ndarray":
@@ -480,6 +485,7 @@ class ShardedSession:
                 f"{mp.max_capacity}")
         if new_capacity == self.dp.index.capacity:
             return
+        faults.crash_point("sharded-pre-grow")
         t0 = time.perf_counter()
         if self._window_t0 is None:
             self._window_t0 = t0
@@ -493,6 +499,7 @@ class ShardedSession:
         self._free_floor += delta
         self.timers.n_grows += 1
         self.timers.grow_s += time.perf_counter() - t0
+        faults.crash_point("sharded-post-grow")
 
     # -- consolidation (DESIGN.md §8, per-shard) ---------------------------
     def _per_shard_masked(self) -> "np.ndarray":
@@ -525,6 +532,10 @@ class ShardedSession:
         base = jax.random.fold_in(self._base_key,
                                   ops_mod.CONSOLIDATE_KEY_STREAM)
         for _ in range(-(-int(per_shard.max()) // chunk)):
+            # lockstep SPMD passes: a kill between passes leaves some shards
+            # drained further than others — exactly the torn-maintenance
+            # state the recovery matrix must prove replayable
+            faults.crash_point("sharded-consolidate-pass")
             key = jax.random.fold_in(base, self._consolidate_counter)
             self._consolidate_counter += 1
             self.state = self._consolidate_step(self.state, key)

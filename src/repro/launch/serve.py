@@ -32,6 +32,9 @@ def serve_online(
     pool: int = 32,
     seed: int = 0,
     k: int = 10,
+    checkpoint_dir: str | None = None,
+    checkpoint_every: int = 0,
+    recover: bool = False,
 ) -> list[dict]:
     wl = make_workload(
         dataset, n_base=n_base, n_steps=n_steps, batch_size=batch_size,
@@ -44,14 +47,40 @@ def serve_online(
         search=SearchParams(pool_size=pool, max_steps=3 * pool, num_starts=2),
         maintenance=MaintenanceParams(strategy=strategy),
     )
-    session = Session(params, seed=seed)
+    if recover:
+        # crash restart: newest complete checkpoint + journal replay
+        # (DESIGN.md §11) — params/strategy/seed must match the dead run
+        if checkpoint_dir is None:
+            raise ValueError("--recover requires --checkpoint-dir")
+        t0 = time.perf_counter()
+        session = Session.recover(
+            checkpoint_dir, params, strategy=strategy, seed=seed)
+        info = session.recovery_info or {}
+        print(
+            f"recovered from {checkpoint_dir}: step={info.get('step')} "
+            f"replayed={info.get('n_replayed', 0)} ops "
+            f"(skipped {info.get('n_skipped', 0)}, "
+            f"dropped {info.get('dropped_bytes', 0)}B torn tail) "
+            f"in {time.perf_counter() - t0:.2f}s"
+        )
+    else:
+        # a checkpoint_dir arms the write-ahead journal automatically, so
+        # every acknowledged op survives a crash up to the fsync policy
+        session = Session(params, seed=seed, checkpoint_dir=checkpoint_dir)
 
-    print(f"building base index ({n_base} × d={dim}) ...")
-    t0 = time.perf_counter()
-    ids = session.insert(wl.base).result()
-    session.flush()
-    id_map = list(np.asarray(ids))       # pool position → graph id
-    print(f"  built in {time.perf_counter() - t0:.1f}s")
+    if recover and session._op_counter > 0:
+        # the recovered timeline already contains the base build (and
+        # whatever stream prefix was acknowledged before the crash); the
+        # deterministic workload lets us rebuild the id map host-side
+        print("skipping base build (recovered mid-stream)")
+        id_map = list(range(n_base))
+    else:
+        print(f"building base index ({n_base} × d={dim}) ...")
+        t0 = time.perf_counter()
+        ids = session.insert(wl.base).result()
+        session.flush()
+        id_map = list(np.asarray(ids))   # pool position → graph id
+        print(f"  built in {time.perf_counter() - t0:.1f}s")
 
     records = []
     for step in range(wl.n_steps):
@@ -74,6 +103,10 @@ def serve_online(
         rec["query_s"] = time.perf_counter() - t0
         rec["qps"] = n_queries / rec["query_s"]
         rec.update(session.stats())
+        if (checkpoint_dir is not None and checkpoint_every
+                and (step + 1) % checkpoint_every == 0):
+            session.save(step)   # publishes atomically, truncates the journal
+            rec["checkpointed"] = True
         records.append(rec)
         print(
             f"step {step}: recall@{k}={rec['recall@10']:.3f} "
@@ -90,11 +123,21 @@ def main() -> None:
     ap.add_argument("--strategy", default="global")
     ap.add_argument("--scale", type=int, default=2000)
     ap.add_argument("--steps", type=int, default=3)
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="arm checkpoints + the write-ahead op journal")
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="save every N maintenance steps (0 = never)")
+    ap.add_argument("--recover", action="store_true",
+                    help="restart from checkpoint-dir: newest complete "
+                         "checkpoint + journal replay (DESIGN.md §11)")
     args = ap.parse_args()
     serve_online(
         dataset=args.dataset, strategy=args.strategy, n_base=args.scale,
         n_steps=args.steps, batch_size=max(args.scale // 10, 10),
         n_queries=min(256, args.scale),
+        checkpoint_dir=args.checkpoint_dir,
+        checkpoint_every=args.checkpoint_every,
+        recover=args.recover,
     )
 
 

@@ -1,6 +1,6 @@
 """Request batching + quorum degradation — the online serving front-end.
 
-Two production behaviours the 1000-node story needs (DESIGN.md §5):
+Production behaviours the 1000-node story needs (DESIGN.md §5, §11):
 
   · **adaptive batching** — requests accumulate until ``max_batch`` or
     ``max_wait_s``; the device step always runs at a pad-stable shape so
@@ -10,6 +10,12 @@ Two production behaviours the 1000-node story needs (DESIGN.md §5):
     first ⌈quorum·P⌉ shard results and degrades recall by ≤ (1-quorum)
     instead of stalling on a straggler. Simulated here by masking shard
     contributions (the merge math is identical to dropping late arrivals).
+  · **graceful degradation under overload/recovery** — a bounded queue
+    that sheds with a typed error past ``max_queue`` (backpressure to the
+    caller, not an unbounded latency cliff), a per-request deadline so
+    requests that waited too long fail fast instead of wasting a device
+    step, and a readiness gate that holds traffic while the underlying
+    session is replaying its journal after a crash.
 """
 from __future__ import annotations
 
@@ -31,6 +37,16 @@ class ServeConfig:
     max_wait_s: float = 0.005
     k: int = 10
     quorum: float = 1.0        # fraction of shards required (sharded mode)
+    max_queue: int | None = None   # bound on queued requests (None = ∞)
+    deadline_s: float | None = None  # per-request age limit at drain time
+
+
+class ServerOverloadError(RuntimeError):
+    """submit() refused: the bounded queue is full (load shed)."""
+
+
+class ServerNotReadyError(RuntimeError):
+    """submit() refused: the server is holding traffic (e.g. recovery)."""
 
 
 class BatchedServer:
@@ -69,15 +85,52 @@ class BatchedServer:
         self.cfg = cfg
         self._clock = clock
         self._sleep = sleep
-        self._queue: deque[tuple[int, np.ndarray]] = deque()
+        # queue entries carry their submit time for the deadline check
+        self._queue: deque[tuple[int, np.ndarray, float]] = deque()
         self._next_id = 0
-        self.stats = {"batches": 0, "requests": 0, "pad_waste": 0.0}
+        self._ready = True
+        self.stats = {"batches": 0, "requests": 0, "pad_waste": 0.0,
+                      "shed_overload": 0, "shed_deadline": 0}
+        # rid → reason for every request shed after admission (deadline):
+        # callers poll this the same way they poll step() results
+        self.failed: dict[int, str] = {}
+
+    @property
+    def ready(self) -> bool:
+        """False while traffic must be held: an explicit ``set_ready(False)``
+        or the underlying session replaying its journal (DESIGN.md §11)."""
+        return self._ready and not getattr(self.session, "recovering", False)
+
+    def set_ready(self, ready: bool) -> None:
+        self._ready = bool(ready)
 
     def submit(self, query: np.ndarray) -> int:
+        if not self.ready:
+            raise ServerNotReadyError(
+                "server is not accepting traffic (recovery in progress?)")
+        if (self.cfg.max_queue is not None
+                and len(self._queue) >= self.cfg.max_queue):
+            self.stats["shed_overload"] += 1
+            raise ServerOverloadError(
+                f"queue full ({self.cfg.max_queue} pending); load shed")
         rid = self._next_id
         self._next_id += 1
-        self._queue.append((rid, np.asarray(query, np.float32)))
+        self._queue.append((rid, np.asarray(query, np.float32), self._clock()))
         return rid
+
+    def _expire(self) -> None:
+        """Fail queued requests whose age exceeds ``deadline_s`` — they shed
+        *before* padding/dispatch, so a stale backlog never spends a device
+        step producing answers nobody is waiting for. Submit times are
+        monotone, so expired entries are always a queue prefix (O(1)
+        amortized per drained request)."""
+        if self.cfg.deadline_s is None:
+            return
+        now = self._clock()
+        while self._queue and now - self._queue[0][2] > self.cfg.deadline_s:
+            rid, _, _ = self._queue.popleft()
+            self.failed[rid] = "deadline"
+            self.stats["shed_deadline"] += 1
 
     def _drain(self) -> list[tuple[int, np.ndarray]]:
         """Collect up to ``max_batch`` requests for one device step.
@@ -93,8 +146,10 @@ class BatchedServer:
         out: list[tuple[int, np.ndarray]] = []
         deadline = self._clock() + self.cfg.max_wait_s
         while len(out) < self.cfg.max_batch:
+            self._expire()
             if self._queue:
-                out.append(self._queue.popleft())
+                rid, q, _ = self._queue.popleft()
+                out.append((rid, q))
                 continue
             if not out:
                 break  # idle server: nothing to wait *for*

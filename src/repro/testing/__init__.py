@@ -1,0 +1,11 @@
+"""Test-support utilities that ship with the library (not under tests/).
+
+``repro.testing.faults`` is imported by production modules (session,
+checkpoint manager, sharded session) to mark crash points — the hooks are
+no-ops unless a fault plan is activated, so shipping them in-tree costs one
+dict lookup per instrumented site and buys a deterministic kill-and-recover
+harness (DESIGN.md §11).
+"""
+from repro.testing import faults
+
+__all__ = ["faults"]

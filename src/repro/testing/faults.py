@@ -1,0 +1,178 @@
+"""Deterministic fault injection: named crash points + transient failures.
+
+Production code marks the places where a real deployment can die — after a
+journal append, mid-checkpoint-save, between consolidation passes — by
+calling ``crash_point("name")``. With no plan activated the call is a dict
+lookup and returns immediately, so the instrumentation is free in normal
+runs. A test activates a :class:`FaultPlan` (via :func:`inject`) naming
+which hit of which point should die; the site then raises
+:class:`SimulatedCrash`, the test discards the session (a real crash would
+discard the process), and recovery is exercised against whatever bytes were
+durably on disk at that moment.
+
+Two properties make the harness usable for bit-exactness matrices:
+
+  · **determinism** — a plan is data (point name → 1-based hit ordinal, or
+    a seeded schedule drawn by :func:`random_plan`), never wall-clock or
+    real randomness, so a failing matrix cell replays exactly;
+  · **closed registry** — ``crash_point`` rejects names not in
+    :data:`CRASH_POINTS`, so a typo in production instrumentation fails
+    loudly in any test that activates *any* plan, and the matrix test can
+    enumerate every registered point knowing the list is exhaustive.
+
+Transient (retryable) failures are separate: ``transient_point(site)``
+raises :class:`TransientDispatchError` for the first ``k`` hits of a site,
+which ``Session.flush`` absorbs with bounded retry/backoff.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import random
+import threading
+from typing import Iterator
+
+# Every name production code may pass to crash_point(). Grouped by tier;
+# tests/benchmarks import SESSION_CRASH_POINTS for the single-process
+# recovery matrix and SHARDED_CRASH_POINTS for the distributed tier.
+SESSION_CRASH_POINTS = (
+    "post-journal-append",    # record durable, device never saw the op
+    "pre-flush",              # flush requested, nothing synced yet
+    "post-flush",             # host/device synced, timers not yet settled
+    "pre-consolidate",        # compaction about to start
+    "post-consolidate",       # compaction ran, caller not yet resumed
+    "pre-grow",               # capacity migration about to start
+    "post-grow",              # migrated state live, caller not yet resumed
+    "mid-checkpoint-save",    # shards written, manifest/publish pending
+    "post-checkpoint-save",   # checkpoint published, journal not truncated
+)
+SHARDED_CRASH_POINTS = (
+    "sharded-pre-dispatch",   # per-shard op batch built, not dispatched
+    "sharded-post-dispatch",  # mesh program ran, handles not retired
+    "sharded-consolidate-pass",  # between lockstep consolidation passes
+    "sharded-pre-grow",       # lockstep capacity migration about to start
+    "sharded-post-grow",      # migrated mesh state live
+)
+CRASH_POINTS = SESSION_CRASH_POINTS + SHARDED_CRASH_POINTS
+_CRASH_POINT_SET = frozenset(CRASH_POINTS)
+
+
+class SimulatedCrash(RuntimeError):
+    """Raised at an armed crash point.
+
+    Simulates a process kill: the test must treat the session object as
+    dead (device buffers lost) and recover from disk only. The exception
+    unwinds normally, so unlike a real ``kill -9`` any ``finally`` blocks
+    run — instrumented sites therefore never put durability-critical work
+    in cleanup handlers.
+    """
+
+
+class TransientDispatchError(RuntimeError):
+    """A retryable dispatch failure (simulated device/runtime hiccup)."""
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    """What dies where. Pure data; activation is via :func:`inject`.
+
+    ``crashes``  maps crash-point name → 1-based hit ordinal at which that
+    point raises. ``transients`` maps a transient site name → number of
+    consecutive initial hits that fail with TransientDispatchError.
+    """
+
+    crashes: dict[str, int] = dataclasses.field(default_factory=dict)
+    transients: dict[str, int] = dataclasses.field(default_factory=dict)
+    # runtime bookkeeping (reset on activation)
+    hits: dict[str, int] = dataclasses.field(default_factory=dict)
+    log: list[str] = dataclasses.field(default_factory=list)
+
+    def _bump(self, name: str) -> int:
+        n = self.hits.get(name, 0) + 1
+        self.hits[name] = n
+        return n
+
+
+_lock = threading.Lock()
+_active: FaultPlan | None = None
+
+
+def active_plan() -> FaultPlan | None:
+    return _active
+
+
+def crash_point(name: str) -> None:
+    """Mark a named kill site. No-op unless an armed plan targets it."""
+    if name not in _CRASH_POINT_SET:
+        raise ValueError(f"unregistered crash point {name!r}")
+    plan = _active
+    if plan is None:
+        return
+    with _lock:
+        n = plan._bump(name)
+        armed = plan.crashes.get(name)
+    if armed is not None and n == armed:
+        plan.log.append(f"crash:{name}#{n}")
+        raise SimulatedCrash(f"simulated crash at {name} (hit {n})")
+
+
+def transient_point(site: str) -> None:
+    """Mark a retryable-failure site (e.g. ``"flush"``)."""
+    plan = _active
+    if plan is None:
+        return
+    with _lock:
+        remaining = plan.transients.get(site, 0)
+        if remaining <= 0:
+            return
+        plan.transients[site] = remaining - 1
+    plan.log.append(f"transient:{site}")
+    raise TransientDispatchError(f"simulated transient failure at {site}")
+
+
+@contextlib.contextmanager
+def inject(plan: FaultPlan) -> Iterator[FaultPlan]:
+    """Activate ``plan`` for the dynamic extent of the block.
+
+    Plans do not nest (a second activation raises) — the matrix semantics
+    depend on hit counts being attributable to exactly one plan.
+    """
+    global _active
+    with _lock:
+        if _active is not None:
+            raise RuntimeError("a fault plan is already active")
+        plan.hits = {}
+        plan.log = []
+        _active = plan
+    try:
+        yield plan
+    finally:
+        with _lock:
+            _active = None
+
+
+def crash_once(point: str, hit: int = 1) -> FaultPlan:
+    """Plan that kills the process at the ``hit``-th arrival at ``point``."""
+    if point not in _CRASH_POINT_SET:
+        raise ValueError(f"unregistered crash point {point!r}")
+    return FaultPlan(crashes={point: hit})
+
+
+def transient(site: str, count: int = 1) -> FaultPlan:
+    """Plan whose first ``count`` hits of ``site`` fail transiently."""
+    return FaultPlan(transients={site: count})
+
+
+def random_plan(
+    seed: int,
+    points: tuple[str, ...] = SESSION_CRASH_POINTS,
+    max_hit: int = 4,
+) -> FaultPlan:
+    """Seeded schedule: one crash at a uniformly drawn (point, hit) cell.
+
+    The draw is a pure function of ``seed`` — rerunning a failing seed
+    reproduces the identical kill.
+    """
+    rng = random.Random(seed)
+    point = points[rng.randrange(len(points))]
+    return FaultPlan(crashes={point: rng.randrange(1, max_hit + 1)})

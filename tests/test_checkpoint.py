@@ -250,3 +250,75 @@ def test_preempt_resume_exact(tmp_path):
         full["losses"][-1], resumed["losses"][-1], rtol=1e-4,
         err_msg="resume must reproduce the uninterrupted run",
     )
+
+
+# ---------------------------------------------------------------------------
+# corruption containment (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+def test_keep_last_alias(tmp_path):
+    from repro.checkpoint.manager import CheckpointManager as M
+
+    mgr = M(tmp_path, keep=5, keep_last=2)  # keep_last wins
+    t = _tree()
+    for s in (1, 2, 3):
+        mgr.save(s, t)
+    assert mgr.all_steps() == [2, 3]
+
+
+def test_corrupt_manifest_raises_typed(tmp_path):
+    from repro.checkpoint.manager import CheckpointCorruptError
+
+    mgr = CheckpointManager(tmp_path)
+    t = _tree()
+    mgr.save(1, t, extra={"s": 1})
+    mgr.save(2, t, extra={"s": 2})
+    (tmp_path / "step_000000000002" / "manifest.json").write_text("{garbled")
+    with pytest.raises(CheckpointCorruptError, match="manifest"):
+        mgr.restore(2, jax.tree.map(jnp.zeros_like, t))
+    # restore(None) degrades to the previous complete step
+    _, extra = mgr.restore(None, jax.tree.map(jnp.zeros_like, t))
+    assert extra["s"] == 1
+
+
+def test_truncated_shard_crc_detected(tmp_path):
+    from repro.checkpoint.manager import CheckpointCorruptError
+
+    mgr = CheckpointManager(tmp_path)
+    t = _tree()
+    mgr.save(1, t, extra={"s": 1})
+    mgr.save(2, t, extra={"s": 2})
+    shard = tmp_path / "step_000000000002" / "shard_0.npz"
+    shard.write_bytes(shard.read_bytes()[:60])
+    with pytest.raises(CheckpointCorruptError, match="crc|unreadable"):
+        mgr.restore(2, jax.tree.map(jnp.zeros_like, t))
+    got, extra = mgr.restore(None, jax.tree.map(jnp.zeros_like, t))
+    assert extra["s"] == 1
+    np.testing.assert_array_equal(np.asarray(got["a"]), np.asarray(t["a"]))
+
+
+def test_flipped_shard_byte_crc_detected(tmp_path):
+    """Same-length rot (a flipped bit, not a truncation): only the CRC can
+    catch it — np.load may still parse the file."""
+    from repro.checkpoint.manager import CheckpointCorruptError
+
+    mgr = CheckpointManager(tmp_path)
+    t = _tree()
+    mgr.save(3, t)
+    shard = tmp_path / "step_000000000003" / "shard_0.npz"
+    data = bytearray(shard.read_bytes())
+    data[len(data) // 2] ^= 0xFF
+    shard.write_bytes(bytes(data))
+    with pytest.raises(CheckpointCorruptError):
+        mgr.restore(3, jax.tree.map(jnp.zeros_like, t))
+
+
+def test_all_steps_corrupt_aggregates(tmp_path):
+    from repro.checkpoint.manager import CheckpointCorruptError
+
+    mgr = CheckpointManager(tmp_path)
+    t = _tree()
+    mgr.save(1, t)
+    (tmp_path / "step_000000000001" / "shard_0.npz").unlink()
+    with pytest.raises(CheckpointCorruptError, match="every checkpoint"):
+        mgr.restore(None, jax.tree.map(jnp.zeros_like, t))

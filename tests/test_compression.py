@@ -82,7 +82,10 @@ def test_compressed_psum_vs_fp32_psum_small_trees():
 
 def test_quantize_rows_roundtrip_and_determinism():
     """Row quantizer: error ≤ scale/2 per element, deterministic (no key),
-    zero rows → (zero codes, zero scale) — the freed-slot encoding."""
+    zero rows → (zero codes, positive sentinel scale) — distinct from the
+    freed-slot (0, 0.0) scrub (DESIGN.md §10, scheme v2)."""
+    from repro.core.quantize import ZERO_ROW_SCALE
+
     x = np.random.default_rng(4).normal(size=(50, 24)).astype(np.float32)
     x[7] = 0.0
     xj = jnp.asarray(x)
@@ -92,7 +95,8 @@ def test_quantize_rows_roundtrip_and_determinism():
     assert np.array_equal(np.asarray(s1), np.asarray(s2))
     err = np.abs(np.asarray(dequantize_rows(c1, s1)) - x)
     assert (err <= np.asarray(s1)[:, None] * 0.5 + 1e-7).all()
-    assert (np.asarray(c1)[7] == 0).all() and float(s1[7]) == 0.0
+    assert (np.asarray(c1)[7] == 0).all()
+    assert float(s1[7]) == float(ZERO_ROW_SCALE) > 0.0
     # stacked leading dims (the ShardedSession layout) quantize identically
     cs, ss = quantize_rows(jnp.asarray(x.reshape(2, 25, 24)))
     assert np.array_equal(np.asarray(cs).reshape(50, 24), np.asarray(c1))

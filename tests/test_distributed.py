@@ -101,6 +101,35 @@ with compat.use_mesh(mesh):
     qi, _ = gs.query(Q[:8])
     out['growth_query_valid'] = bool((np.asarray(qi)[:, 0] >= 0).all())
 
+    # fault-injection coverage (DESIGN.md section 11): a mixed sharded
+    # stream with growth + consolidation armed reaches every registered
+    # sharded crash point, and an armed plan kills at the exact site
+    from repro.testing import faults
+    ipf = IndexParams(capacity=16, dim=16, d_out=8,
+                      search=SearchParams(pool_size=16, max_steps=32,
+                                          num_starts=2),
+                      maintenance=MaintenanceParams(
+                          strategy='mask', insert_chunk=32, delete_chunk=32,
+                          consolidate_threshold=0.25, consolidate_chunk=16,
+                          max_capacity=128))
+    probe = faults.FaultPlan()
+    with faults.inject(probe):
+        fs = ShardedSession(DistParams(index=ipf), mesh, strategy='mask')
+        fg1 = np.asarray(fs.insert(X[:100], jnp.arange(100)))
+        fs.insert(X[100:200], jnp.arange(100, 200))
+        fs.delete(jnp.asarray(fg1[:60]))
+        fs.consolidate()
+        fs.flush()
+    out['fault_hits'] = {p: probe.hits.get(p, 0)
+                         for p in faults.SHARDED_CRASH_POINTS}
+    crashed = False
+    with faults.inject(faults.crash_once('sharded-pre-dispatch', hit=1)):
+        try:
+            fs.insert(X[:10], jnp.arange(10))
+        except faults.SimulatedCrash:
+            crashed = True
+    out['fault_crash_fired'] = crashed
+
     # multi-pod replica mesh
     mesh3 = jax.make_mesh((2, 2, 2), ('pod', 'data', 'model'))
     dp3 = DistParams(index=ip, pod_axis='pod')
@@ -148,5 +177,8 @@ def test_sharded_index_8dev():
     assert out["growth_alive"] == 200
     assert out["growth_alive_after_delete"] == 180
     assert out["growth_query_valid"]
+    missing = [p for p, n in out["fault_hits"].items() if n == 0]
+    assert not missing, f"sharded stream never reached crash points: {missing}"
+    assert out["fault_crash_fired"], "armed sharded crash point must fire"
     assert out["multipod_inserted"] == 80
     assert out["multipod_results_valid"]

@@ -212,3 +212,41 @@ def test_dequantized_rows_approximate_vectors():
                  - np.asarray(st.vectors))[present]
     bound = np.asarray(st.scales)[present, None] * 0.5 + 1e-7
     assert (err <= bound).all()
+
+
+def test_zero_vector_is_not_a_freed_slot():
+    """Regression (v1 → v2 scheme): an exact-zero row used to quantize to
+    (0 codes, 0.0 scale) — byte-identical to the freed-slot scrub, so I5
+    could not tell a live zero vector from a dead slot. The v2 sentinel
+    scale keeps the encodings disjoint without moving a single score."""
+    from repro.core.quantize import ZERO_ROW_SCALE, scores_vs_codes
+
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(20, 8)).astype(np.float32)
+    X[7] = 0.0  # a legitimately inserted zero vector
+    codes, scales = quantize_rows(jnp.asarray(X))
+    assert float(scales[7]) == float(ZERO_ROW_SCALE) > 0.0
+    assert (np.asarray(codes[7]) == 0).all()
+    # the sentinel is score-neutral: every metric sees similarity 0.0
+    q = rng.normal(size=(8,)).astype(np.float32)
+    for metric in ("l2", "ip", "cos"):
+        s = scores_vs_codes(codes[7], scales[7], jnp.asarray(q), metric)
+        assert float(s) == 0.0
+
+    # end to end: the zero row stays present/searchable through a session,
+    # and its encoding differs from slots the engine actually freed
+    sess = Session(_params(capacity=64), seed=0)
+    ids = sess.insert(X).result()
+    sess.delete(ids[:3])
+    sess.consolidate()
+    sess.flush()
+    st = sess.state
+    zero_slot = int(ids[7])
+    assert bool(np.asarray(st.present)[zero_slot])
+    assert float(np.asarray(st.scales)[zero_slot]) == float(ZERO_ROW_SCALE)
+    freed = np.asarray(st.scales)[np.asarray(ids[:3], int)]
+    assert (freed == 0.0).all(), "freed slots keep the 0.0 scrub"
+    _assert_codes_consistent(st)
+    # the zero vector is exactly findable: an all-zero l2 query ranks it #1
+    got, _ = sess.query(np.zeros((1, 8), np.float32), k=1).result()
+    assert int(got[0, 0]) == zero_slot

@@ -1,0 +1,451 @@
+"""Durability suite (DESIGN.md §11): journal, crash matrix, fault harness.
+
+Three layers:
+
+  · **journal unit tests** — record framing round-trips, torn/corrupt tails
+    are dropped (prefix semantics), truncate/reset behave, fsync policies
+    are accepted;
+  · **the crash-point matrix** — ONE deterministic mixed stream (inserts,
+    deletes, queries, periodic flushes and checkpoint saves, auto-
+    consolidation and auto-growth armed) is first run uninterrupted to (a)
+    produce the control state and (b) count how often each registered crash
+    point fires. Then, for every session-tier crash point, the stream is
+    killed at that point's *middle* occurrence, recovered via
+    ``Session.recover``, resumed from the recovered op counter, and the
+    final state must be **bit-identical** to the control — arrays, op
+    counters, capacity tier, and a probe query;
+  · **harness/degradation details** — transient-flush retry with bounded
+    backoff, explicit consolidate/grow journaling, NaN/Inf dispatch
+    rejection, recovery with no checkpoint, fingerprint guards.
+
+The matrix stream is a pure function of the op index (vectors, delete
+targets and query payloads are all seeded per-``t``), so the resumed run
+regenerates the exact suffix the crashed run never acknowledged — no
+result-dependent state crosses the kill.
+"""
+import numpy as np
+import pytest
+
+from repro.checkpoint import journal as journal_mod
+from repro.checkpoint.manager import CheckpointCorruptError
+from repro.core import (
+    IndexParams,
+    MaintenanceParams,
+    SearchParams,
+    Session,
+)
+from repro.core import ops as ops_mod
+from repro.core.graph import NULL
+from repro.testing import faults
+
+CAP = 96
+DIM = 8
+CHUNK = 16
+
+
+def _params(**maintenance_kw):
+    mkw = dict(strategy="mask", insert_chunk=CHUNK, delete_chunk=CHUNK,
+               consolidate_threshold=0.3, max_capacity=4 * CAP,
+               growth_factor=2.0)
+    mkw.update(maintenance_kw)
+    return IndexParams(
+        capacity=CAP, dim=DIM, d_out=6,
+        search=SearchParams(pool_size=16, max_steps=48, num_starts=2),
+        maintenance=MaintenanceParams(**mkw),
+    )
+
+
+# ---------------------------------------------------------------------------
+# journal unit tests
+# ---------------------------------------------------------------------------
+
+def test_journal_roundtrip(tmp_path):
+    path = tmp_path / "j.bin"
+    j = journal_mod.OpJournal(path, fsync="always")
+    pay = np.arange(12, dtype=np.float32).reshape(3, 4)
+    ids = np.asarray([7, 9], np.int32)
+    j.append(ops_mod.OP_INSERT, seq=0, payload=pay, aux={"chunk": 8})
+    j.append(ops_mod.OP_DELETE, seq=1, cseq=2, ids=ids, aux={"chunk": 4})
+    j.append(ops_mod.JR_FLUSH, seq=2)
+    j.close()
+
+    recs, valid, dropped = journal_mod.scan_file(path)
+    assert dropped == 0 and valid == path.stat().st_size
+    assert [r.code for r in recs] == [
+        ops_mod.OP_INSERT, ops_mod.OP_DELETE, ops_mod.JR_FLUSH]
+    np.testing.assert_array_equal(recs[0].payload, pay)
+    assert recs[0].aux == {"chunk": 8} and recs[0].seq == 0
+    np.testing.assert_array_equal(recs[1].ids, ids)
+    assert recs[1].cseq == 2
+    assert recs[2].payload is None and recs[2].ids is None
+
+
+def test_journal_torn_tail_dropped(tmp_path):
+    path = tmp_path / "j.bin"
+    j = journal_mod.OpJournal(path, fsync="never")
+    for s in range(5):
+        j.append(ops_mod.OP_QUERY, seq=s, aux={"n": 3})
+    j.sync()
+    whole = path.stat().st_size
+    j.close()
+    # tear the final record mid-body (a kill during append)
+    with open(path, "r+b") as f:
+        f.truncate(whole - 5)
+    recs, valid, dropped = journal_mod.scan_file(path)
+    assert [r.seq for r in recs] == [0, 1, 2, 3]
+    assert dropped > 0
+    # repair() physically drops the tail so appends extend a clean prefix
+    j2 = journal_mod.OpJournal(path)
+    recs2, dropped2 = j2.repair()
+    assert dropped2 == dropped and len(recs2) == 4
+    assert path.stat().st_size == valid
+    j2.append(ops_mod.OP_QUERY, seq=4, aux={"n": 1})
+    j2.sync()
+    recs3, _, d3 = journal_mod.scan_file(path)
+    assert d3 == 0 and [r.seq for r in recs3] == [0, 1, 2, 3, 4]
+
+
+def test_journal_corrupt_record_ends_prefix(tmp_path):
+    path = tmp_path / "j.bin"
+    j = journal_mod.OpJournal(path, fsync="never")
+    offsets = [0]
+    for s in range(4):
+        j.append(ops_mod.OP_QUERY, seq=s, aux={"n": 1})
+        j.sync()
+        offsets.append(path.stat().st_size)
+    j.close()
+    # flip one byte inside record 2's body: CRC must end the prefix there,
+    # dropping record 3 as well (framing after rot is untrusted)
+    data = bytearray(path.read_bytes())
+    data[offsets[2] + 14] ^= 0xFF
+    path.write_bytes(bytes(data))
+    recs, valid, dropped = journal_mod.scan_file(path)
+    assert [r.seq for r in recs] == [0, 1]
+    assert valid == offsets[2] and dropped == len(data) - offsets[2]
+
+
+def test_journal_truncate_and_policies(tmp_path):
+    with pytest.raises(ValueError):
+        journal_mod.OpJournal(tmp_path / "x.bin", fsync="sometimes")
+    j = journal_mod.OpJournal(tmp_path / "j.bin", fsync="flush")
+    j.append(ops_mod.OP_QUERY, seq=0, aux={"n": 1})
+    j.truncate()
+    assert (tmp_path / "j.bin").stat().st_size == 0
+    j.reset(meta={"fingerprint": "fp"})
+    recs, _, _ = journal_mod.scan_file(tmp_path / "j.bin")
+    assert [r.code for r in recs] == [ops_mod.JR_META]
+    assert recs[0].aux == {"fingerprint": "fp"}
+
+
+def test_scan_missing_file_is_empty(tmp_path):
+    recs, valid, dropped = journal_mod.scan_file(tmp_path / "nope.bin")
+    assert recs == [] and valid == 0 and dropped == 0
+
+
+# ---------------------------------------------------------------------------
+# the deterministic matrix stream — a pure function of the op index
+# ---------------------------------------------------------------------------
+
+N_OPS = 60
+FLUSH_EVERY = 7
+SAVE_EVERY = 20
+SCHEDULE = "iidiq"  # per-op kind, cycled
+
+
+def _vec(t):
+    return np.random.default_rng(1000 + t).normal(size=(5, DIM)).astype(
+        np.float32)
+
+
+def _del_ids(t):
+    return np.random.default_rng(2000 + t).integers(
+        0, CAP, size=3).astype(np.int32)
+
+
+def _probe_q(seed=5):
+    return np.random.default_rng(seed).normal(size=(4, DIM)).astype(
+        np.float32)
+
+
+def _events(sess, t):
+    """Flush/save events attached to op ``t`` (run after it)."""
+    if (t + 1) % FLUSH_EVERY == 0:
+        sess.flush()
+    if (t + 1) % SAVE_EVERY == 0:
+        sess.save(t + 1)
+
+
+def _run_stream(sess, start=0):
+    """Drive ops ``start..N_OPS-1``; on resume, first re-run the *events*
+    of op ``start-1`` — a kill inside them may have lost the flush/save
+    (both are idempotent when replayed against the recovered state)."""
+    if start > 0:
+        _events(sess, start - 1)
+    for t in range(start, N_OPS):
+        kind = SCHEDULE[t % len(SCHEDULE)]
+        if kind == "i":
+            sess.insert(_vec(t))
+        elif kind == "d":
+            sess.delete(_del_ids(t))
+        else:
+            sess.query(_vec(t)[:2])
+        _events(sess, t)
+    sess.flush()
+    return sess
+
+
+def _state_summary(sess, probe=True):
+    """Snapshot for bit-exactness asserts.
+
+    ``probe=False`` for want/got pairs that straddle a recovery: a probe
+    query on a journaled session is itself journaled (it advances the op
+    key chain), so issuing one on the *want* side would shift every later
+    key on the recovered side. The matrix tests keep the probe — both
+    sides run it at the same op counter, so it compares like-for-like.
+    """
+    st = sess.state
+    out = {
+        "arrays": {f: np.asarray(getattr(st, f)) for f in
+                   ("adj", "vectors", "codes", "scales",
+                    "alive", "present", "masked")},
+        "capacity": st.capacity,
+        "op_counter": sess._op_counter,
+        "consolidate_counter": sess._consolidate_counter,
+    }
+    if probe:
+        ids, scores = sess.query(_probe_q(), k=10).result()
+        out["probe"] = (np.asarray(ids), np.asarray(scores))
+    return out
+
+
+def _assert_bit_identical(a, b, label):
+    assert a["capacity"] == b["capacity"], label
+    assert a["op_counter"] == b["op_counter"], label
+    assert a["consolidate_counter"] == b["consolidate_counter"], label
+    for f, arr in a["arrays"].items():
+        np.testing.assert_array_equal(
+            arr, b["arrays"][f], err_msg=f"{label}: state.{f} diverged")
+    if "probe" in a and "probe" in b:
+        np.testing.assert_array_equal(a["probe"][0], b["probe"][0],
+                                      err_msg=f"{label}: probe ids")
+        np.testing.assert_array_equal(a["probe"][1], b["probe"][1],
+                                      err_msg=f"{label}: probe scores")
+
+
+@pytest.fixture(scope="module")
+def control(tmp_path_factory):
+    """Uninterrupted run: (final summary, per-crash-point hit counts)."""
+    d = tmp_path_factory.mktemp("ctrl")
+    probe_plan = faults.FaultPlan()  # crashes nothing, counts everything
+    with faults.inject(probe_plan):
+        sess = _run_stream(Session(_params(), seed=3, checkpoint_dir=d))
+    return _state_summary(sess), dict(probe_plan.hits)
+
+
+def test_stream_covers_every_session_crash_point(control):
+    """The matrix is only meaningful if the stream actually reaches every
+    registered kill site — growth, consolidation, saves and flushes all
+    have to fire."""
+    _, hits = control
+    missing = [p for p in faults.SESSION_CRASH_POINTS if not hits.get(p)]
+    assert not missing, f"stream never reached crash points: {missing}"
+
+
+@pytest.mark.parametrize("point", faults.SESSION_CRASH_POINTS)
+def test_kill_and_recover_bit_exact(point, control, tmp_path):
+    """Acceptance: kill at the middle occurrence of every registered crash
+    point, recover, resume — final state bit-identical to the control."""
+    ctrl_summary, hits = control
+    hit = (hits[point] + 1) // 2
+    plan = faults.crash_once(point, hit=hit)
+    sess = Session(_params(), seed=3, checkpoint_dir=tmp_path)
+    with faults.inject(plan):
+        with pytest.raises(faults.SimulatedCrash):
+            _run_stream(sess)
+    assert plan.log, "the armed crash never fired"
+    del sess  # device state dies with the process; disk is all that's left
+
+    rec = Session.recover(tmp_path, _params(), seed=3)
+    assert rec.recovery_info is not None and not rec.recovering
+    start = rec._op_counter
+    assert 0 <= start <= N_OPS
+    _run_stream(rec, start=start)
+    _assert_bit_identical(_state_summary(rec), ctrl_summary,
+                          f"crash at {point}#{hit}")
+
+
+def test_double_crash_recover(control, tmp_path):
+    """A second kill before the next checkpoint recovers from the SAME disk
+    state: replayed records stay in the journal until a save truncates."""
+    ctrl_summary, hits = control
+    plan = faults.crash_once("post-journal-append",
+                             hit=(hits["post-journal-append"] + 1) // 2)
+    sess = Session(_params(), seed=3, checkpoint_dir=tmp_path)
+    with faults.inject(plan):
+        with pytest.raises(faults.SimulatedCrash):
+            _run_stream(sess)
+    rec1 = Session.recover(tmp_path, _params(), seed=3)
+    start1 = rec1._op_counter
+    # run a handful of ops, then "crash" again (just drop the session)
+    plan2 = faults.crash_once("post-journal-append", hit=4)
+    with faults.inject(plan2):
+        with pytest.raises(faults.SimulatedCrash):
+            _run_stream(rec1, start=start1)
+    del rec1
+    rec2 = Session.recover(tmp_path, _params(), seed=3)
+    _run_stream(rec2, start=rec2._op_counter)
+    _assert_bit_identical(_state_summary(rec2), ctrl_summary, "double crash")
+
+
+# ---------------------------------------------------------------------------
+# harness + degradation details
+# ---------------------------------------------------------------------------
+
+def test_explicit_consolidate_and_grow_are_journaled(tmp_path):
+    """Explicit maintenance is part of the timeline: a crash right after an
+    explicit consolidate()/grow() must replay both."""
+    p = _params(consolidate_threshold=None)  # no auto passes
+    sess = Session(p, seed=1, checkpoint_dir=tmp_path)
+    ids = sess.insert(_vec(0)).result()
+    sess.delete(ids[:3])
+    sess.consolidate()
+    sess.grow(2 * CAP)
+    sess.insert(_vec(1))
+    sess.flush()
+    want = _state_summary(sess, probe=False)
+    del sess
+
+    rec = Session.recover(tmp_path, p, seed=1)
+    info = rec.recovery_info
+    assert info["step"] is None and info["n_replayed"] >= 5
+    _assert_bit_identical(_state_summary(rec, probe=False), want,
+                          "explicit maintenance")
+
+
+def test_recover_without_checkpoint_replays_from_empty(tmp_path):
+    sess = Session(_params(), seed=2, checkpoint_dir=tmp_path)
+    sess.insert(_vec(3))
+    sess.query(_vec(4)[:2])
+    sess.flush()
+    want = _state_summary(sess, probe=False)
+    del sess
+    rec = Session.recover(tmp_path, _params(), seed=2)
+    assert rec.recovery_info["step"] is None
+    _assert_bit_identical(_state_summary(rec, probe=False), want,
+                          "no-checkpoint recover")
+
+
+def test_recover_falls_back_past_corrupt_checkpoint(tmp_path):
+    """A garbled newest checkpoint degrades recovery (older step + longer
+    replay), it does not end it."""
+    sess = Session(_params(), seed=4, checkpoint_dir=tmp_path)
+    sess.insert(_vec(10))
+    sess.save(1)
+    sess.insert(_vec(11))
+    sess.save(2)
+    sess.insert(_vec(12))
+    sess.flush()
+    del sess
+    # rot the newest step's shard: CRC validation must reject it
+    shard = tmp_path / "step_000000000002" / "shard_0.npz"
+    shard.write_bytes(shard.read_bytes()[:100])
+    rec = Session.recover(tmp_path, _params(), seed=4)
+    assert rec.recovery_info["step"] == 1
+    # the journal was truncated at save(2), so the ops between save(1) and
+    # save(2) are genuinely lost with the corrupt step — the recovered
+    # timeline is the save(1) prefix, and the journaled post-save(2)
+    # suffix (insert seq=2, flush seq=3) is a dead timeline: counted as
+    # unreplayable, not applied. What must still hold: recovery succeeds,
+    # the loss is surfaced, and the session accepts new ops.
+    assert rec._op_counter == 1  # one insert before save(1)
+    assert rec.recovery_info["n_unreplayable"] == 2
+    rec.insert(_vec(13))
+    rec.flush()
+    # the gapped suffix was discarded for a fresh timeline: a second
+    # recovery must replay cleanly, not trip over stale records
+    del rec
+    rec2 = Session.recover(tmp_path, _params(), seed=4)
+    assert rec2.recovery_info["n_unreplayable"] == 0
+    assert rec2._op_counter == 2
+
+
+def test_journal_fingerprint_guard(tmp_path):
+    sess = Session(_params(), seed=0, checkpoint_dir=tmp_path)
+    sess.insert(_vec(0))
+    sess.flush()
+    del sess
+    other = _params(consolidate_threshold=0.5)
+    with pytest.raises(ValueError, match="fingerprint"):
+        Session.recover(tmp_path, other, seed=0)
+
+
+def test_transient_flush_failures_retry_with_backoff(tmp_path):
+    sess = Session(_params(), seed=0, flush_retries=3,
+                   flush_backoff_s=1e-4)
+    sess.insert(_vec(0))
+    with faults.inject(faults.transient("flush", count=2)):
+        sess.flush()
+    assert sess.timers.n_retries == 2
+    # exhaustion re-raises: more consecutive failures than retries
+    sess.insert(_vec(1))
+    with faults.inject(faults.transient("flush", count=10)):
+        with pytest.raises(faults.TransientDispatchError):
+            sess.flush()
+
+
+def test_crash_point_registry_is_closed():
+    with pytest.raises(ValueError):
+        faults.crash_point("not-a-registered-point")
+    with pytest.raises(ValueError):
+        faults.crash_once("also-not-registered")
+    # plans don't nest
+    with faults.inject(faults.FaultPlan()):
+        with pytest.raises(RuntimeError):
+            with faults.inject(faults.FaultPlan()):
+                pass
+
+
+def test_random_plan_is_seed_deterministic():
+    a = faults.random_plan(123)
+    b = faults.random_plan(123)
+    c = faults.random_plan(124)
+    assert a.crashes == b.crashes
+    assert (a.crashes != c.crashes) or True  # different seed may collide
+    (pt, hit), = a.crashes.items()
+    assert pt in faults.SESSION_CRASH_POINTS and hit >= 1
+
+
+def test_nonfinite_insert_rows_rejected_and_counted():
+    sess = Session(_params(), seed=0)
+    v = _vec(20)
+    v[1, 3] = np.nan
+    v[3, 0] = np.inf
+    ids = sess.insert(v).result()
+    assert ids.shape == (5,)
+    assert ids[1] == NULL and ids[3] == NULL
+    assert (ids[[0, 2, 4]] >= 0).all()
+    assert sess.timers.n_rejected == 2
+    assert sess.timers.n_inserts == 3
+    # an all-rejected batch still consumes exactly one op key
+    before = sess._op_counter
+    ids2 = sess.insert(np.full((2, DIM), np.nan, np.float32)).result()
+    assert (ids2 == NULL).all() and sess.timers.n_rejected == 4
+    assert sess._op_counter == before + 1
+    sess.flush()
+
+
+def test_rejection_replays_identically(tmp_path):
+    """NaN rows are journaled raw and re-rejected on replay — the recovered
+    key chain and state match the original."""
+    sess = Session(_params(), seed=6, checkpoint_dir=tmp_path)
+    v = _vec(21)
+    v[0, 0] = np.nan
+    sess.insert(v)
+    sess.insert(_vec(22))
+    sess.flush()
+    want = _state_summary(sess, probe=False)
+    del sess
+    rec = Session.recover(tmp_path, _params(), seed=6)
+    assert rec.timers.n_rejected == 1
+    _assert_bit_identical(_state_summary(rec, probe=False), want,
+                          "rejection replay")

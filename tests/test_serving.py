@@ -208,3 +208,69 @@ def test_consolidate_reference_is_exception_safe():
     # the rolled-back index is fully functional: the real pass still drains
     assert consolidate(idx, strategy="global") == 35
     assert masked_fraction(idx.state) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# graceful degradation (DESIGN.md §11): shedding, deadlines, readiness
+# ---------------------------------------------------------------------------
+
+def test_bounded_queue_sheds_overload():
+    from repro.serving.batcher import ServerOverloadError
+
+    ft = _FakeTime()
+    srv = _server(ServeConfig(max_batch=4, k=3, max_queue=3), ft)
+    for _ in range(3):
+        srv.submit(np.zeros(8, np.float32))
+    with pytest.raises(ServerOverloadError):
+        srv.submit(np.zeros(8, np.float32))
+    assert srv.stats["shed_overload"] == 1
+    assert len(srv._queue) == 3, "the shed request must not occupy a slot"
+    # draining frees capacity: admission recovers
+    out = srv.step()
+    assert len(out) == 3
+    srv.submit(np.zeros(8, np.float32))
+    assert srv.stats["shed_overload"] == 1
+
+
+def test_per_request_deadline_expires_stale_entries():
+    ft = _FakeTime()
+    srv = _server(
+        ServeConfig(max_batch=4, max_wait_s=0.0, k=3, deadline_s=0.01), ft)
+    stale = srv.submit(np.zeros(8, np.float32))
+    ft.now += 0.02  # the request ages past its deadline while queued
+    fresh = srv.submit(np.ones(8, np.float32))
+    out = srv.step()
+    assert fresh in out and stale not in out
+    assert srv.failed[stale] == "deadline"
+    assert srv.stats["shed_deadline"] == 1
+    ids, _ = out[fresh]
+    assert ids.shape == (3,)
+
+
+def test_readiness_gate_rejects_until_recovered():
+    from repro.serving.batcher import ServerNotReadyError
+
+    ft = _FakeTime()
+    srv = _server(ServeConfig(max_batch=4, k=3), ft)
+    assert srv.ready
+    srv.set_ready(False)
+    with pytest.raises(ServerNotReadyError):
+        srv.submit(np.zeros(8, np.float32))
+    srv.set_ready(True)
+    srv.submit(np.zeros(8, np.float32))
+    assert len(srv.step()) == 1
+
+
+def test_readiness_tracks_session_recovery_flag():
+    """A server wrapping a recovering session reports not-ready without any
+    explicit wiring: `ready` consults session.recovering."""
+    from repro.serving.batcher import ServerNotReadyError
+
+    ft = _FakeTime()
+    srv = _server(ServeConfig(max_batch=4, k=3), ft)
+    srv.session.recovering = True
+    assert not srv.ready
+    with pytest.raises(ServerNotReadyError):
+        srv.submit(np.zeros(8, np.float32))
+    srv.session.recovering = False
+    assert srv.ready

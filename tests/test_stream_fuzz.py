@@ -563,3 +563,87 @@ def test_consolidate_handle_reports_compacted_slots():
     got = np.sort(np.asarray(handle.result()))
     np.testing.assert_array_equal(got, victims)
     sess.flush()
+
+
+# ---------------------------------------------------------------------------
+# kill-and-recover fuzz (DESIGN.md §11): seeded random crash schedules over
+# a deterministic mixed stream — whatever fires, the resumed run must land
+# bit-identical to the uninterrupted control
+# ---------------------------------------------------------------------------
+
+from repro.testing import faults  # noqa: E402
+
+F_OPS = 40
+F_FLUSH = 6
+F_SAVE = 15
+
+
+def _f_vec(t):
+    return np.random.default_rng(7000 + t).normal(size=(4, DIM)).astype(
+        np.float32)
+
+
+def _f_dels(t):
+    return np.random.default_rng(8000 + t).integers(
+        0, CAP, size=4).astype(np.int32)
+
+
+def _f_events(sess, t):
+    if (t + 1) % F_FLUSH == 0:
+        sess.flush()
+    if (t + 1) % F_SAVE == 0:
+        sess.save(t + 1)
+
+
+def _f_run(sess, start=0):
+    # on resume, re-run the (idempotent) events of the last replayed op —
+    # a kill inside them may have lost the flush/save
+    if start > 0:
+        _f_events(sess, start - 1)
+    for t in range(start, F_OPS):
+        kind = "iidq"[t % 4]
+        if kind == "i":
+            sess.insert(_f_vec(t))
+        elif kind == "d":
+            sess.delete(_f_dels(t))
+        else:
+            sess.query(_f_vec(t)[:2])
+        _f_events(sess, t)
+    sess.flush()
+
+
+def _f_summary(sess):
+    st = sess.state
+    return (np.asarray(st.adj), np.asarray(st.vectors),
+            np.asarray(st.alive), np.asarray(st.present),
+            st.capacity, sess._op_counter)
+
+
+@pytest.mark.parametrize("seed", [11, 12, 13, 14])
+def test_kill_recover_fuzz(seed, tmp_path):
+    """random_plan arms one session crash point at a random occurrence; if
+    it fires mid-stream, recover + resume and demand the control state.
+    (Plans whose armed occurrence the stream never reaches simply complete
+    — that run degenerates to a journal-overhead-only differential.)"""
+    params = _params(consolidate_threshold=0.25)
+    ctrl = Session(params, seed=5, checkpoint_dir=tmp_path / "ctrl")
+    _f_run(ctrl)
+    want = _f_summary(ctrl)
+
+    plan = faults.random_plan(seed)
+    sess = Session(params, seed=5, checkpoint_dir=tmp_path / "kill")
+    crashed = False
+    with faults.inject(plan):
+        try:
+            _f_run(sess)
+        except faults.SimulatedCrash:
+            crashed = True
+    if crashed:
+        del sess  # the device state dies with the "process"
+        sess = Session.recover(tmp_path / "kill", params, seed=5)
+        _f_run(sess, start=sess._op_counter)
+    got = _f_summary(sess)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(g, w, err_msg=str(plan.crashes))
+    errs = check_invariants(sess.state)
+    assert not errs, errs[:5]
