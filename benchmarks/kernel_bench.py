@@ -36,6 +36,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import gc
 import json
 import pathlib
 import time
@@ -60,6 +61,7 @@ DEFAULT_OUT = _ROOT / "BENCH_search.json"
 DEFAULT_UPDATE_OUT = _ROOT / "BENCH_update.json"
 DEFAULT_STREAM_OUT = _ROOT / "BENCH_stream.json"
 DEFAULT_RECOVER_OUT = _ROOT / "BENCH_recover.json"
+DEFAULT_TIER_OUT = _ROOT / "BENCH_tier.json"
 
 
 def _time(f, *args, iters=3):
@@ -1167,6 +1169,259 @@ def run_recovery(smoke: bool = False) -> dict:
     return record
 
 
+def run_tiered(smoke: bool = False) -> dict:
+    """Two-tier index bench (DESIGN.md §12): fan-out tax vs one big session.
+
+    The same mixed 4i:4q:1d stream (by item count: 32 inserts, 32 query
+    rows, 8 deletes per round) drives a ``TieredSession`` and a single
+    big mask-strategy ``Session`` over the same logical items. Asserted
+    (CI smoke runs this):
+
+      · tiered query throughput ≥ 0.95x the single session's — the
+        price of the two-tier fan-out + dedup union stays under 5%;
+      · tiered recall@10 within 0.02 of the single session's;
+      · a kill in the middle of a streaming merge (drain phase) recovers
+        bit-exact from checkpoint + journal replay.
+
+    Also recorded: p50/p99 fan-out query latency, merge counters, and the
+    merge-time share of the run.
+    """
+    import shutil
+    import tempfile
+
+    from repro.core import IndexParams, MaintenanceParams, SearchParams, \
+        Session, TieredSession
+    from repro.core.graph import NULL
+    from repro.testing import faults
+
+    dim, pool, k = 64, 64, 10
+    rounds = 8 if smoke else 24
+    ins_b, del_b, q_rows, q_ops = 32, 8, 16, 2   # 4i : 4q : 1d per round
+    base_n = 512 if smoke else 2048
+    cap = base_n + rounds * ins_b + 64
+    fresh_cap = 64
+
+    def mk_maintenance(tiered):
+        if tiered:
+            return MaintenanceParams(
+                strategy="mask", insert_chunk=32, delete_chunk=16,
+                merge_fresh_threshold=0.5, merge_tombstone_threshold=0.25,
+                merge_chunk=32, max_capacity=2 * cap)
+        return MaintenanceParams(
+            strategy="mask", insert_chunk=32, delete_chunk=16,
+            consolidate_threshold=0.3, max_capacity=2 * cap)
+
+    def mk_params(tiered):
+        return IndexParams(
+            capacity=cap, dim=dim, d_out=8,
+            search=SearchParams(pool_size=pool, max_steps=3 * pool,
+                                num_starts=2),
+            maintenance=mk_maintenance(tiered))
+
+    rng0 = np.random.default_rng(0)
+    base = rng0.normal(size=(base_n, dim)).astype(np.float32)
+    evalq = rng0.normal(size=(64, dim)).astype(np.float32)
+
+    def build(tiered):
+        if tiered:
+            s = TieredSession(mk_params(True), fresh_capacity=fresh_cap,
+                              seed=0)
+            for lo in range(0, base_n, fresh_cap):   # fresh-sized waves
+                s.insert(base[lo:lo + fresh_cap]).result()
+        else:
+            s = Session(mk_params(False), seed=0)
+            s.insert(base).result()
+        s.flush()
+        return s
+
+    def mk_driver(s):
+        """Split stream driver: (mutate_fn, query_fn, query-latency list)."""
+        id_log = [i for i in range(base_n)]
+        q_lat = []
+
+        def mutate(r):
+            rng = np.random.default_rng(500 + r)
+            ids = s.insert(
+                rng.normal(size=(ins_b, dim)).astype(np.float32)).result()
+            id_log.extend(int(i) for i in np.asarray(ids) if i != NULL)
+            pos = rng.integers(0, len(id_log), size=del_b)
+            s.delete(np.asarray([id_log[p] for p in pos], np.int32))
+            # settle the round's mutation + merge device work before the
+            # timed queries: the floor is about the *fan-out tax* on query
+            # service, not about merge work parked in the async dispatch
+            # queue (that cost is reported separately as merge_s/n_merges)
+            s.flush()
+
+        def one_query(r, j):
+            rng = np.random.default_rng(700 + 10 * r + j)
+            q = rng.normal(size=(q_rows, dim)).astype(np.float32)
+            t0 = time.perf_counter()
+            s.query(q, k=k).result()
+            q_lat.append(time.perf_counter() - t0)
+
+        return mutate, one_query, q_lat
+
+    # The two streams run interleaved — mutations round-by-round, then the
+    # round's query ops in adjacent tiered/single pairs with alternating
+    # order — so machine drift (frequency scaling, background load, GC)
+    # hits both equally. The asserted ratio is the median of the paired
+    # per-op ratios; a back-to-back layout regularly skews the pair by
+    # 10-20% either way on a busy host.
+    warm_t = mk_driver(build(True))        # compile warmup, untimed
+    warm_b = mk_driver(build(False))
+    for r in range(rounds):
+        for d in (warm_t, warm_b):
+            d[0](r)
+            for j in range(q_ops):
+                d[1](r, j)
+
+    tier_sess = build(True)
+    big_sess = build(False)
+    tier_mut, tier_q, tier_lat = mk_driver(tier_sess)
+    big_mut, big_q, big_lat = mk_driver(big_sess)
+    gc.collect()
+    gc_was_on = gc.isenabled()
+    gc.disable()
+    try:
+        for r in range(rounds):
+            tier_mut(r)
+            big_mut(r)
+            for j in range(q_ops):
+                if (r + j) % 2 == 0:
+                    tier_q(r, j)
+                    big_q(r, j)
+                else:
+                    big_q(r, j)
+                    tier_q(r, j)
+    finally:
+        if gc_was_on:
+            gc.enable()
+    tier_lat = np.asarray(tier_lat)
+    big_lat = np.asarray(big_lat)
+
+    tier_recall = tier_sess.recall(evalq, k=k)
+    tier_stats = tier_sess.stats()
+    tier_timers = tier_sess.timers.to_dict()
+    big_recall = big_sess.recall(evalq, k=k)
+
+    n_q = rounds * q_ops * q_rows
+    tier_qps = n_q / float(tier_lat.sum())
+    big_qps = n_q / float(big_lat.sum())
+    ratio = float(np.median(big_lat / tier_lat))
+    assert ratio >= 0.95, (
+        f"tiered query throughput {tier_qps:.0f} q/s is {ratio:.2f}x the "
+        f"single session's {big_qps:.0f} q/s — the ≥0.95x floor is blown")
+    assert tier_recall >= big_recall - 0.02, (
+        f"tiered recall@{k} {tier_recall:.3f} more than 0.02 below the "
+        f"single session's {big_recall:.3f}")
+
+    # mid-merge crash: kill in the drain phase of a live merge, recover
+    # from checkpoint + journal, resume — both tiers must land bit-exact
+    # vs the uninterrupted control (the §12 acceptance check)
+    mdim, m_ops = 8, 24
+    mp = IndexParams(
+        capacity=96, dim=mdim, d_out=6,
+        search=SearchParams(pool_size=16, max_steps=48, num_starts=2),
+        maintenance=MaintenanceParams(
+            strategy="mask", insert_chunk=16, delete_chunk=16,
+            merge_fresh_threshold=0.5, merge_tombstone_threshold=0.25,
+            merge_chunk=8, max_capacity=384))
+
+    def m_run(ts, start=0):
+        for t in range(start, m_ops):
+            kind = "iidiq"[t % 5]
+            rng = np.random.default_rng(9000 + t)
+            if kind == "i":
+                ts.insert(rng.normal(size=(5, mdim)).astype(np.float32))
+            elif kind == "d":
+                hi = max(5 * (1 + 3 * t // 5), 1)
+                ts.delete(rng.integers(0, hi, size=3).astype(np.int32))
+            else:
+                ts.query(rng.normal(size=(2, mdim)).astype(np.float32), k=8)
+            if (t + 1) % 7 == 0:
+                ts.flush()
+        ts.flush()
+
+    def m_summary(ts):
+        out = []
+        for sess in (ts._fresh, ts._main):
+            st = sess.state
+            out += [np.asarray(st.adj), np.asarray(st.vectors),
+                    np.asarray(st.present), np.asarray(st.masked)]
+        return out, dict(ts._loc), (ts._op_counter, ts._merge_counter,
+                                    ts._merges_done)
+
+    probe = faults.FaultPlan()
+    with tempfile.TemporaryDirectory() as d, faults.inject(probe):
+        ctrl = TieredSession(mp, fresh_capacity=32, seed=3,
+                             checkpoint_dir=d)
+        m_run(ctrl)
+        want = m_summary(ctrl)
+        del ctrl
+    n_hits = probe.hits.get("merge-drain-step", 0)
+    assert n_hits > 0, "the crash stream never reached a drain step"
+    d = tempfile.mkdtemp(prefix="bench_tier_crash_")
+    try:
+        plan = faults.crash_once("merge-drain-step", hit=(n_hits + 1) // 2)
+        ts = TieredSession(mp, fresh_capacity=32, seed=3, checkpoint_dir=d)
+        try:
+            with faults.inject(plan):
+                m_run(ts)
+            raise AssertionError("armed mid-merge crash never fired")
+        except faults.SimulatedCrash:
+            pass
+        del ts
+        rec = TieredSession.recover(d, mp, fresh_capacity=32, seed=3)
+        m_run(rec, start=rec._op_counter)
+        got = m_summary(rec)
+        mid_merge_ok = (
+            all(np.array_equal(g, w) for g, w in zip(got[0], want[0]))
+            and got[1] == want[1] and got[2] == want[2])
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+    assert mid_merge_ok, "mid-merge crash recovery diverged from control"
+
+    record = {
+        "config": {
+            "dim": dim, "pool_size": pool, "k": k, "rounds": rounds,
+            "mix": f"per round: insert {ins_b} / query {q_ops}x{q_rows} "
+                   f"rows / delete {del_b}, one flush",
+            "base_n": base_n, "capacity": cap, "fresh_capacity": fresh_cap,
+            "smoke": smoke, "backend": jax.default_backend(),
+        },
+        "query_throughput": {
+            "tiered_q_per_s": tier_qps,
+            "single_session_q_per_s": big_qps,
+            "ratio": ratio,
+            "floor": 0.95,
+        },
+        "fanout_latency_s": {
+            "p50": float(np.percentile(tier_lat, 50)),
+            "p99": float(np.percentile(tier_lat, 99)),
+            "max": float(tier_lat.max()),
+            "single_session_p99": float(np.percentile(big_lat, 99)),
+        },
+        "recall_at_k": {
+            "tiered": float(tier_recall),
+            "single_session": float(big_recall),
+            "budget": 0.02,
+        },
+        "merge": {
+            "n_merges": tier_stats["n_merges"],
+            "n_merged": tier_stats["n_merged"],
+            "merge_s": tier_timers["merge_s"],
+            "n_refused": tier_stats["n_refused"],
+        },
+        "mid_merge_crash_bit_exact": bool(mid_merge_ok),
+    }
+    print(f"tiered: {tier_qps:.0f} q/s vs single {big_qps:.0f} q/s "
+          f"({ratio:.2f}x, floor 0.95) recall {tier_recall:.3f} vs "
+          f"{big_recall:.3f} p99 fan-out {record['fanout_latency_s']['p99'] * 1e3:.1f}ms "
+          f"merges={tier_stats['n_merges']} mid-merge crash "
+          f"{'bit-exact' if mid_merge_ok else 'DIVERGED'}")
+    return record
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
@@ -1182,6 +1437,9 @@ def main(argv=None):
     ap.add_argument("--recover-out", type=pathlib.Path,
                     default=DEFAULT_RECOVER_OUT,
                     help="where to write the durability/recovery record")
+    ap.add_argument("--tier-out", type=pathlib.Path,
+                    default=DEFAULT_TIER_OUT,
+                    help="where to write the two-tier index record")
     args = ap.parse_args(argv)
     kernel_rows = run(SMOKE_SHAPES if args.smoke else SHAPES)
     record = run_search(smoke=args.smoke)
@@ -1204,6 +1462,10 @@ def main(argv=None):
     args.recover_out.parent.mkdir(parents=True, exist_ok=True)
     args.recover_out.write_text(json.dumps(recover_record, indent=2) + "\n")
     print(f"wrote {args.recover_out}")
+    tier_record = run_tiered(smoke=args.smoke)
+    args.tier_out.parent.mkdir(parents=True, exist_ok=True)
+    args.tier_out.write_text(json.dumps(tier_record, indent=2) + "\n")
+    print(f"wrote {args.tier_out}")
 
 
 if __name__ == "__main__":

@@ -1,55 +1,69 @@
-"""Quickstart: stream queries, inserts and GLOBAL-reconnect deletes through
-one device-resident session, and watch recall survive the churn.
+"""Quickstart: stream queries, inserts and deletes through a TWO-TIER
+online index — a small exact fresh tier absorbing writes in front of a
+large device-resident main tier, with a streaming merge draining fresh
+items into main in bounded chunks behind the stream (DESIGN.md §12).
 
-The session API (DESIGN.md §7) dispatches every op asynchronously through a
-single jitted, state-donating step — ops return handles, the host syncs on
-``flush()`` / ``handle.result()``.
+Every op dispatches asynchronously and returns a handle; the host syncs on
+``flush()`` / ``handle.result()``. Queries fan out to both tiers — the
+device beam engine serves main, an exact host scan serves fresh — and the
+fan-in unions the two top-k lists by external id.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core import IndexParams, MaintenanceParams, SearchParams, Session
+from repro.core import (IndexParams, MaintenanceParams, SearchParams,
+                        TieredSession)
 
 rng = np.random.default_rng(0)
 
-# 1. a session starting at a 2k-slot capacity tier; max_capacity arms the
-#    growth engine (DESIGN.md §9) so net-positive insert traffic grows the
-#    index through geometric tiers instead of refusing once the tier fills
+# 1. the main tier starts at a 2k-slot capacity tier; max_capacity arms the
+#    growth engine (DESIGN.md §9) so merge drains grow it through geometric
+#    tiers instead of refusing. The merge_* thresholds arm the streaming-
+#    merge auto-trigger: once the fresh tier is half full (or main is 25%
+#    tombstones) the next mutation starts a merge that advances one bounded
+#    chunk per insert/delete — queries never wait on merge work.
 params = IndexParams(
     capacity=2048, dim=64, d_out=12,
     search=SearchParams(pool_size=32, max_steps=96, num_starts=2),
-    maintenance=MaintenanceParams(strategy="global",  # paper's recommendation
+    maintenance=MaintenanceParams(strategy="mask",  # main-tier tombstones
+                                  merge_fresh_threshold=0.5,
+                                  merge_tombstone_threshold=0.25,
                                   max_capacity=65536),
 )
-session = Session(params)
+session = TieredSession(params, fresh_capacity=256)
 
-# 2. insert a base set — `insert` returns a handle immediately; `.result()`
-#    blocks and hands back the assigned ids
+# 2. insert a base set in fresh-tier-sized waves — each wave lands in the
+#    fresh tier; auto-triggered merges drain earlier waves into main while
+#    later waves stream in (a wave outrunning the merge simply finishes the
+#    drain synchronously — deterministic backpressure, nothing refuses)
 X = rng.normal(size=(1000, 64)).astype(np.float32)
-ids = session.insert(X).result()
+ids = np.concatenate([
+    session.insert(X[lo:lo + 256]).result() for lo in range(0, 1000, 256)])
 print("inserted:", session.stats())
 
-# 3. query — same deal: dispatch now, consume whenever
+# 3. query — one fan-out over both tiers, deduplicated by external id
 Q = rng.normal(size=(64, 64)).astype(np.float32)
 found_ids, scores = session.query(Q, k=10).result()
 print(f"recall@10 before churn: {session.recall(Q, k=10):.3f}")
 
-# 4. online churn: delete 200 + insert 200 fresh, dispatched back-to-back
-#    with ONE synchronization point — GLOBAL reconnect repairs the
-#    in-neighbors of every deleted vertex by re-searching the graph
+# 4. online churn: deletes route by residency — fresh-resident ids
+#    hard-delete from the small tier, main-resident ids become tombstones
+#    in main's mask bitmap and are reclaimed by the next merge's
+#    compaction phase
 session.delete(ids[:200])
 session.insert(rng.normal(size=(200, 64)).astype(np.float32))
 session.flush()
 print(f"recall@10 after churn:  {session.recall(Q, k=10):.3f}")
 
-# 5. net growth: push past the 2048-slot tier — the session grows to the
-#    next tier at the insert boundary (one recompile), nothing refuses
-session.insert(rng.normal(size=(1500, 64)).astype(np.float32))
+# 5. net growth: keep streaming past the main tier's 2048 slots — merge
+#    drains grow the main tier at the chunk boundary (one recompile per
+#    tier), the fresh tier never grows (merge catch-up is its backpressure)
+for lo in range(0, 1500, 250):
+    session.insert(rng.normal(size=(250, 64)).astype(np.float32))
+session.flush()
 st = session.stats()
-print(f"after net growth: capacity={st['capacity']} "
-      f"n_grows={st['n_grows']} n_refused={st['n_refused']}")
+print(f"after net growth: n_alive={st['n_alive']} "
+      f"main_capacity={st['main_capacity']} n_merges={st['n_merges']} "
+      f"n_refused={st['n_refused']}")
 print("timers:", session.timers.to_dict())
-
-# 6. the per-op facade (`IPGMIndex`) keeps the seed API working and is
-#    parity-tested bit-exact against the session — see tests/test_session.py

@@ -8,8 +8,10 @@ break ``from repro.core import consolidate as consolidate_mod`` imports.
 from repro.core.graph import NULL, GraphState, graph_stats, init_graph
 from repro.core.maintenance import IPGMIndex, run_workload
 from repro.core.ops import OpBatch, apply_ops, apply_ops_step
+from repro.core.merge import StreamingMerge
 from repro.core.params import IndexParams, MaintenanceParams, SearchParams
 from repro.core.session import OpHandle, PhaseTimers, Session
+from repro.core.tiered import TieredOpHandle, TieredSession
 
 __all__ = [
     "NULL",
@@ -22,6 +24,9 @@ __all__ = [
     "MaintenanceParams",
     "SearchParams",
     "Session",
+    "StreamingMerge",
+    "TieredOpHandle",
+    "TieredSession",
     "OpHandle",
     "OpBatch",
     "PhaseTimers",

@@ -99,6 +99,7 @@ def _finalize_removal(
         present=present,
         codes=jnp.where(dead[:, None], 0, state.codes),
         scales=jnp.where(dead, 0.0, state.scales),
+        stamps=jnp.where(dead, -1, state.stamps),  # invariant I6
     )
 
 

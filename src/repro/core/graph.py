@@ -26,6 +26,11 @@ Invariants maintained by every public op (property-tested in
       that writes ``vectors`` quantizes in the same transaction; every path
       that frees a slot scrubs its codes (``vectors`` of freed slots keep
       stale bytes — codes do not, so the invariant is checkable).
+  I6  insertion stamps: every *present* slot carries the monotone stamp it
+      was assigned at insertion (``0 ≤ stamps[i] < clock``); every
+      non-present slot has ``stamps[i] == -1``. Stamps order slots by
+      insertion age (merge drain order, OP_REFINE staleness pick) and are
+      scrubbed — never recycled — when a slot is freed.
 """
 from __future__ import annotations
 
@@ -44,7 +49,7 @@ NULL = -1  # padding id for empty adjacency entries
     jax.tree_util.register_dataclass,
     data_fields=[
         "vectors", "sqnorms", "codes", "scales", "adj", "radj", "alive",
-        "present", "size",
+        "present", "size", "stamps", "clock",
     ],
     meta_fields=["capacity", "dim", "d_out", "d_in", "metric"],
 )
@@ -62,6 +67,8 @@ class GraphState:
     alive: jax.Array     # bool[capacity]           reportable as a result
     present: jax.Array   # bool[capacity]           traversable (alive | masked)
     size: jax.Array      # i32                      number of alive slots
+    stamps: jax.Array    # i32[capacity]            insertion stamp (-1 = empty)
+    clock: jax.Array     # i32                      next stamp to hand out
     # --- static metadata ---
     capacity: int
     dim: int
@@ -97,6 +104,8 @@ def init_graph(
         alive=jnp.zeros((capacity,), bool),
         present=jnp.zeros((capacity,), bool),
         size=jnp.asarray(0, jnp.int32),
+        stamps=jnp.full((capacity,), -1, jnp.int32),
+        clock=jnp.asarray(0, jnp.int32),
         capacity=capacity,
         dim=dim,
         d_out=d_out,
@@ -147,6 +156,7 @@ def grow_state(state: GraphState, new_capacity: int, *, axis: int = 0) -> GraphS
         radj=pad(state.radj, NULL),
         alive=pad(state.alive, False),
         present=pad(state.present, False),
+        stamps=pad(state.stamps, -1),
         capacity=new_capacity,
     )
 
@@ -503,6 +513,7 @@ def free_slots(state: GraphState, ids: jax.Array, valid: jax.Array) -> GraphStat
         state, alive=alive, present=present,
         codes=jnp.where(freed[:, None], 0, state.codes),
         scales=jnp.where(freed, 0.0, state.scales),
+        stamps=jnp.where(freed, -1, state.stamps),
         size=state.size - n_freed.astype(jnp.int32),
     )
 

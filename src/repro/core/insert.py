@@ -109,6 +109,10 @@ def insert_one(
             jnp.where(ok, True, state.present[slot])
         ),
         size=state.size + ok.astype(jnp.int32),
+        stamps=state.stamps.at[slot].set(
+            jnp.where(ok, state.clock, state.stamps[slot])
+        ),
+        clock=state.clock + ok.astype(jnp.int32),
     )
 
     def do_connect(st: GraphState) -> GraphState:
@@ -204,6 +208,11 @@ def insert_batch_impl(
         alive=state.alive.at[wslots].set(True, mode="drop"),
         present=state.present.at[wslots].set(True, mode="drop"),
         size=state.size + jnp.sum(ok).astype(jnp.int32),
+        # stamps follow allocation rank, so batch order == sequential order
+        stamps=state.stamps.at[wslots].set(
+            state.clock + alloc_rank, mode="drop"
+        ),
+        clock=state.clock + jnp.sum(ok).astype(jnp.int32),
     )
 
     # ---- phase 4: vmapped SELECT-NEIGHBORS with intra-batch candidates ----

@@ -87,15 +87,21 @@ JR_META = 16
 JR_FLUSH = 17
 JR_CONSOLIDATE = 18
 JR_GROW = 19
+JR_MERGE = 20  # explicit TieredSession merge (core/merge.py, DESIGN.md §12)
 
 JR_NAMES = {JR_META: "meta", JR_FLUSH: "flush",
-            JR_CONSOLIDATE: "consolidate!", JR_GROW: "grow!"}
+            JR_CONSOLIDATE: "consolidate!", JR_GROW: "grow!",
+            JR_MERGE: "merge!"}
 
 # PRNG stream id of the consolidation key chain (DESIGN.md §8): maintenance
 # keys are folded from fold_in(base_key, CONSOLIDATE_KEY_STREAM) + their own
 # counter, NEVER from the op-key chain — auto-triggered consolidations must
 # not shift the keys (and therefore the results) of subsequent stream ops.
 CONSOLIDATE_KEY_STREAM = 0x7FFFFFFF
+# PRNG stream id of the tiered streaming-merge key chain (DESIGN.md §12):
+# same isolation contract as consolidation — merge timing must never shift
+# the key chains (hence the results) of either tier's logical op stream.
+MERGE_KEY_STREAM = 0x7FFFFFFE
 
 
 @functools.partial(

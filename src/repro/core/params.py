@@ -74,6 +74,15 @@ class MaintenanceParams:
     consolidate_chunk: int | None = None        # None → delete_chunk
     growth_factor: float = 2.0                  # geometric capacity tier step
     max_capacity: int | None = None             # auto-grow ceiling; None = fixed
+    # streaming-merge trigger gate (TieredSession, DESIGN.md §12): a merge
+    # starts when the fresh tier's alive count crosses
+    # ``merge_fresh_threshold`` × fresh capacity, or the main tier's
+    # tombstone count crosses ``merge_tombstone_threshold`` × present count.
+    # ``None`` disables that arm of the gate; ``merge_chunk`` is the items-
+    # per-step drain/compact width (None → insert_chunk — one shape family).
+    merge_fresh_threshold: float | None = None
+    merge_tombstone_threshold: float | None = None
+    merge_chunk: int | None = None
 
     def __post_init__(self):
         assert self.insert_chunk >= 1 and self.delete_chunk >= 1
@@ -83,6 +92,11 @@ class MaintenanceParams:
         assert self.consolidate_chunk is None or self.consolidate_chunk >= 1
         assert self.growth_factor > 1.0
         assert self.max_capacity is None or self.max_capacity >= 1
+        assert (self.merge_fresh_threshold is None
+                or 0.0 < self.merge_fresh_threshold <= 1.0)
+        assert (self.merge_tombstone_threshold is None
+                or 0.0 < self.merge_tombstone_threshold <= 1.0)
+        assert self.merge_chunk is None or self.merge_chunk >= 1
 
 
 @dataclasses.dataclass(frozen=True)

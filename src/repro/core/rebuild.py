@@ -77,6 +77,13 @@ def bulk_knn_build(
         alive=state.alive.at[:n].set(valid),
         present=state.present.at[:n].set(valid),
         size=jnp.sum(valid).astype(jnp.int32),
+        # stamps follow row order — the same age order a sequential build
+        # of these rows would assign (invariant I6)
+        stamps=state.stamps.at[:n].set(
+            jnp.where(valid,
+                      jnp.cumsum(valid.astype(jnp.int32)) - 1, -1)
+        ),
+        clock=jnp.sum(valid).astype(jnp.int32),
     )
 
     # exact kNN (self + dead excluded)

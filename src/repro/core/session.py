@@ -98,6 +98,7 @@ class PhaseTimers:
     rebuild_s: float = 0.0
     consolidate_s: float = 0.0   # host dispatch + trigger sync of §8 passes
     grow_s: float = 0.0          # §9 capacity-tier moves (pad dispatch)
+    merge_s: float = 0.0         # §12 tiered streaming-merge steps
     flush_s: float = 0.0
     wall_s: float = 0.0
     n_queries: int = 0
@@ -109,12 +110,14 @@ class PhaseTimers:
     n_grows: int = 0             # capacity-tier moves (≙ op-step recompiles)
     n_rejected: int = 0          # insert rows rejected at dispatch (NaN/Inf)
     n_retries: int = 0           # transient dispatch failures absorbed (§11)
+    n_merges: int = 0            # streaming merges completed (§12)
+    n_merged: int = 0            # fresh-tier items drained into main (§12)
     n_ops: int = 0
 
     def total(self) -> float:
         return (self.query_s + self.insert_s + self.delete_s
                 + self.rebuild_s + self.consolidate_s + self.grow_s
-                + self.flush_s)
+                + self.merge_s + self.flush_s)
 
     def to_dict(self) -> dict:
         d = dataclasses.asdict(self)

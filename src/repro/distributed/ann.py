@@ -113,6 +113,19 @@ def _shard_index(axes) -> jax.Array:
     return idx
 
 
+def topk_union(flat_scores: jax.Array, flat_ids: jax.Array,
+               k: int) -> tuple[jax.Array, jax.Array]:
+    """Merge concatenated partial top-k lists into one top-k per row.
+
+    ``flat_scores``/``flat_ids``: [B, m·k] candidates from m sources
+    (higher score = better; invalid lanes carry -inf / NULL). The fan-in
+    tail shared by the sharded query merge below and the two-tier fan-out
+    union (``core/tiered.py``).
+    """
+    top_s, idx = jax.lax.top_k(flat_scores, k)
+    return top_s, jnp.take_along_axis(flat_ids, idx, axis=1)
+
+
 def make_query_step(dp: DistParams, mesh):
     """Build the jitted distributed query step.
 
@@ -130,8 +143,7 @@ def make_query_step(dp: DistParams, mesh):
         m, B, _ = all_s.shape
         flat_s = jnp.transpose(all_s, (1, 0, 2)).reshape(B, -1)
         flat_i = jnp.transpose(all_i, (1, 0, 2)).reshape(B, -1)
-        top_s, idx = jax.lax.top_k(flat_s, k)
-        return top_s, jnp.take_along_axis(flat_i, idx, axis=1)
+        return topk_union(flat_s, flat_i, k)
 
     stride = dp.gid_stride()
 
@@ -277,6 +289,7 @@ def init_specs_tree(dp: DistParams) -> GraphState:
         codes=z(1, cap, dim), scales=z(1, cap),
         adj=z(1, cap, dp.index.d_out), radj=z(1, cap, dp.index.eff_d_in),
         alive=z(1, cap), present=z(1, cap), size=z(1),
+        stamps=z(1, cap), clock=z(1),
         capacity=cap, dim=dim, d_out=dp.index.d_out,
         d_in=dp.index.eff_d_in, metric=dp.index.metric,
     )

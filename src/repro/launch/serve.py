@@ -16,7 +16,13 @@ import time
 
 import numpy as np
 
-from repro.core import IndexParams, MaintenanceParams, SearchParams, Session
+from repro.core import (
+    IndexParams,
+    MaintenanceParams,
+    SearchParams,
+    Session,
+    TieredSession,
+)
 from repro.data.workload import make_workload
 
 
@@ -35,6 +41,8 @@ def serve_online(
     checkpoint_dir: str | None = None,
     checkpoint_every: int = 0,
     recover: bool = False,
+    tiered: bool = False,
+    fresh_capacity: int | None = None,
 ) -> list[dict]:
     wl = make_workload(
         dataset, n_base=n_base, n_steps=n_steps, batch_size=batch_size,
@@ -42,10 +50,20 @@ def serve_online(
     )
     dim = wl.base.shape[1]
     capacity = n_base + n_steps * batch_size + 16
+    maintenance = MaintenanceParams(strategy=strategy)
+    if tiered:
+        # two-tier serving (DESIGN.md §12): inserts land in a small fresh
+        # tier, deletes of main-resident points tombstone, and the
+        # streaming merge drains fresh→main one chunk per op
+        fresh_capacity = fresh_capacity or max(2 * batch_size, 256)
+        maintenance = MaintenanceParams(
+            strategy="mask", merge_fresh_threshold=0.5,
+            merge_tombstone_threshold=0.25,
+            max_capacity=2 * capacity)
     params = IndexParams(
         capacity=capacity, dim=dim, d_out=d_out,
         search=SearchParams(pool_size=pool, max_steps=3 * pool, num_starts=2),
-        maintenance=MaintenanceParams(strategy=strategy),
+        maintenance=maintenance,
     )
     if recover:
         # crash restart: newest complete checkpoint + journal replay
@@ -53,8 +71,13 @@ def serve_online(
         if checkpoint_dir is None:
             raise ValueError("--recover requires --checkpoint-dir")
         t0 = time.perf_counter()
-        session = Session.recover(
-            checkpoint_dir, params, strategy=strategy, seed=seed)
+        if tiered:
+            session = TieredSession.recover(
+                checkpoint_dir, params, fresh_capacity=fresh_capacity,
+                seed=seed)
+        else:
+            session = Session.recover(
+                checkpoint_dir, params, strategy=strategy, seed=seed)
         info = session.recovery_info or {}
         print(
             f"recovered from {checkpoint_dir}: step={info.get('step')} "
@@ -63,6 +86,9 @@ def serve_online(
             f"dropped {info.get('dropped_bytes', 0)}B torn tail) "
             f"in {time.perf_counter() - t0:.2f}s"
         )
+    elif tiered:
+        session = TieredSession(params, fresh_capacity=fresh_capacity,
+                                seed=seed, checkpoint_dir=checkpoint_dir)
     else:
         # a checkpoint_dir arms the write-ahead journal automatically, so
         # every acknowledged op survives a crash up to the fsync policy
@@ -77,9 +103,17 @@ def serve_online(
     else:
         print(f"building base index ({n_base} × d={dim}) ...")
         t0 = time.perf_counter()
-        ids = session.insert(wl.base).result()
+        if tiered:
+            # a fresh tier only holds fresh_capacity rows at once: bulk-load
+            # in fresh-sized waves, the merge engine drains between them
+            id_map = []
+            for lo in range(0, n_base, fresh_capacity):
+                ids = session.insert(wl.base[lo:lo + fresh_capacity]).result()
+                id_map.extend(ids)
+        else:
+            ids = session.insert(wl.base).result()
+            id_map = list(np.asarray(ids))   # pool position → graph id
         session.flush()
-        id_map = list(np.asarray(ids))   # pool position → graph id
         print(f"  built in {time.perf_counter() - t0:.1f}s")
 
     records = []
@@ -130,6 +164,11 @@ def main() -> None:
     ap.add_argument("--recover", action="store_true",
                     help="restart from checkpoint-dir: newest complete "
                          "checkpoint + journal replay (DESIGN.md §11)")
+    ap.add_argument("--tiered", action="store_true",
+                    help="serve through the two-tier index (fresh tier + "
+                         "streaming merge, DESIGN.md §12)")
+    ap.add_argument("--fresh-capacity", type=int, default=None,
+                    help="fresh-tier slot count (tiered mode only)")
     args = ap.parse_args()
     serve_online(
         dataset=args.dataset, strategy=args.strategy, n_base=args.scale,
@@ -138,6 +177,8 @@ def main() -> None:
         checkpoint_dir=args.checkpoint_dir,
         checkpoint_every=args.checkpoint_every,
         recover=args.recover,
+        tiered=args.tiered,
+        fresh_capacity=args.fresh_capacity,
     )
 
 

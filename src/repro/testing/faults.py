@@ -53,7 +53,15 @@ SHARDED_CRASH_POINTS = (
     "sharded-pre-grow",       # lockstep capacity migration about to start
     "sharded-post-grow",      # migrated mesh state live
 )
-CRASH_POINTS = SESSION_CRASH_POINTS + SHARDED_CRASH_POINTS
+TIERED_CRASH_POINTS = (
+    "merge-begin",            # merge journaled/armed, snapshot not yet taken
+    "merge-compact-step",     # between main-tier tombstone compaction chunks
+    "merge-drain-step",       # between fresh→main drain chunks
+    "pre-merge-swap",         # drain done, fresh slots not yet released
+    "post-merge-swap",        # tier swap applied, caller not yet resumed
+)
+CRASH_POINTS = (SESSION_CRASH_POINTS + SHARDED_CRASH_POINTS
+                + TIERED_CRASH_POINTS)
 _CRASH_POINT_SET = frozenset(CRASH_POINTS)
 
 

@@ -11,3 +11,5 @@ def rng():
 
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running end-to-end tests")
+    config.addinivalue_line(
+        "markers", "examples: subprocess smoke over examples/ scripts")

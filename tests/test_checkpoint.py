@@ -322,3 +322,112 @@ def test_all_steps_corrupt_aggregates(tmp_path):
     (tmp_path / "step_000000000001" / "shard_0.npz").unlink()
     with pytest.raises(CheckpointCorruptError, match="every checkpoint"):
         mgr.restore(None, jax.tree.map(jnp.zeros_like, t))
+
+
+# ---------------------------------------------------------------------------
+# cross-tier checkpoints (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+def _tiered_params():
+    from repro.core import IndexParams, MaintenanceParams, SearchParams
+
+    return IndexParams(
+        capacity=128, dim=8, d_out=6,
+        search=SearchParams(pool_size=16, max_steps=48, num_starts=2),
+        maintenance=MaintenanceParams(
+            strategy="mask", insert_chunk=16, delete_chunk=16,
+            max_capacity=512,
+        ),
+    )
+
+
+def _tiered_tail(ts, rng):
+    """Post-checkpoint tail: drain the fresh tier, reuse slots, query."""
+    n = ts.merge()
+    tail_ids = ts.insert(
+        rng.normal(size=(10, 8)).astype(np.float32)).result()
+    q_ids, q_scores = ts.query(
+        rng.normal(size=(12, 8)).astype(np.float32), k=8).result()
+    ts.flush()
+    return (n, tail_ids, q_ids, q_scores,
+            np.asarray(ts.main.state.adj), np.asarray(ts.main.state.present),
+            np.asarray(ts.fresh.state.adj),
+            np.asarray(ts.fresh.state.present),
+            ts._fm.ext.copy(), ts._mm.ext.copy(), dict(ts._loc))
+
+
+def test_tiered_checkpoint_roundtrip(tmp_path):
+    """Save with both tiers populated and main tombstones pending → restore
+    → merge is bit-exact vs never having checkpointed: both graphs, the
+    slot→ext maps, the location table, and ALL key chains (per-tier op
+    counters + the merge counter) resume."""
+    from repro.core import TieredSession
+
+    def build(ckpt_dir):
+        rng = np.random.default_rng(9)
+        ts = TieredSession(_tiered_params(), fresh_capacity=32, seed=5,
+                           checkpoint_dir=ckpt_dir)
+        ids = ts.insert(rng.normal(size=(30, 8)).astype(np.float32)).result()
+        ts.merge()                   # main-resident now
+        ts.delete(ids[:8])           # pending main tombstones
+        ids2 = ts.insert(rng.normal(size=(12, 8))
+                         .astype(np.float32)).result()
+        ts.delete(ids2[:3])          # fresh hard-deletes
+        ts.flush()
+        return ts, rng
+
+    ts_a, rng_a = build(tmp_path / "a")
+    ts_a.save(step=1)
+    out_a = _tiered_tail(ts_a, rng_a)
+
+    ts_b, rng_b = build(tmp_path / "b")    # identical, never checkpointed
+    out_b = _tiered_tail(ts_b, rng_b)
+    for a, b in zip(out_a, out_b):
+        if isinstance(a, dict):
+            assert a == b
+        else:
+            np.testing.assert_array_equal(a, b)
+
+    # fresh process restores A's checkpoint, replays the same tail
+    rng_c = np.random.default_rng(9)
+    rng_c.normal(size=(30, 8))
+    rng_c.normal(size=(12, 8))
+    ts_c = TieredSession(_tiered_params(), fresh_capacity=32, seed=5,
+                         checkpoint_dir=tmp_path / "a")
+    assert ts_c.restore() == 1
+    ts_c.check_mirrors()            # mirrors rebuilt exactly from the ckpt
+    out_c = _tiered_tail(ts_c, rng_c)
+    for a, c in zip(out_a, out_c):
+        if isinstance(a, dict):
+            assert a == c
+        else:
+            np.testing.assert_array_equal(a, c)
+    assert out_c[0] == 9            # 12 fresh - 3 deleted drained post-restore
+
+
+def test_tiered_checkpoint_guards(tmp_path):
+    """Fingerprint covers the tier split: a different fresh_capacity or a
+    shrunk main capacity must refuse to restore."""
+    import dataclasses
+
+    from repro.core import TieredSession
+
+    p = _tiered_params()
+    ts = TieredSession(p, fresh_capacity=32, seed=0,
+                       checkpoint_dir=tmp_path)
+    ts.insert(np.random.default_rng(0).normal(size=(20, 8))
+              .astype(np.float32))
+    ts.save(step=1)
+    other = TieredSession(p, fresh_capacity=64, seed=0,
+                          checkpoint_dir=tmp_path)
+    with pytest.raises(ValueError, match="fingerprint"):
+        other.restore()
+    # a saved main capacity below the configured initial capacity means the
+    # checkpoint cannot host this configuration's graph — refused (the
+    # other direction, saved >= configured, restores and re-pins, exactly
+    # like Session's growth semantics)
+    bigger = TieredSession(
+        dataclasses.replace(p, capacity=512), fresh_capacity=32, seed=0,
+        checkpoint_dir=tmp_path)
+    with pytest.raises(ValueError, match="below this"):
+        bigger.restore()

@@ -1,0 +1,42 @@
+"""Subprocess smoke over the runnable examples (CI's examples job).
+
+Each example runs as the user would run it — a fresh interpreter with
+``PYTHONPATH=src`` — so import breakage, API drift, and top-level crashes
+in examples/ fail CI even when no unit test imports the touched module.
+Marked ``examples`` so CI can run the set standalone (``-m examples``).
+"""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+_ROOT = Path(__file__).resolve().parent.parent
+
+
+def _run_example(script: str, *args: str) -> subprocess.CompletedProcess:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(_ROOT / "src")
+    return subprocess.run(
+        [sys.executable, str(_ROOT / "examples" / script), *args],
+        capture_output=True, text=True, timeout=900, env=env, check=False)
+
+
+@pytest.mark.examples
+def test_quickstart_runs():
+    proc = _run_example("quickstart.py")
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    # the two-tier quickstart must demonstrate merges and refuse nothing
+    assert "recall@10" in proc.stdout
+    assert "n_refused=0" in proc.stdout
+
+
+@pytest.mark.examples
+def test_online_ann_serving_runs():
+    proc = _run_example("online_ann_serving.py", "--scale", "300",
+                        "--steps", "2")
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    # both strategies must complete their streams
+    assert "strategy: global" in proc.stdout
+    assert "strategy: mask" in proc.stdout

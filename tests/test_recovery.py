@@ -449,3 +449,191 @@ def test_rejection_replays_identically(tmp_path):
     assert rec.timers.n_rejected == 1
     _assert_bit_identical(_state_summary(rec, probe=False), want,
                           "rejection replay")
+
+
+# ---------------------------------------------------------------------------
+# the tiered crash matrix (DESIGN.md §12): kill mid-merge, recover bit-exact
+# ---------------------------------------------------------------------------
+#
+# Same recipe as the session matrix, over a TieredSession with both
+# auto-merge trigger arms live: the deterministic stream fills the fresh
+# tier (fresh-fraction arm) and tombstones main-resident points (tombstone
+# arm), so merges start, compact, drain and swap *interleaved with the op
+# stream* via the one-pump-per-op rule. Merge progress is a pure function
+# of the acknowledged op stream, so recovery must land bit-exactly even
+# when the kill happens in the middle of a drain — both tiers' arrays, the
+# ext→location table and every counter are compared. Explicit merges are
+# deliberately absent from the matrix stream (they are journaled as
+# JR_MERGE and replayed; re-running one on resume would double it) — the
+# dedicated test below covers JR_MERGE replay.
+
+from repro.core import TieredSession  # noqa: E402
+
+T_N_OPS = 48
+T_SCHEDULE = "iidiqdiq"   # per-op kind, cycled — half inserts
+T_FLUSH_EVERY = 7
+T_SAVE_EVERY = 19
+T_FRESH = 32
+
+
+def _t_params():
+    return _params(merge_fresh_threshold=0.5,
+                   merge_tombstone_threshold=0.25,
+                   merge_chunk=8)
+
+
+def _t_n_ext(t):
+    """External ids assigned before op ``t`` (pure function of the index)."""
+    return 5 * sum(1 for s in range(t)
+                   if T_SCHEDULE[s % len(T_SCHEDULE)] == "i")
+
+
+def _t_del(t):
+    hi = max(_t_n_ext(t), 1)
+    return np.random.default_rng(3000 + t).integers(
+        0, hi, size=3).astype(np.int32)
+
+
+def _t_events(ts, t):
+    if (t + 1) % T_FLUSH_EVERY == 0:
+        ts.flush()
+    if (t + 1) % T_SAVE_EVERY == 0:
+        ts.save(t + 1)
+
+
+def _run_tiered_stream(ts, start=0):
+    if start > 0:
+        _t_events(ts, start - 1)
+    for t in range(start, T_N_OPS):
+        kind = T_SCHEDULE[t % len(T_SCHEDULE)]
+        if kind == "i":
+            ts.insert(_vec(t))
+        elif kind == "d":
+            ts.delete(_t_del(t))
+        else:
+            ts.query(_vec(t)[:2], k=8)
+        _t_events(ts, t)
+    ts.flush()
+    return ts
+
+
+_T_FIELDS = ("adj", "vectors", "codes", "scales",
+             "alive", "present", "masked", "stamps")
+
+
+def _tiered_summary(ts, probe=True):
+    out = {"tiers": {}}
+    for name, sess in (("fresh", ts._fresh), ("main", ts._main)):
+        st = sess.state
+        out["tiers"][name] = (
+            {f: np.asarray(getattr(st, f)) for f in _T_FIELDS},
+            st.capacity, sess._op_counter)
+    out["loc"] = dict(ts._loc)
+    out["counters"] = (ts._op_counter, ts._merge_counter,
+                       ts._merges_done, ts._next_ext)
+    out["ext"] = (ts._fm.ext.copy(), ts._mm.ext.copy())
+    if probe:
+        ids, sc = ts.query(_probe_q(), k=10).result()
+        out["probe"] = (np.asarray(ids), np.asarray(sc))
+    return out
+
+
+def _assert_tiered_identical(a, b, label):
+    assert a["counters"] == b["counters"], label
+    assert a["loc"] == b["loc"], label
+    for side in ("tiers",):
+        for name in ("fresh", "main"):
+            arrs_a, cap_a, opc_a = a[side][name]
+            arrs_b, cap_b, opc_b = b[side][name]
+            assert cap_a == cap_b, f"{label}: {name} capacity"
+            assert opc_a == opc_b, f"{label}: {name} op counter"
+            for f, arr in arrs_a.items():
+                np.testing.assert_array_equal(
+                    arr, arrs_b[f], err_msg=f"{label}: {name}.{f} diverged")
+    for got, want in zip(a["ext"], b["ext"]):
+        np.testing.assert_array_equal(got, want, err_msg=f"{label}: ext map")
+    if "probe" in a and "probe" in b:
+        np.testing.assert_array_equal(a["probe"][0], b["probe"][0],
+                                      err_msg=f"{label}: probe ids")
+        np.testing.assert_array_equal(a["probe"][1], b["probe"][1],
+                                      err_msg=f"{label}: probe scores")
+
+
+@pytest.fixture(scope="module")
+def tiered_control(tmp_path_factory):
+    d = tmp_path_factory.mktemp("tctrl")
+    probe_plan = faults.FaultPlan()
+    with faults.inject(probe_plan):
+        ts = _run_tiered_stream(TieredSession(
+            _t_params(), fresh_capacity=T_FRESH, seed=3, checkpoint_dir=d))
+    return _tiered_summary(ts), dict(probe_plan.hits)
+
+
+def test_tiered_stream_covers_every_merge_crash_point(tiered_control):
+    _, hits = tiered_control
+    missing = [p for p in faults.TIERED_CRASH_POINTS if not hits.get(p)]
+    assert not missing, f"stream never reached crash points: {missing}"
+
+
+@pytest.mark.parametrize(
+    "point",
+    list(faults.TIERED_CRASH_POINTS)
+    + ["post-journal-append", "post-checkpoint-save"],
+)
+def test_tiered_kill_and_recover_bit_exact(point, tiered_control, tmp_path):
+    """Acceptance (§12): kill at the middle occurrence of every merge-phase
+    crash point (plus the durability points the tiered layer fires),
+    recover, resume — both tiers bit-identical to the control."""
+    ctrl_summary, hits = tiered_control
+    hit = (hits[point] + 1) // 2
+    plan = faults.crash_once(point, hit=hit)
+    ts = TieredSession(_t_params(), fresh_capacity=T_FRESH, seed=3,
+                       checkpoint_dir=tmp_path)
+    with faults.inject(plan):
+        with pytest.raises(faults.SimulatedCrash):
+            _run_tiered_stream(ts)
+    assert plan.log, "the armed crash never fired"
+    del ts
+
+    rec = TieredSession.recover(tmp_path, _t_params(),
+                                fresh_capacity=T_FRESH, seed=3)
+    assert rec.recovery_info is not None and not rec.recovering
+    start = rec._op_counter
+    assert 0 <= start <= T_N_OPS
+    _run_tiered_stream(rec, start=start)
+    _assert_tiered_identical(_tiered_summary(rec), ctrl_summary,
+                             f"tiered crash at {point}#{hit}")
+
+
+def test_tiered_explicit_merge_is_journaled(tmp_path):
+    """An explicit ``merge()`` is part of the timeline (JR_MERGE): a crash
+    after it must replay the merge, landing on the same post-drain state."""
+    p = _t_params()
+    ts = TieredSession(p, fresh_capacity=T_FRESH, seed=7,
+                       checkpoint_dir=tmp_path)
+    ids = ts.insert(_vec(0)).result()
+    ts.insert(_vec(1))
+    ts.merge()                       # drain everything to main
+    ts.delete(ids[:2])               # tombstones the merged copies
+    ts.merge()                       # compacts them
+    ts.insert(_vec(2))
+    ts.flush()
+    want = _tiered_summary(ts, probe=False)
+    del ts
+
+    rec = TieredSession.recover(tmp_path, p, fresh_capacity=T_FRESH, seed=7)
+    assert rec.recovery_info["step"] is None
+    assert rec.recovery_info["n_replayed"] >= 6
+    _assert_tiered_identical(_tiered_summary(rec, probe=False), want,
+                             "explicit merge replay")
+
+
+def test_tiered_fingerprint_guard(tmp_path):
+    ts = TieredSession(_t_params(), fresh_capacity=T_FRESH, seed=0,
+                       checkpoint_dir=tmp_path)
+    ts.insert(_vec(0))
+    ts.flush()
+    del ts
+    with pytest.raises(ValueError, match="fingerprint"):
+        TieredSession.recover(tmp_path, _t_params(),
+                              fresh_capacity=2 * T_FRESH, seed=0)

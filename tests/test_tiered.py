@@ -1,0 +1,342 @@
+"""Two-tier index certification (DESIGN.md §12).
+
+Differential + invariance suite for :class:`TieredSession`:
+
+  · host-mirror parity — the tiered layer's present/masked/ext mirrors must
+    match the device bitmaps bit-exactly after any churn (they are what
+    routes ops and gates the merge, so drift would be silent corruption);
+  · external-id semantics vs a numpy oracle — upsert, cross-tier delete,
+    fan-out dedup: a live external id is reported at most once, with its
+    *newest* vector, no matter which tier(s) hold copies mid-merge;
+  · merge-timing invariance — the same logical stream under different merge
+    chunk sizes / trigger thresholds / explicit merge placement keeps the
+    identical acked-id sequence and alive set, and recall never drops below
+    the pinned floor after merges (the §8 consolidation guarantee class,
+    extended to the merge PRNG stream);
+  · per-tier key-chain uniformity — every public op consumes a fixed number
+    of per-tier op keys regardless of where its targets live, which is the
+    mechanism behind the invariance above.
+
+Configs stay small: every TieredSession here shares one geometry so the
+jitted op-switch compiles once per tier shape family for the module.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    NULL,
+    IndexParams,
+    MaintenanceParams,
+    SearchParams,
+    TieredSession,
+)
+
+DIM = 8
+CHUNK = 16
+CAP = 96
+FRESH = 32
+RECALL_FLOOR = 0.75  # measured min over the seeds below is 0.92; wide margin
+
+
+def _params(**maintenance_kw):
+    mkw = dict(strategy="mask", insert_chunk=CHUNK, delete_chunk=CHUNK,
+               max_capacity=4 * CAP)
+    mkw.update(maintenance_kw)
+    return IndexParams(
+        capacity=CAP, dim=DIM, d_out=6,
+        search=SearchParams(pool_size=16, max_steps=48, num_starts=2),
+        maintenance=MaintenanceParams(**mkw),
+    )
+
+
+def _session(seed=0, **maintenance_kw):
+    return TieredSession(_params(**maintenance_kw), fresh_capacity=FRESH,
+                         seed=seed)
+
+
+class ExtOracle:
+    """Ground truth keyed by *external* id: a dict of live vectors."""
+
+    def __init__(self):
+        self.vec: dict[int, np.ndarray] = {}
+
+    def upsert(self, ids, vecs):
+        for e, v in zip(np.asarray(ids).ravel(), np.asarray(vecs, np.float32)):
+            if e != NULL:
+                self.vec[int(e)] = v.copy()
+
+    def delete(self, ids):
+        for e in np.asarray(ids).ravel():
+            self.vec.pop(int(e), None)
+
+    def topk(self, queries, k):
+        if not self.vec:
+            return np.full((len(queries), k), NULL, np.int32)
+        ids = np.fromiter(self.vec.keys(), np.int32)
+        mat = np.stack([self.vec[int(e)] for e in ids])
+        d2 = ((mat[None] - np.asarray(queries, np.float32)[:, None]) ** 2
+              ).sum(-1)
+        order = np.argsort(d2, axis=1)[:, :k]
+        out = np.full((len(queries), k), NULL, np.int32)
+        out[:, :order.shape[1]] = ids[order]
+        return out
+
+    def recall(self, found, queries, k):
+        true = self.topk(queries, k)
+        hits = 0.0
+        for f, t in zip(np.asarray(found)[:, :k], true):
+            tset = set(int(x) for x in t if x != NULL)
+            if not tset:
+                continue
+            hits += len(set(int(x) for x in f if x != NULL) & tset) / len(tset)
+        return hits / max(len(queries), 1)
+
+
+def _vecs(seed, n):
+    return np.random.default_rng(seed).normal(size=(n, DIM)).astype(np.float32)
+
+
+def _drive(ts, oracle, seed, n_ops=30, explicit_merge_at=()):
+    """One seeded mixed stream; returns the acked-id transcript."""
+    rng = np.random.default_rng(seed)
+    acks = []
+    for t in range(n_ops):
+        r = rng.random()
+        if r < 0.45:
+            v = _vecs(seed * 1000 + t, int(rng.integers(1, 12)))
+            ids = ts.insert(v).result()
+            if oracle is not None:
+                oracle.upsert(ids, v)
+            acks.append(("i", ids.tolist()))
+        elif r < 0.65 and ts.n_alive > 4:
+            live = np.fromiter(sorted(ts._loc), np.int64)
+            pick = live[rng.integers(0, len(live),
+                                     size=int(rng.integers(1, 4)))]
+            ts.delete(pick).result()
+            if oracle is not None:
+                oracle.delete(pick)
+            acks.append(("d", sorted(set(pick.tolist()))))
+        else:
+            q = _vecs(seed * 7777 + t, 4)
+            ids, _ = ts.query(q, k=8).result()
+            acks.append(("q", None))
+        if t in explicit_merge_at:
+            ts.merge()
+        if t % 9 == 8:
+            ts.flush()
+    ts.flush()
+    return acks
+
+
+# ---------------------------------------------------------------------------
+# mirrors + basic semantics
+# ---------------------------------------------------------------------------
+
+def test_mirror_parity_after_churn():
+    ts = _session(seed=1, merge_fresh_threshold=0.6,
+                  merge_tombstone_threshold=0.3)
+    _drive(ts, None, seed=1, n_ops=40)
+    ts.check_mirrors()  # raises on any divergence
+    # alive ext set == location table == union of ext maps
+    exts = set(ts._fm.ext[ts._fm.ext != NULL].tolist()) | set(
+        ts._mm.ext[ts._mm.ext != NULL].tolist())
+    assert exts == set(ts._loc)
+
+
+def test_external_ids_are_monotone_and_stable():
+    ts = _session(seed=0, merge_fresh_threshold=0.6)
+    a = ts.insert(_vecs(0, 5)).result()
+    b = ts.insert(_vecs(1, 5)).result()
+    assert a.tolist() == [0, 1, 2, 3, 4]
+    assert b.tolist() == [5, 6, 7, 8, 9]
+    ts.merge()  # ids survive the tier move untouched
+    ids, _ = ts.query(_vecs(0, 5), k=4).result()
+    assert set(ids[:, 0].tolist()) <= set(range(10))
+
+
+def test_delete_routes_to_both_tiers():
+    ts = _session(seed=2, merge_fresh_threshold=None)
+    ids = ts.insert(_vecs(3, 20)).result()
+    ts.merge()                       # all 20 now main-resident
+    ids2 = ts.insert(_vecs(4, 6)).result()   # fresh-resident
+    ts.delete(np.concatenate([ids[:3], ids2[:2]])).result()
+    ts.flush()
+    st = ts.stats()
+    assert st["n_main_masked"] == 3   # main deletes tombstone
+    assert st["n_fresh"] == 4         # fresh deletes free immediately
+    assert ts.n_alive == 21
+    ts.check_mirrors()
+    # next merge's compaction reclaims the tombstones
+    ts.merge()
+    assert ts.stats()["n_main_masked"] == 0
+
+
+# ---------------------------------------------------------------------------
+# satellite 2: cross-tier duplicate-id / upsert semantics
+# ---------------------------------------------------------------------------
+
+def test_reinserted_id_never_surfaces_twice_nor_stale():
+    """Delete a main-resident id, re-insert the same external id with a new
+    vector: queries must report the id at most once and score the NEW
+    vector (the tombstoned main ghost must stay invisible)."""
+    ts = _session(seed=5, merge_fresh_threshold=None)
+    v_old = _vecs(50, 12)
+    ids = ts.insert(v_old).result()
+    ts.merge()                                   # main-resident now
+    target = int(ids[0])
+    ts.delete([target]).result()                 # tombstone in main
+    v_new = -v_old[0:1] * 3.0                    # far from the old vector
+    got = ts.insert(v_new, ids=[target]).result()
+    assert got.tolist() == [target]
+    q_ids, q_sc = ts.query(v_new, k=8).result()
+    row = q_ids[0].tolist()
+    assert row.count(target) == 1
+    # scored against the NEW vector (l2 score 2<x,q>-|x|^2; x=q → |q|^2),
+    # not the tombstoned old one (which would score 2<v_old,q>-|v_old|^2)
+    pos = row.index(target)
+    expect = float(np.sum(v_new[0] ** 2))
+    assert q_sc[0][pos] == pytest.approx(expect, rel=1e-4)
+    # the ghost's slot must also never resurface after compaction reuse
+    ts.merge()
+    q_ids, _ = ts.query(v_new, k=8).result()
+    assert q_ids[0].tolist().count(target) == 1
+    ts.check_mirrors()
+
+
+def test_upsert_same_tier_and_within_batch():
+    ts = _session(seed=6, merge_fresh_threshold=None)
+    ids = ts.insert(_vecs(60, 4)).result()
+    # upsert while still fresh-resident: same ext id, one live copy
+    got = ts.insert(_vecs(61, 1), ids=[int(ids[1])]).result()
+    assert got.tolist() == [int(ids[1])]
+    assert ts.n_alive == 4
+    # duplicate ids within one batch: last row wins, earlier superseded
+    v = _vecs(62, 3)
+    got = ts.insert(v, ids=[100, 100, 101]).result()
+    assert got.tolist() == [NULL, 100, 101]
+    ts.flush()
+    q_ids, q_sc = ts.query(v[1:2], k=8).result()
+    row = q_ids[0].tolist()
+    assert row.count(100) == 1
+    # the surviving copy is the LAST duplicate row, i.e. exactly v[1]
+    expect = float(np.sum(v[1] ** 2))
+    assert q_sc[0][row.index(100)] == pytest.approx(expect, rel=1e-4)
+    ts.check_mirrors()
+
+
+def test_mid_drain_duplicate_is_deduped():
+    """While an item is resident in BOTH tiers (drained, not yet swapped),
+    the fan-out union must still report it exactly once."""
+    ts = _session(seed=7, merge_fresh_threshold=None, merge_chunk=4)
+    v = _vecs(70, 10)
+    ts.insert(v).result()
+    # drive the merge by hand (not via _active_merge: query's pump must not
+    # advance it) and park it mid-drain
+    from repro.core.merge import DRAIN, StreamingMerge
+    m = StreamingMerge(ts)
+    while m.phase != DRAIN:
+        m.step()
+    m.step()  # drain one chunk → those items are now in both tiers
+    both = [e for e, loc in ts._loc.items() if loc[0] == "both"]
+    assert both, "expected mid-drain duplicates"
+    q_ids, _ = ts.query(v, k=10).result()
+    for row in q_ids:
+        live = [x for x in row.tolist() if x != NULL]
+        assert len(live) == len(set(live)), row
+    m.run()
+    ts.flush()
+    ts.check_mirrors()
+
+
+# ---------------------------------------------------------------------------
+# satellite 4: merge-timing invariance + recall floor (stream fuzz)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_stream_fuzz_differential_vs_oracle(seed):
+    ts = _session(seed=seed, merge_fresh_threshold=0.6,
+                  merge_tombstone_threshold=0.3)
+    oracle = ExtOracle()
+    _drive(ts, oracle, seed=seed, n_ops=36)
+    assert set(ts._loc) == set(oracle.vec)
+    q = _vecs(seed + 31337, 16)
+    ids, _ = ts.query(q, k=10).result()
+    rec = oracle.recall(ids, q, 10)
+    assert rec >= RECALL_FLOOR, rec
+    ts.check_mirrors()
+
+
+@pytest.mark.parametrize("seed", [0, 3])
+def test_merge_timing_invariance(seed):
+    """Identical logical stream, three merge policies: acked ids, the alive
+    ext set and the per-tier op-key counters must match exactly; recall
+    stays above the floor under every policy."""
+    configs = [
+        dict(merge_fresh_threshold=0.5, merge_tombstone_threshold=0.25),
+        dict(merge_fresh_threshold=0.9, merge_chunk=4),
+        dict(merge_fresh_threshold=None, merge_tombstone_threshold=None),
+    ]
+    merge_at = [(), (), (7, 19)]   # policy 3 merges explicitly instead
+    transcripts, alive_sets, counters, recalls = [], [], [], []
+    for kw, m_at in zip(configs, merge_at):
+        ts = _session(seed=seed, **kw)
+        oracle = ExtOracle()
+        acks = _drive(ts, oracle, seed=seed, n_ops=30,
+                      explicit_merge_at=m_at)
+        transcripts.append(acks)
+        alive_sets.append(set(ts._loc))
+        counters.append((ts._op_counter, ts._fresh._op_counter,
+                         ts._main._op_counter))
+        q = _vecs(seed + 999, 12)
+        ids, _ = ts.query(q, k=10).result()
+        recalls.append(oracle.recall(ids, q, 10))
+    assert transcripts[0] == transcripts[1] == transcripts[2]
+    assert alive_sets[0] == alive_sets[1] == alive_sets[2]
+    # per-tier key chains advance identically — merge work never touches
+    # them (MERGE_KEY_STREAM isolation, the mechanism behind the above)
+    assert counters[0] == counters[1] == counters[2]
+    assert min(recalls) >= RECALL_FLOOR, recalls
+
+
+# ---------------------------------------------------------------------------
+# growth + refusal accounting
+# ---------------------------------------------------------------------------
+
+def test_main_tier_grows_during_drain():
+    ts = _session(seed=8, merge_fresh_threshold=None)
+    for i in range(5):
+        ts.insert(_vecs(800 + i, FRESH)).result()
+        ts.merge()
+    assert ts.n_alive == 5 * FRESH
+    assert ts._main.state.capacity > CAP   # drain outgrew the initial tier
+    ts.check_mirrors()
+    q = _vecs(888, 8)
+    assert ts.recall(q, 10) >= RECALL_FLOOR
+
+
+def test_capped_merge_leaves_suffix_fresh_and_refuses_exactly():
+    p = _params(merge_fresh_threshold=None, max_capacity=CAP)
+    ts = TieredSession(p, fresh_capacity=FRESH, seed=9)
+    total = 0
+    for i in range(6):
+        ids = ts.insert(_vecs(900 + i, FRESH)).result()
+        total += int(np.sum(ids != NULL))
+        ts.merge()
+    ts.flush()
+    # every acked id is live; everything past main+fresh capacity refused
+    assert ts.n_alive == total
+    assert total <= CAP + FRESH
+    assert ts.timers.n_refused == 6 * FRESH - total
+    assert ts.stats()["main_capacity"] == CAP
+    ts.check_mirrors()
+
+
+def test_nan_rows_rejected_and_acked_null():
+    ts = _session(seed=10)
+    v = _vecs(1000, 4)
+    v[2, 0] = np.nan
+    ids = ts.insert(v).result()
+    assert ids[2] == NULL
+    assert sorted(x for x in ids.tolist() if x != NULL) == [0, 1, 3]
+    assert ts.timers.n_rejected == 1
+    assert ts.n_alive == 3
