@@ -1,0 +1,288 @@
+"""Adversarial deletion evaluation harness (ROADMAP item 1, DESIGN.md §13).
+
+Steady-state random churn — the stream-fuzz suites and the fig2 protocol —
+hides the delete-repair failure modes ("How Should We Evaluate Data Deletion
+in Graph-Based ANN Indexes?", 2025, PAPERS.md). This harness drives each
+delete strategy through three hostile scenarios and records what the
+averages hide:
+
+  clustered — whole k-means regions vanish per round (absorbs the seed's
+              fig3 pattern via ``make_workload(pattern="clustered")``): a
+              vector AND its nearest neighbors expire together, so repair
+              candidates local to the deleted region are themselves dying.
+  bursty    — delete a random batch, then immediately reinsert the same
+              vectors: the graph must re-absorb points whose old
+              neighborhoods were just torn out.
+  rolling   — rolling window: the oldest ``evict_frac`` of the index is
+              evicted every round and replaced with fresh arrivals, so every
+              vertex is eventually deleted and edge quality must survive
+              full turnover.
+
+Per (scenario, strategy) the harness records a recall@10-over-time curve,
+per-round update wall time (the repair-cost axis), and graph-connectivity
+stats (fraction of alive vertices reachable from a live entry point, average
+out-degree, tombstone share). Everything lands in ``BENCH_delete.json``.
+
+``--smoke`` runs a CI-sized config and asserts a per-strategy recall@10
+floor on the clustered scenario (the hard case) — a repair regression fails
+the CI step, not just a curve in an artifact.
+
+Usage: python benchmarks/adversarial_delete.py [--smoke] [--out PATH]
+       [--scenarios clustered bursty rolling]
+"""
+from __future__ import annotations
+
+import argparse
+import collections
+import dataclasses
+import json
+import pathlib
+import time
+
+import jax
+import numpy as np
+
+from repro.core import IndexParams, MaintenanceParams, SearchParams, Session
+from repro.core.graph import NULL
+from repro.data.synthetic import make_dataset
+from repro.data.workload import make_workload
+
+K = 10
+STRATEGIES = ("pure", "mask", "local", "global", "rwalk")
+SCENARIOS = ("clustered", "bursty", "rolling")
+
+DEFAULT_OUT = pathlib.Path(__file__).resolve().parents[1] / "bench-artifacts" \
+    / "BENCH_delete.json"
+
+# CI smoke gate: final-round clustered-scenario recall@10 floor per strategy.
+# Calibrated ~0.15 under observed smoke-config finals (pure/local/global/
+# rwalk ≈0.97, mask ≈0.94) so only a genuine repair regression — not
+# measurement noise — trips them. MASK floors lowest: tombstones dilute the
+# search pool as the masked share grows.
+CLUSTERED_RECALL_FLOOR = {
+    "pure": 0.80,
+    "mask": 0.75,
+    "local": 0.80,
+    "global": 0.80,
+    "rwalk": 0.80,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioConfig:
+    n_base: int
+    n_rounds: int
+    batch: int          # delete/insert batch per round (clustered/bursty)
+    n_queries: int
+    dim: int
+    d_out: int = 12
+    seed: int = 0
+    evict_frac: float = 0.01   # rolling window: share evicted per round
+
+
+SMOKE_CFG = ScenarioConfig(n_base=600, n_rounds=4, batch=100, n_queries=64,
+                           dim=16)
+FULL_CFG = ScenarioConfig(n_base=3000, n_rounds=8, batch=300, n_queries=256,
+                          dim=32)
+
+
+def connectivity_stats(state) -> dict:
+    """Host-side graph health: directed BFS (through *present* vertices —
+    tombstones are traversable) from one alive entry point, reporting the
+    fraction of alive vertices reached, plus degree/tombstone shares."""
+    adj = np.asarray(state.adj)
+    alive = np.asarray(state.alive)
+    present = np.asarray(state.present)
+    n_alive = int(alive.sum())
+    if n_alive == 0:
+        return {"reachable_frac": 1.0, "avg_out_degree": 0.0,
+                "masked_frac": 0.0, "n_alive": 0}
+    start = int(np.flatnonzero(alive)[0])
+    seen = np.zeros(len(alive), bool)
+    seen[start] = True
+    frontier = [start]
+    while frontier:
+        rows = adj[frontier].reshape(-1)
+        rows = rows[rows != NULL]
+        rows = rows[present[rows] & ~seen[rows]]
+        seen[rows] = True
+        frontier = np.unique(rows).tolist()
+    out_deg = (adj[alive] != NULL).sum(axis=1)
+    n_present = int(present.sum())
+    return {
+        "reachable_frac": float(seen[alive].mean()),
+        "avg_out_degree": float(out_deg.mean()),
+        "masked_frac": float((n_present - n_alive) / max(n_present, 1)),
+        "n_alive": n_alive,
+    }
+
+
+def _mk_session(strategy: str, capacity: int, cfg: ScenarioConfig) -> Session:
+    params = IndexParams(
+        capacity=capacity, dim=cfg.dim, d_out=cfg.d_out,
+        search=SearchParams(pool_size=32, max_steps=96, num_starts=2),
+        maintenance=MaintenanceParams(strategy=strategy,
+                                      insert_chunk=64, delete_chunk=64),
+    )
+    return Session(params, seed=cfg.seed)
+
+
+def _measure(sess: Session, queries: np.ndarray, rnd: int,
+             update_s: float) -> dict:
+    t0 = time.perf_counter()
+    recall = float(sess.recall(queries, K))
+    query_s = time.perf_counter() - t0
+    rec = {"round": rnd, "recall": recall, "update_s": round(update_s, 4),
+           "query_s": round(query_s, 4)}
+    rec.update(connectivity_stats(sess.state))
+    return rec
+
+
+def run_clustered(strategy: str, cfg: ScenarioConfig) -> list[dict]:
+    """Whole k-means regions vanish per round (the seed fig3 pattern)."""
+    wl = make_workload("sift", n_base=cfg.n_base, n_steps=cfg.n_rounds,
+                       batch_size=cfg.batch, n_queries=cfg.n_queries,
+                       pattern="clustered", seed=cfg.seed, dim=cfg.dim)
+    total = cfg.n_base + cfg.n_rounds * cfg.batch + 16
+    sess = _mk_session(strategy, total, cfg)
+    id_map = list(np.asarray(sess.insert(wl.base).result()))
+    queries = wl.queries
+    rounds = [_measure(sess, queries, 0, 0.0)]
+    for step in range(wl.n_steps):
+        t0 = time.perf_counter()
+        gids = np.asarray([id_map[p] for p in wl.step_deletes[step]])
+        sess.delete(gids)
+        id_map.extend(np.asarray(sess.insert(wl.step_inserts[step]).result()))
+        sess.flush()
+        rounds.append(_measure(sess, queries, step + 1,
+                               time.perf_counter() - t0))
+    return rounds
+
+
+def run_bursty(strategy: str, cfg: ScenarioConfig) -> list[dict]:
+    """Delete a random batch, immediately reinsert the same vectors."""
+    rng = np.random.default_rng(cfg.seed + 10)
+    X = make_dataset("sift", cfg.n_base + cfg.n_queries, seed=cfg.seed + 1,
+                     dim=cfg.dim)
+    base, queries = X[:cfg.n_base], X[cfg.n_base:]
+    # every round re-adds the burst, so MASK's dead slots accumulate
+    total = cfg.n_base + cfg.n_rounds * cfg.batch + 16
+    sess = _mk_session(strategy, total, cfg)
+    live = list(np.asarray(sess.insert(base).result()))
+    vec_of = {int(s): base[i] for i, s in enumerate(live)}
+    rounds = [_measure(sess, queries, 0, 0.0)]
+    for rnd in range(cfg.n_rounds):
+        pick = rng.choice(len(live), size=cfg.batch, replace=False)
+        burst_ids = np.asarray([live[i] for i in pick])
+        burst_vecs = np.stack([vec_of[int(s)] for s in burst_ids])
+        t0 = time.perf_counter()
+        sess.delete(burst_ids)
+        new_ids = np.asarray(sess.insert(burst_vecs).result())
+        sess.flush()
+        update_s = time.perf_counter() - t0
+        # two-phase: drop ALL old ids before adding the new ones — with
+        # hard-delete strategies a freed slot is recycled within the same
+        # burst, so a new id can collide with another vector's old id
+        for s in burst_ids:
+            vec_of.pop(int(s), None)
+        for i, (p, s) in enumerate(zip(pick, new_ids)):
+            live[p] = int(s)
+            vec_of[int(s)] = burst_vecs[i]
+        rounds.append(_measure(sess, queries, rnd + 1, update_s))
+    return rounds
+
+
+def run_rolling(strategy: str, cfg: ScenarioConfig) -> list[dict]:
+    """Rolling window: evict the oldest ``evict_frac`` share per round."""
+    evict = max(1, int(cfg.n_base * cfg.evict_frac))
+    n_rounds = cfg.n_rounds * 2  # small per-round batches: run longer
+    rng = np.random.default_rng(cfg.seed + 20)
+    X = make_dataset("sift", cfg.n_base + n_rounds * evict + cfg.n_queries,
+                     seed=cfg.seed + 2, dim=cfg.dim)
+    base = X[:cfg.n_base]
+    fresh = X[cfg.n_base:cfg.n_base + n_rounds * evict]
+    queries = X[cfg.n_base + n_rounds * evict:]
+    total = cfg.n_base + n_rounds * evict + 16
+    sess = _mk_session(strategy, total, cfg)
+    fifo = collections.deque(np.asarray(sess.insert(base).result()).tolist())
+    rounds = [_measure(sess, queries, 0, 0.0)]
+    for rnd in range(n_rounds):
+        oldest = np.asarray([fifo.popleft() for _ in range(evict)])
+        t0 = time.perf_counter()
+        sess.delete(oldest)
+        arr = fresh[rnd * evict:(rnd + 1) * evict]
+        fifo.extend(np.asarray(sess.insert(arr).result()).tolist())
+        sess.flush()
+        rounds.append(_measure(sess, queries, rnd + 1,
+                               time.perf_counter() - t0))
+    del rng
+    return rounds
+
+
+_SCENARIO_FNS = {
+    "clustered": run_clustered,
+    "bursty": run_bursty,
+    "rolling": run_rolling,
+}
+
+
+def run_all(*, smoke: bool = False,
+            scenarios: tuple[str, ...] = SCENARIOS,
+            strategies: tuple[str, ...] = STRATEGIES) -> dict:
+    cfg = SMOKE_CFG if smoke else FULL_CFG
+    record: dict = {
+        "smoke": smoke,
+        "backend": jax.default_backend(),
+        "config": dataclasses.asdict(cfg),
+        "k": K,
+        "scenarios": {},
+    }
+    for scen in scenarios:
+        record["scenarios"][scen] = {}
+        for strat in strategies:
+            rounds = _SCENARIO_FNS[scen](strat, cfg)
+            total_update = sum(r["update_s"] for r in rounds)
+            record["scenarios"][scen][strat] = {
+                "rounds": rounds,
+                "recall_curve": [r["recall"] for r in rounds],
+                "total_update_s": round(total_update, 4),
+                "final_reachable_frac": rounds[-1]["reachable_frac"],
+            }
+            curve = " ".join(f"{r['recall']:.2f}" for r in rounds)
+            print(f"[{scen}] {strat:7s} recall/round: {curve} | "
+                  f"update {total_update:.2f}s | "
+                  f"reach {rounds[-1]['reachable_frac']:.2f} "
+                  f"deg {rounds[-1]['avg_out_degree']:.1f}")
+    if smoke and "clustered" in record["scenarios"]:
+        record["clustered_recall_floor"] = CLUSTERED_RECALL_FLOOR
+        for strat, res in record["scenarios"]["clustered"].items():
+            floor = CLUSTERED_RECALL_FLOOR.get(strat)
+            if floor is None:
+                continue
+            final = res["recall_curve"][-1]
+            assert final >= floor, (
+                f"clustered-scenario recall floor: {strat} finished at "
+                f"{final:.3f} < {floor} — delete repair regressed")
+    return record
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run + clustered recall-floor assertions")
+    ap.add_argument("--out", type=pathlib.Path, default=DEFAULT_OUT,
+                    help="where to write the adversarial-delete record")
+    ap.add_argument("--scenarios", nargs="*", default=list(SCENARIOS),
+                    choices=list(SCENARIOS))
+    ap.add_argument("--strategies", nargs="*", default=list(STRATEGIES),
+                    choices=list(STRATEGIES))
+    args = ap.parse_args(argv)
+    record = run_all(smoke=args.smoke, scenarios=tuple(args.scenarios),
+                     strategies=tuple(args.strategies))
+    args.out.parent.mkdir(parents=True, exist_ok=True)
+    args.out.write_text(json.dumps(record, indent=2) + "\n")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

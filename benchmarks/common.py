@@ -7,6 +7,11 @@ are reported alongside wall-clock QPS.
 QPS at 0.8 recall follows the paper: per batch, walk a pool-size ladder
 until recall@10 ≥ 0.8, then report QPS at that setting (compiled fns are
 cached per pool size across batches/strategies).
+
+The driver runs directly on the streaming ``Session`` API (the seed
+``IPGMIndex`` facade is gone from the benchmark path): ops dispatch through
+the unified op IR and the strategy sweep covers all five delete strategies,
+including the random-walk repair (``rwalk``, DESIGN.md §13).
 """
 from __future__ import annotations
 
@@ -16,7 +21,8 @@ import time
 import jax
 import numpy as np
 
-from repro.core import IPGMIndex, IndexParams, SearchParams
+from repro.core import (IndexParams, MaintenanceParams, SearchParams,
+                        Session)
 from repro.core import metrics as metrics_mod
 from repro.core import search as search_mod
 from repro.data.workload import UpdateWorkload, make_workload
@@ -25,7 +31,7 @@ POOL_LADDER = (8, 16, 24, 32, 48, 64, 96)
 RECALL_TARGET = 0.8
 K = 10
 
-STRATEGIES = ("pure", "mask", "local", "global")
+STRATEGIES = ("pure", "mask", "local", "global", "rwalk")
 
 
 @dataclasses.dataclass
@@ -45,7 +51,7 @@ def _copy_state(state):
 
 
 def measure_query_at_recall(
-    index: IPGMIndex, queries: np.ndarray, true_ids, *, ladder=POOL_LADDER,
+    index, queries: np.ndarray, true_ids, *, ladder=POOL_LADDER,
     target=RECALL_TARGET,
 ) -> tuple[float, float, int, float]:
     """(recall, qps, pool_used, avg_hops) at the first ladder rung hitting
@@ -84,9 +90,11 @@ def run_strategy_workload(
     params = IndexParams(
         capacity=total, dim=dim, d_out=d_out,
         search=SearchParams(pool_size=32, max_steps=96, num_starts=2),
+        maintenance=MaintenanceParams(strategy=strategy,
+                                      insert_chunk=64, delete_chunk=64),
     )
-    index = IPGMIndex(params, strategy=strategy, seed=seed, delete_chunk=64)
-    ids = index.insert(wl.base)
+    index = Session(params, seed=seed)
+    ids = index.insert(wl.base).result()
     id_map = list(np.asarray(ids))
     queries = wl.queries[:query_subset]
 
@@ -103,7 +111,7 @@ def run_strategy_workload(
             # ReBuild baseline: drop (cheap PURE) + full reconstruction
             index.strategy = "pure"
             index.delete(np.asarray(gids))
-            new = index.insert(wl.step_inserts[step])
+            new = index.insert(wl.step_inserts[step]).result()
             id_map.extend(np.asarray(new))
             alive_before = np.flatnonzero(np.asarray(index.state.alive))
             index.rebuild_from_alive()  # compacts alive slots → 0..n-1
@@ -113,7 +121,7 @@ def run_strategy_workload(
                       for g in id_map]
         else:
             index.delete(np.asarray(gids))
-            new = index.insert(wl.step_inserts[step])
+            new = index.insert(wl.step_inserts[step]).result()
             id_map.extend(np.asarray(new))
         update_s = time.perf_counter() - t0
 

@@ -1,5 +1,9 @@
 """Figure 2: relative QPS (vs ReBuild) at 0.8 recall per update batch —
-random update pattern. One curve per strategy, per dataset surrogate."""
+random update pattern. One curve per strategy (incl. ``rwalk``), per
+dataset surrogate. Runs on the streaming Session API via
+``benchmarks.common``; for hostile (clustered / bursty / rolling-window)
+deletion patterns with recall-over-time curves see
+``benchmarks/adversarial_delete.py``."""
 from __future__ import annotations
 
 import json

@@ -1,5 +1,10 @@
 """Figure 3: same as Fig 2 under the clustered update pattern — whole
-k-means clusters expire together (the hard case for edge repair)."""
+k-means clusters expire together (the hard case for edge repair).
+
+The same pattern drives the ``clustered`` scenario of
+``benchmarks/adversarial_delete.py``, which tracks recall-over-time and
+connectivity per strategy instead of QPS-vs-ReBuild; this figure keeps the
+paper's relative-QPS presentation."""
 from __future__ import annotations
 
 from benchmarks import fig2_random_updates as fig2

@@ -14,6 +14,13 @@ denominated in "equivalent queries", which is the amortization argument of
   GLOBAL (Alg 6): each in-neighbor u is re-inserted: full greedy search from
                   u's vector, SELECT-NEIGHBORS over the global candidates,
                   out-edges replaced wholesale.
+  RWALK  (Mishra et al. 2025, PAPERS.md): random-walk replacement wiring —
+                  each in-neighbor u splices ONE edge found by short walks
+                  seeded at a *random subset of x's out-neighborhood* and
+                  run through the batched beam engine with u's vector as
+                  the guide. Candidate quality sits between LOCAL (x's
+                  1-hop neighborhood only) and GLOBAL (full re-search) at a
+                  small fixed walk budget (``MaintenanceParams.rwalk_*``).
 
 Each repair strategy is split into a *plan* (which edges to splice/replace —
 shared verbatim between the vectorized and reference appliers, so parity
@@ -22,7 +29,8 @@ vectorized appliers (DESIGN.md §4) group the planned edits per source row
 and apply them through the bulk primitive ``set_out_edges_batch`` — one
 forward scatter + one incremental reverse patch instead of O(B·d_in)
 sequential ``lax.cond`` chains. The sequential appliers are kept
-as ``delete_local_reference`` / ``delete_global_reference`` (strategy names
+as ``delete_local_reference`` / ``delete_global_reference`` /
+``delete_rwalk_reference`` (strategy names
 accepted by ``delete_batch`` and ``IPGMIndex``) and pinned against the
 vectorized paths by ``tests/test_update_parity.py``. Under in-degree
 pressure the two differ only in *which* bounded subset of edges survives
@@ -55,8 +63,9 @@ from repro.core.graph import (
 )
 from repro.core.params import IndexParams
 
-STRATEGIES = ("pure", "mask", "local", "global")
-REFERENCE_STRATEGIES = ("local_reference", "global_reference")
+STRATEGIES = ("pure", "mask", "local", "global", "rwalk")
+REFERENCE_STRATEGIES = ("local_reference", "global_reference",
+                        "rwalk_reference")
 
 
 def _dead_mask(state: GraphState, ids: jax.Array, valid: jax.Array) -> jax.Array:
@@ -74,13 +83,18 @@ def _mark_dead(state: GraphState, ids: jax.Array, valid: jax.Array) -> GraphStat
     """alive=False (not reportable) while still present (traversable).
 
     Invalid lanes park at index 0 — the ``.min`` combine makes their write a
-    no-op (min(x, True) == x), so duplicate-index scatters stay exact.
+    no-op (min(x, True) == x), so duplicate-index scatters stay exact. The
+    ``size`` decrement must count *distinct* slots: the same id twice in one
+    batch passes ``_precheck`` on both lanes (it checks the pre-batch
+    ``alive``), and while the alive scatter is idempotent, subtracting per
+    lane would drive ``size`` below the true alive count. First lane wins.
     """
     safe = jnp.where(valid, ids, 0)
+    eq = (safe[:, None] == safe[None, :]) & valid[:, None] & valid[None, :]
+    first = jnp.argmax(eq, axis=1) == jnp.arange(ids.shape[0])
+    n_dead = jnp.sum(valid & first).astype(jnp.int32)
     alive = state.alive.at[safe].min(~valid)
-    return dataclasses.replace(
-        state, alive=alive, size=state.size - jnp.sum(valid).astype(jnp.int32)
-    )
+    return dataclasses.replace(state, alive=alive, size=state.size - n_dead)
 
 
 def _finalize_removal(
@@ -171,19 +185,14 @@ def _local_repair_plan(
     return u_flat, x_flat, z_flat, u_valid
 
 
-def _local_repair_apply(
-    state: GraphState, ids: jax.Array, valid: jax.Array, dead: jax.Array,
-    key, params: IndexParams,
+def _splice_apply(
+    state: GraphState, dead: jax.Array,
+    u_flat: jax.Array, z_flat: jax.Array, u_valid: jax.Array,
 ) -> GraphState:
-    """LOCAL plan + vectorized applier: splices grouped per u, one scatter.
-
-    Shared by ``delete_local`` and the consolidation pass (DESIGN.md §8) —
-    the ``dead`` mask is the caller's batch, which for consolidation is a
-    chunk of tombstones rather than freshly marked deletions.
-    """
-    del key, params
+    """Vectorized one-edge-splice applier shared by LOCAL and RWALK: group
+    the planned additions per surviving row u, drop each row's dying
+    entries, and apply through one ``set_out_edges_batch`` scatter."""
     cap, d_out = state.capacity, state.d_out
-    u_flat, _, z_flat, u_valid = _local_repair_plan(state, ids, valid, dead)
 
     # group the planned additions per surviving row u (each u holds ≤ d_out
     # lanes — one per deleted out-neighbor)
@@ -191,7 +200,7 @@ def _local_repair_apply(
         z_flat, u_flat, u_valid & (z_flat != NULL), cap, d_out
     )
     # compact frame over the ≤ B·d_in rows that actually gain an edge
-    R_u = min(ids.shape[0] * state.d_in, cap)
+    R_u = min(u_flat.shape[0], cap)
     _, uid = jax.lax.top_k(touched_u.astype(jnp.int32), R_u)
     u_ok = touched_u[uid]
     uv = jnp.where(u_ok, uid, 0).astype(jnp.int32)
@@ -215,6 +224,42 @@ def _local_repair_apply(
     return set_out_edges_batch(state, uid, packed[:, :d_out], u_ok)
 
 
+def _splice_apply_reference(
+    state: GraphState,
+    u_flat: jax.Array, x_flat: jax.Array, z_flat: jax.Array,
+    u_valid: jax.Array,
+) -> GraphState:
+    """Sequential splice applier (parity oracle for ``_splice_apply``):
+    remove (u → x) first (frees the row slot), then add (u → z)."""
+    def body(i, st):
+        def splice(s):
+            s = remove_edge(s, u_flat[i], x_flat[i])
+            return jax.lax.cond(
+                z_flat[i] != NULL,
+                lambda s2: add_edge(s2, u_flat[i], z_flat[i]),
+                lambda s2: s2,
+                s,
+            )
+        return jax.lax.cond(u_valid[i], splice, lambda s: s, st)
+
+    return jax.lax.fori_loop(0, u_flat.shape[0], body, state)
+
+
+def _local_repair_apply(
+    state: GraphState, ids: jax.Array, valid: jax.Array, dead: jax.Array,
+    key, params: IndexParams,
+) -> GraphState:
+    """LOCAL plan + vectorized applier: splices grouped per u, one scatter.
+
+    Shared by ``delete_local`` and the consolidation pass (DESIGN.md §8) —
+    the ``dead`` mask is the caller's batch, which for consolidation is a
+    chunk of tombstones rather than freshly marked deletions.
+    """
+    del key, params
+    u_flat, _, z_flat, u_valid = _local_repair_plan(state, ids, valid, dead)
+    return _splice_apply(state, dead, u_flat, z_flat, u_valid)
+
+
 def delete_local(
     state: GraphState, ids: jax.Array, valid: jax.Array, key, params: IndexParams
 ) -> GraphState:
@@ -235,20 +280,7 @@ def delete_local_reference(
     state = _mark_dead(state, ids, valid)
     dead = _dead_mask(state, ids, valid)
     u_flat, x_flat, z_flat, u_valid = _local_repair_plan(state, ids, valid, dead)
-
-    # apply: remove (u → x) first (frees the row slot), then add (u → z)
-    def body(i, st):
-        def splice(s):
-            s = remove_edge(s, u_flat[i], x_flat[i])
-            return jax.lax.cond(
-                z_flat[i] != NULL,
-                lambda s2: add_edge(s2, u_flat[i], z_flat[i]),
-                lambda s2: s2,
-                s,
-            )
-        return jax.lax.cond(u_valid[i], splice, lambda s: s, st)
-
-    state = jax.lax.fori_loop(0, u_flat.shape[0], body, state)
+    state = _splice_apply_reference(state, u_flat, x_flat, z_flat, u_valid)
     return _finalize_removal(state, ids, valid)
 
 
@@ -349,6 +381,133 @@ def delete_global_reference(
     return _finalize_removal(state, ids, valid)
 
 
+# ---------------------------------------------------------------------------
+# RWALK — random-walk replacement wiring (Mishra et al. 2025, PAPERS.md)
+# ---------------------------------------------------------------------------
+
+def _rwalk_walk_params(params: IndexParams):
+    """The short-walk search budget: a few steps of the beam engine at
+    beam_width=1 (the classic walk) over a small pool. Static under jit —
+    built from the frozen param dataclasses at trace time."""
+    mp = params.maintenance
+    return dataclasses.replace(
+        params.eff_insert_search,
+        pool_size=mp.rwalk_pool,
+        max_steps=mp.rwalk_steps,
+        num_starts=min(mp.rwalk_starts, mp.rwalk_pool),
+        beam_width=1,
+        rerank_depth=0,
+    )
+
+
+def _rwalk_repair_plan(
+    state: GraphState,
+    ids: jax.Array,
+    valid: jax.Array,
+    dead: jax.Array,
+    key,
+    params: IndexParams,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Random-walk replacement plan: for each surviving in-neighbor u of a
+    deleted x, short walks seeded at a random subset of x's out-neighborhood
+    (the walk origins) run through the batched beam engine guided by u's
+    vector; ONE replacement edge u → z is then picked from the walk pool.
+    Returns (u, x, z, valid) flats of length B·d_in — the same contract as
+    ``_local_repair_plan``, so both strategies share the splice appliers."""
+    B, d_in, d_out = ids.shape[0], state.d_in, state.d_out
+    mp = params.maintenance
+
+    safe_ids = jnp.where(valid, ids, 0)
+    in_nbrs = state.radj[safe_ids]                     # i32[B, d_in]  the u's
+    out_nbrs = state.adj[safe_ids]                     # i32[B, d_out] origins
+    u_flat = in_nbrs.reshape(-1)                       # [B*d_in]
+    x_flat = jnp.repeat(safe_ids, d_in)                # deleted vertex per lane
+    c_flat = jnp.broadcast_to(
+        out_nbrs[:, None, :], (B, d_in, d_out)
+    ).reshape(B * d_in, d_out)
+    u_valid = (u_flat != NULL) & jnp.repeat(valid, d_in)
+    su = jnp.where(u_valid, u_flat, 0)
+    # u must itself survive (not in the delete batch)
+    u_valid = u_valid & ~dead[su] & state.present[su]
+
+    # ---- walk origins: a Gumbel-top-k random subset of x's out-neighbors,
+    # per lane (fold_in by lane index — same per-lane key discipline as
+    # batch_entry_points). Dead-but-present origins are allowed: the delete
+    # batch stays traversable until _finalize_removal, exactly like the
+    # GLOBAL repair search.
+    S = max(1, min(mp.rwalk_starts, d_out))
+    n_lanes = u_flat.shape[0]
+    lane_keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(
+        jnp.arange(n_lanes, dtype=jnp.int32)
+    )
+
+    def origins(k_i, cands):
+        cv = cands != NULL
+        cv = cv & state.present[jnp.where(cv, cands, 0)]
+        g = jax.random.gumbel(k_i, (d_out,))
+        _, idx = jax.lax.top_k(jnp.where(cv, g, -jnp.inf), S)
+        return jnp.where(cv[idx], cands[idx], NULL).astype(jnp.int32)
+
+    starts = jax.vmap(origins)(lane_keys, c_flat)      # i32[B*d_in, S]
+
+    # ---- short walks through the batched beam engine, ONE call for all
+    # B·d_in lanes — raw pools (tombstones steer but never get selected)
+    wp = _rwalk_walk_params(params)
+    u_vecs = state.vectors[su]
+    res = search.beam_search(state, u_vecs, starts, wp, raw=True)
+
+    # ---- one replacement per u: diverse pick from the walk pool, never an
+    # existing neighbor, never u itself, alive targets only (excludes the
+    # delete batch and tombstones)
+    def pick_one(u, vec, cids):
+        exclude = jnp.concatenate([state.adj[u], u[None]])
+        picked = select.select_from_pool(
+            state, vec, cids, 1, exclude=exclude, keep_pruned=False
+        )
+        return picked[0]
+
+    z_flat = jax.vmap(pick_one)(su, u_vecs, res.ids)   # i32[B*d_in]
+    z_flat = jnp.where(u_valid, z_flat, NULL)
+    return u_flat, x_flat, z_flat, u_valid
+
+
+def _rwalk_repair_apply(
+    state: GraphState, ids: jax.Array, valid: jax.Array, dead: jax.Array,
+    key, params: IndexParams,
+) -> GraphState:
+    """RWALK plan + vectorized splice applier (shared with LOCAL). Shared by
+    ``delete_rwalk`` and the consolidation pass (DESIGN.md §8)."""
+    u_flat, _, z_flat, u_valid = _rwalk_repair_plan(
+        state, ids, valid, dead, key, params
+    )
+    return _splice_apply(state, dead, u_flat, z_flat, u_valid)
+
+
+def delete_rwalk(
+    state: GraphState, ids: jax.Array, valid: jax.Array, key, params: IndexParams
+) -> GraphState:
+    """RWALK with the vectorized applier: splices grouped per u, one scatter."""
+    valid = _precheck(state, ids, valid)
+    state = _mark_dead(state, ids, valid)
+    dead = _dead_mask(state, ids, valid)
+    state = _rwalk_repair_apply(state, ids, valid, dead, key, params)
+    return _finalize_removal(state, ids, valid)
+
+
+def delete_rwalk_reference(
+    state: GraphState, ids: jax.Array, valid: jax.Array, key, params: IndexParams
+) -> GraphState:
+    """RWALK with the sequential splice applier (parity oracle)."""
+    valid = _precheck(state, ids, valid)
+    state = _mark_dead(state, ids, valid)
+    dead = _dead_mask(state, ids, valid)
+    u_flat, x_flat, z_flat, u_valid = _rwalk_repair_plan(
+        state, ids, valid, dead, key, params
+    )
+    state = _splice_apply_reference(state, u_flat, x_flat, z_flat, u_valid)
+    return _finalize_removal(state, ids, valid)
+
+
 # the vectorized repair appliers, keyed the way the consolidation pass
 # (core/consolidate.py) selects them; signature (state, ids, valid, dead,
 # key, params) → state — the ``dead`` mask is supplied by the caller so the
@@ -356,6 +515,7 @@ def delete_global_reference(
 REPAIR_APPLIERS = {
     "local": _local_repair_apply,
     "global": _global_repair_apply,
+    "rwalk": _rwalk_repair_apply,
 }
 
 _STRATEGY_FNS = {
@@ -363,8 +523,10 @@ _STRATEGY_FNS = {
     "mask": delete_mask,
     "local": delete_local,
     "global": delete_global,
+    "rwalk": delete_rwalk,
     "local_reference": delete_local_reference,
     "global_reference": delete_global_reference,
+    "rwalk_reference": delete_rwalk_reference,
 }
 
 

@@ -53,7 +53,8 @@ class MaintenanceParams:
     auto-trigger (fires when masked/present crosses it; ``None`` disables),
     ``consolidate_strategy`` picks the repair used by the jitted compaction
     pass ("pure" = scrub only, "local"/"global" = Alg 5/6 repair of the
-    survivors' rows), and ``consolidate_chunk`` is the tombstones-per-
+    survivors' rows, "rwalk" = random-walk replacement wiring), and
+    ``consolidate_chunk`` is the tombstones-per-
     micro-batch width (``None`` → ``delete_chunk``, keeping the stream in
     one compiled shape family).
 
@@ -66,12 +67,22 @@ class MaintenanceParams:
     step at most ``ceil(log_factor(C'/C))`` times.
     """
 
-    strategy: str = "global"   # "pure" | "mask" | "local" | "global" (+ _reference)
+    strategy: str = "global"   # "pure" | "mask" | "local" | "global" |
+                               # "rwalk" (+ _reference)
     insert_chunk: int = 64
     delete_chunk: int = 64
     consolidate_threshold: float | None = None  # masked/present auto-trigger
-    consolidate_strategy: str = "global"        # "pure" | "local" | "global"
+    consolidate_strategy: str = "global"  # "pure"|"local"|"global"|"rwalk"
     consolidate_chunk: int | None = None        # None → delete_chunk
+    # RWALK repair budget (core/delete.py): each surviving in-neighbor of a
+    # deleted vertex runs a short beam-engine walk (beam_width=1, ``rwalk_
+    # steps`` loop trips, ``rwalk_pool``-entry pool) seeded at ``rwalk_
+    # starts`` random members of the deleted vertex's out-neighborhood and
+    # splices ONE replacement edge from the walk pool. The defaults keep the
+    # walk an order of magnitude cheaper than a GLOBAL re-search.
+    rwalk_steps: int = 8
+    rwalk_starts: int = 4
+    rwalk_pool: int = 8
     growth_factor: float = 2.0                  # geometric capacity tier step
     max_capacity: int | None = None             # auto-grow ceiling; None = fixed
     # streaming-merge trigger gate (TieredSession, DESIGN.md §12): a merge
@@ -86,7 +97,9 @@ class MaintenanceParams:
 
     def __post_init__(self):
         assert self.insert_chunk >= 1 and self.delete_chunk >= 1
-        assert self.consolidate_strategy in ("pure", "local", "global")
+        assert self.consolidate_strategy in ("pure", "local", "global", "rwalk")
+        assert self.rwalk_steps >= 1 and self.rwalk_starts >= 1
+        assert self.rwalk_pool >= self.rwalk_starts
         assert (self.consolidate_threshold is None
                 or 0.0 < self.consolidate_threshold <= 1.0)
         assert self.consolidate_chunk is None or self.consolidate_chunk >= 1

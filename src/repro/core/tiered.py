@@ -72,7 +72,7 @@ from repro.core.session import (
 )
 from repro.testing import faults
 
-_HARD_STRATEGIES = ("pure", "local", "global")
+_HARD_STRATEGIES = ("pure", "local", "global", "rwalk")
 
 
 class _TierMirror:

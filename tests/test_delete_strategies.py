@@ -1,8 +1,9 @@
-"""DELETE-UPDATE-EDGES semantics per strategy (Alg 4–6)."""
+"""DELETE-UPDATE-EDGES semantics per strategy (Alg 4–6 + RWALK)."""
 import numpy as np
 import pytest
 
 from helpers import build_index, check_invariants
+from repro.core import delete as delete_mod
 from repro.core.graph import NULL
 
 
@@ -60,11 +61,56 @@ def test_global_reconnects_with_fresh_candidates(data):
         assert alive[row].all()
 
 
+def test_rwalk_compensates_in_neighbors(data):
+    """RWALK splices replacement edges the PURE drop leaves missing, and the
+    replacements point only at surviving (alive) vertices."""
+    X, rng = data
+    pure = _fresh(data, "pure")
+    rwalk = _fresh(data, "rwalk")
+    dele = rng.choice(240, size=60, replace=False)
+    radj = np.asarray(rwalk.state.radj)
+    target = int(dele[0])
+    in_nbrs = [u for u in radj[target][radj[target] != NULL] if u not in dele]
+    pure.delete(dele)
+    rwalk.delete(dele)
+    assert not check_invariants(rwalk.state)
+    deg_pure = pure.stats()["avg_out_degree"]
+    deg_rwalk = rwalk.stats()["avg_out_degree"]
+    assert deg_rwalk >= deg_pure, (
+        "RWALK must splice compensation edges that PURE drops"
+    )
+    adj = np.asarray(rwalk.state.adj)
+    alive = np.asarray(rwalk.state.alive)
+    for u in in_nbrs:
+        row = adj[u][adj[u] != NULL]
+        assert alive[row].all(), "RWALK wired an edge into a deleted vertex"
+
+
+@pytest.mark.parametrize(
+    "strategy", delete_mod.STRATEGIES + delete_mod.REFERENCE_STRATEGIES
+)
+def test_duplicate_heavy_batch_keeps_size_exact(data, strategy):
+    """Regression: the same slot id repeated within ONE delete batch passes
+    _precheck on every lane (it checks the pre-batch alive); the size
+    decrement must still count each distinct slot once, so ``size`` equals
+    the true alive count afterwards — on every strategy."""
+    idx = _fresh(data, strategy)
+    rng = np.random.default_rng(42)
+    victims = rng.choice(240, size=12, replace=False)
+    dup = np.concatenate([victims, victims[::2], victims[:4], victims[:1]])
+    rng.shuffle(dup)
+    idx.delete(dup)
+    alive = np.asarray(idx.state.alive)
+    assert int(idx.state.size) == int(alive.sum()) == 240 - 12
+    assert not alive[victims].any()
+    assert not check_invariants(idx.state)
+
+
 def test_strategies_preserve_recall_after_churn(data):
     """After delete+insert churn every repair strategy keeps usable recall."""
     X, rng = data
     Q = rng.normal(size=(48, 12)).astype(np.float32)
-    for strategy in ("local", "global"):
+    for strategy in ("local", "global", "rwalk"):
         idx = _fresh(data, strategy)
         for _ in range(2):
             alive_ids = np.flatnonzero(np.asarray(idx.state.alive))

@@ -566,6 +566,98 @@ def test_consolidate_handle_reports_compacted_slots():
 
 
 # ---------------------------------------------------------------------------
+# adversarial deletion patterns (ROADMAP item 1 / DESIGN.md §13): rolling-
+# window eviction and delete-then-reinsert, pinned against the numpy oracle
+# for the random-walk repair strategy
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_rwalk_rolling_window_eviction_stream(seed):
+    """FIFO rolling window under the RWALK strategy (hard delete): the
+    oldest slice is evicted every round and replaced with fresh arrivals,
+    so the index fully turns over. Pinned vs the oracle at every round:
+    allocator parity (evicted slots must recycle immediately), recall
+    floor, and flag parity + clean invariants at the end."""
+    import collections
+
+    rng = np.random.default_rng(100 + seed)
+    sess = Session(_params(strategy="rwalk"), seed=seed)
+    oracle = Oracle()
+    base = rng.normal(size=(100, DIM)).astype(np.float32)
+    ids = sess.insert(base).result()
+    np.testing.assert_array_equal(ids, oracle.insert(base))
+    fifo = collections.deque(int(s) for s in ids)
+    for rnd in range(12):
+        evict = np.asarray([fifo.popleft() for _ in range(8)], np.int32)
+        sess.delete(evict)
+        oracle.delete_hard(evict)
+        V = rng.normal(size=(8, DIM)).astype(np.float32)
+        got = sess.insert(V).result()
+        np.testing.assert_array_equal(
+            got, oracle.insert(V),
+            err_msg=f"freed-slot reuse parity broke at round {rnd}",
+        )
+        fifo.extend(int(s) for s in got)
+        Q = rng.normal(size=(8, DIM)).astype(np.float32)
+        found, _ = sess.query(Q, k=10).result()
+        assert oracle.recall(found, Q, 10) >= RECALL_FLOOR, rnd
+    sess.flush()
+    _assert_flag_parity(sess, oracle)
+    errs = check_invariants(sess.state)
+    assert not errs, errs[:5]
+
+
+def test_tiered_delete_then_reinsert_same_ext_one_flush_window():
+    """Delete an external id and reinsert it (same id, fresh vector) with NO
+    flush between the two ops, through a TieredSession whose fresh tier runs
+    the RWALK hard-delete strategy. The reinserted copy must be the only one
+    served, the host mirrors stay exact, and a plain live-id upsert (no
+    explicit delete) behaves identically."""
+    from repro.core import TieredSession
+
+    rng = np.random.default_rng(21)
+    ts = TieredSession(_params(), fresh_capacity=64, fresh_strategy="rwalk",
+                       seed=3)
+    X = rng.normal(size=(40, DIM)).astype(np.float32)
+    ext = np.arange(40)
+    got = ts.insert(X, ids=ext).result()
+    np.testing.assert_array_equal(got, ext)
+
+    # one flush window: delete then reinsert the same external ids
+    victims = np.asarray([3, 7, 11], np.int64)
+    X2 = rng.normal(size=(3, DIM)).astype(np.float32)
+    ts.delete(victims)
+    got = ts.insert(X2, ids=victims).result()
+    np.testing.assert_array_equal(got, victims)
+    ts.flush()
+    ts.check_mirrors()
+    assert ts.n_alive == 40
+
+    # the new vectors are served under the old ids (exact-match queries),
+    # and the old copies are never reported
+    ids, scores = ts.query(X2, k=1).result()
+    np.testing.assert_array_equal(ids[:, 0], victims)
+    ids_old, scores_old = ts.query(X[victims], k=1).result()
+    for j, e in enumerate(victims):
+        if int(ids_old[j, 0]) == int(e):
+            # the id may still win on proximity, but only via the NEW vector
+            d_new = float(((X2[j] - X[int(e)]) ** 2).sum())
+            assert scores_old[j, 0] != pytest.approx(0.0, abs=1e-5) or \
+                d_new == pytest.approx(0.0, abs=1e-5)
+
+    # live-id upsert path (no explicit delete): same contract
+    X3 = rng.normal(size=(3, DIM)).astype(np.float32)
+    got = ts.insert(X3, ids=victims).result()
+    np.testing.assert_array_equal(got, victims)
+    ts.flush()
+    ts.check_mirrors()
+    assert ts.n_alive == 40
+    ids, _ = ts.query(X3, k=1).result()
+    np.testing.assert_array_equal(ids[:, 0], victims)
+
+
+# ---------------------------------------------------------------------------
 # kill-and-recover fuzz (DESIGN.md §11): seeded random crash schedules over
 # a deterministic mixed stream — whatever fires, the resumed run must land
 # bit-identical to the uninterrupted control

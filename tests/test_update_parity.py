@@ -77,7 +77,7 @@ def test_insert_b1_parity_exact():
     assert not check_invariants(st_ref)
 
 
-@pytest.mark.parametrize("strategy", ["local", "global"])
+@pytest.mark.parametrize("strategy", ["local", "global", "rwalk"])
 def test_delete_apply_parity_exact(strategy):
     """Shared repair plan + no d_in pressure ⇒ identical edge application."""
     p = _params(d_in=64)
@@ -96,7 +96,32 @@ def test_delete_apply_parity_exact(strategy):
     assert not check_invariants(ref)
 
 
-@pytest.mark.parametrize("strategy", ["local", "global"])
+@pytest.mark.parametrize("strategy", ["local", "global", "rwalk"])
+def test_delete_apply_parity_b1_bit_exact(strategy):
+    """B=1 with in-degree headroom: vectorized and reference appliers agree
+    on every non-edge field bit-for-bit and on every row's edge set."""
+    p = _params(d_in=64)
+    st, _, _ = _grow_pair(p, 40, seed=5)
+    for victim in (3, 17, 31):
+        ids = jnp.asarray([victim], dtype=jnp.int32)
+        valid = jnp.ones((1,), bool)
+        key = jax.random.PRNGKey(100 + victim)
+        new = delete_mod._STRATEGY_FNS[strategy](_copy(st), ids, valid, key, p)
+        ref = delete_mod._STRATEGY_FNS[strategy + "_reference"](
+            _copy(st), ids, valid, key, p
+        )
+        assert _row_sets(new.adj) == _row_sets(ref.adj)
+        assert _row_sets(new.radj) == _row_sets(ref.radj)
+        for field in ("alive", "present", "size", "stamps", "codes", "scales"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(new, field)), np.asarray(getattr(ref, field)),
+                err_msg=f"{field} diverged deleting {victim}",
+            )
+        assert not check_invariants(new)
+        assert not check_invariants(ref)
+
+
+@pytest.mark.parametrize("strategy", ["local", "global", "rwalk"])
 def test_delete_apply_under_pressure_bounded_deviation(strategy):
     """Tight d_in: refusal vs truncation-by-rank may keep different edges,
     but both sides stay invariant-clean and inside the degree bounds."""
