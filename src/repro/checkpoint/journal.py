@@ -13,8 +13,15 @@ Record format (little-endian)::
     body = u32 header_len | header JSON | payload f32 bytes | ids i32 bytes
 
 The header carries ``code`` (OP_*/JR_*), ``seq`` (op counter at append),
-``cseq`` (consolidate counter), free-form ``aux`` (e.g. the delete chunk
-width — delete results legitimately depend on it), and the array shapes.
+``cseq`` (the record's replay-dedup counter: a maintenance record — one
+whose code appears in the maintenance-op registry, ``core/maint.py`` —
+snapshots its own op's counter, e.g. JR_CONSOLIDATE the consolidate counter
+and JR_REFINE the refine counter; replay hooks on the registry entries
+re-derive the skip decision from it), free-form ``aux`` (e.g. the delete
+chunk width — delete results legitimately depend on it), and the array
+shapes. The journal layer itself is policy-free: it never interprets
+``code``/``cseq`` — the session/tiered ``recover`` paths dispatch records
+through the registry.
 Self-delimiting + per-record CRC means a torn tail (partial write at the
 kill point) or bit rot is detected at scan; everything from the first bad
 byte on is dropped — redo-log prefix semantics, exactly what a write-ahead
@@ -56,10 +63,20 @@ class JournalRecord:
 
     code: int
     seq: int            # session op counter at append time
-    cseq: int           # session consolidate counter at append time
+    cseq: int           # the record's replay-dedup counter at append time
+                        # (maintenance records: their own op's counter —
+                        # see the registry in core/maint.py)
     aux: dict[str, Any]
     payload: np.ndarray | None  # f32[n, dim] (query/insert rows)
     ids: np.ndarray | None      # i32[n] (delete targets)
+
+    @property
+    def name(self) -> str:
+        """Human-readable record name (``ops.JR_NAMES``/``OP_NAMES``)."""
+        from repro.core import ops as ops_mod
+
+        return ops_mod.JR_NAMES.get(
+            self.code, ops_mod.OP_NAMES.get(self.code, f"code{self.code}"))
 
 
 def _encode(code: int, seq: int, cseq: int,

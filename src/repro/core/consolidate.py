@@ -23,6 +23,14 @@ The host-side helpers below keep the legacy surface: ``consolidate`` /
 jitted pass; ``consolidate_reference`` is the pre-rewrite revive-then-delete
 path, now exception-safe (state/strategy roll back if repair raises) and
 kept as the semantic parity oracle (``tests/test_serving.py``).
+
+The op's cross-layer wiring — the reserved ``CONSOLIDATE_KEY_STREAM``,
+the ``JR_CONSOLIDATE`` journal code with its cseq dedup counter, the
+``pre-consolidate``/``post-consolidate`` crash points, and the
+``consolidate_counter`` checkpoint contract — is declared once on the
+``CONSOLIDATE`` entry of the maintenance-op registry (``core/maint.py``,
+DESIGN.md §14); the session, journal replay, fault harness, and stats
+layers all derive from that entry.
 """
 from __future__ import annotations
 

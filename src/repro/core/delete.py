@@ -87,12 +87,16 @@ def _mark_dead(state: GraphState, ids: jax.Array, valid: jax.Array) -> GraphStat
     ``size`` decrement must count *distinct* slots: the same id twice in one
     batch passes ``_precheck`` on both lanes (it checks the pre-batch
     ``alive``), and while the alive scatter is idempotent, subtracting per
-    lane would drive ``size`` below the true alive count. First lane wins.
+    lane would drive ``size`` below the true alive count. First lane wins,
+    found by a sort-free scatter-min over lane indices: O(B) work instead of
+    the O(B²) all-pairs first-occurrence mask.
     """
+    B = ids.shape[0]
     safe = jnp.where(valid, ids, 0)
-    eq = (safe[:, None] == safe[None, :]) & valid[:, None] & valid[None, :]
-    first = jnp.argmax(eq, axis=1) == jnp.arange(ids.shape[0])
-    n_dead = jnp.sum(valid & first).astype(jnp.int32)
+    lane = jnp.where(valid, jnp.arange(B, dtype=jnp.int32), B)
+    winner = jnp.full((state.capacity,), B, jnp.int32).at[safe].min(lane)
+    first = valid & (winner[safe] == lane)
+    n_dead = jnp.sum(first).astype(jnp.int32)
     alive = state.alive.at[safe].min(~valid)
     return dataclasses.replace(state, alive=alive, size=state.size - n_dead)
 
@@ -114,6 +118,7 @@ def _finalize_removal(
         codes=jnp.where(dead[:, None], 0, state.codes),
         scales=jnp.where(dead, 0.0, state.scales),
         stamps=jnp.where(dead, -1, state.stamps),  # invariant I6
+        touch=jnp.where(dead, -1, state.touch),    # invariant I7
     )
 
 

@@ -31,6 +31,14 @@ Invariants maintained by every public op (property-tested in
       non-present slot has ``stamps[i] == -1``. Stamps order slots by
       insertion age (merge drain order, OP_REFINE staleness pick) and are
       scrubbed — never recycled — when a slot is freed.
+  I7  staleness stamps (DESIGN.md §15): ``touch[i]`` is the ``tclock`` value
+      at the last time slot i's *out-row* was rewritten through the batched
+      appliers, or -1; every non-present slot has ``touch[i] == -1`` and
+      every stamp is ``< tclock``. The vectorized paths maintain touch; the
+      scalar reference paths (``insert_one``/``set_out_edges``) leave it at
+      -1 — a -1 stamp just means "maximally stale", so OP_REFINE's
+      lowest-touch pick remains correct and the B=1 parity suites (which
+      compare explicit field lists) are unaffected.
 """
 from __future__ import annotations
 
@@ -49,7 +57,7 @@ NULL = -1  # padding id for empty adjacency entries
     jax.tree_util.register_dataclass,
     data_fields=[
         "vectors", "sqnorms", "codes", "scales", "adj", "radj", "alive",
-        "present", "size", "stamps", "clock",
+        "present", "size", "stamps", "clock", "touch", "tclock",
     ],
     meta_fields=["capacity", "dim", "d_out", "d_in", "metric"],
 )
@@ -69,6 +77,8 @@ class GraphState:
     size: jax.Array      # i32                      number of alive slots
     stamps: jax.Array    # i32[capacity]            insertion stamp (-1 = empty)
     clock: jax.Array     # i32                      next stamp to hand out
+    touch: jax.Array     # i32[capacity]            out-row write stamp (-1 = empty)
+    tclock: jax.Array    # i32                      next touch stamp to hand out
     # --- static metadata ---
     capacity: int
     dim: int
@@ -106,6 +116,8 @@ def init_graph(
         size=jnp.asarray(0, jnp.int32),
         stamps=jnp.full((capacity,), -1, jnp.int32),
         clock=jnp.asarray(0, jnp.int32),
+        touch=jnp.full((capacity,), -1, jnp.int32),
+        tclock=jnp.asarray(0, jnp.int32),
         capacity=capacity,
         dim=dim,
         d_out=d_out,
@@ -157,6 +169,7 @@ def grow_state(state: GraphState, new_capacity: int, *, axis: int = 0) -> GraphS
         alive=pad(state.alive, False),
         present=pad(state.present, False),
         stamps=pad(state.stamps, -1),
+        touch=pad(state.touch, -1),
         capacity=new_capacity,
     )
 
@@ -406,7 +419,13 @@ def apply_row_updates(
         add_rows, jnp.clip(hole_rank, 0, d_in - 1), axis=1
     )
     radj2 = jnp.where(isnull, fill, radj1)
-    return dataclasses.replace(state, adj=adj, radj=radj2)
+    # staleness stamps (I7): every rewritten out-row takes the current tclock
+    # (OP_REFINE picks the lowest-touch alive slots); one bump per call keeps
+    # within-batch ties broken by slot id, deterministically
+    touch = state.touch.at[wsu].set(state.tclock, mode="drop")
+    return dataclasses.replace(
+        state, adj=adj, radj=radj2, touch=touch, tclock=state.tclock + 1
+    )
 
 
 def set_out_edges_batch(
@@ -514,6 +533,7 @@ def free_slots(state: GraphState, ids: jax.Array, valid: jax.Array) -> GraphStat
         codes=jnp.where(freed[:, None], 0, state.codes),
         scales=jnp.where(freed, 0.0, state.scales),
         stamps=jnp.where(freed, -1, state.stamps),
+        touch=jnp.where(freed, -1, state.touch),
         size=state.size - n_freed.astype(jnp.int32),
     )
 

@@ -1,0 +1,221 @@
+"""Maintenance-op registry — the one place a maintenance op declares itself.
+
+Every background maintenance pass (consolidate §8, grow §9, merge §12,
+refine §15) needs the same five pieces of wiring:
+
+  1. a **PRNG key stream** isolated from the op-key chain, so firing the op
+     never shifts the keys of logical stream ops (timing invariance);
+  2. a **journal record code** for explicit invocations, deduplicated on
+     replay by a cseq-style counter snapshot;
+  3. a **checkpoint-counter contract**: which host counters are persisted in
+     checkpoint extras and restored on ``restore()``/``recover()``;
+  4. registered **crash points** for the fault-injection harness
+     (``repro.testing.faults`` composes its closed registries from here);
+  5. **phase-timer fields** surfaced uniformly in ``Session.stats()`` and
+     ``run_workload`` summaries.
+
+Before this module each op hand-rolled all five across session.py, ops.py,
+faults.py, journal replay, and the checkpoint extras — adding a fourth op
+meant touching every layer again.  Now an op is one :class:`MaintOp` entry;
+session/tiered/sharded plumbing and the fault registry iterate the registry
+instead of naming ops.
+
+This module is a **leaf**: it imports nothing from the rest of ``repro`` so
+that ``repro.testing.faults`` (imported by production modules) can build its
+crash-point registry from here without an import cycle.  The numeric
+constants below are the single source of truth; ``repro.core.ops``
+re-exports them under their historical names, and their values are frozen —
+journal files and checkpoints written before this refactor must replay
+bit-exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+
+# --- op codes (static-dispatch-only maintenance ops in the session op IR) ---
+# OP_QUERY..OP_NOOP (0..3) live in repro.core.ops; maintenance codes are
+# declared here because the registry entries reference them.
+OP_CONSOLIDATE = 4
+OP_REFINE = 5
+
+# --- journal record codes (JR_META=16 / JR_FLUSH=17 live in ops.py) ---
+JR_CONSOLIDATE = 18
+JR_GROW = 19
+JR_MERGE = 20
+JR_REFINE = 21
+
+# --- PRNG key streams (fold_in ids far outside the op-counter range) ---
+CONSOLIDATE_KEY_STREAM = 0x7FFFFFFF
+MERGE_KEY_STREAM = 0x7FFFFFFE
+REFINE_KEY_STREAM = 0x7FFFFFFD
+
+
+@dataclasses.dataclass(frozen=True)
+class MaintOp:
+    """Declarative record of one maintenance op's cross-layer obligations.
+
+    ``replay`` is the journal-replay hook: ``replay(session, record) ->
+    bool`` returns True when the record was re-executed and False when the
+    cseq-style dedup decided the restored checkpoint already subsumes it.
+    Auto-triggered passes are never journaled — replaying the surrounding
+    JR_FLUSH / stream ops re-derives them deterministically.
+    """
+
+    name: str
+    tier: str  # "session" | "tiered"
+    journal_code: int
+    replay: Callable[[Any, Any], bool]
+    op_code: int | None = None  # static-dispatch code in the op IR, if any
+    key_stream: int | None = None  # fold_in stream id, if the op draws keys
+    counter_attr: str | None = None  # host counter attr; snapshot as cseq
+    extra_key: str | None = None  # checkpoint-extras key for counter_attr
+    # extra (attr, extras-key) pairs persisted/restored alongside the counter
+    state_attrs: tuple[tuple[str, str], ...] = ()
+    crash_points: tuple[str, ...] = ()
+    sharded_crash_points: tuple[str, ...] = ()
+    time_field: str | None = None  # PhaseTimers "*_s" field
+    count_field: str | None = None  # PhaseTimers "n_*" field
+
+
+def maint_key(base_key: jax.Array, op: MaintOp, counter: int) -> jax.Array:
+    """Key for ``op``'s ``counter``-th draw: isolated from the op-key chain.
+
+    ``fold_in(fold_in(base, stream), counter)`` — the stream id lives at the
+    top of the int32 range so maintenance keys can never collide with
+    per-op keys (which fold the op counter directly).
+    """
+    if op.key_stream is None:
+        raise ValueError(f"maintenance op {op.name!r} declares no key stream")
+    return jax.random.fold_in(jax.random.fold_in(base_key, op.key_stream), counter)
+
+
+# --- journal replay hooks -------------------------------------------------
+# Hooks call public session methods only; dedup mirrors the pre-refactor
+# replay logic bit-for-bit (see tests/test_recovery.py's literal-code test).
+
+
+def _replay_consolidate(sess: Any, rec: Any) -> bool:
+    if rec.cseq < sess._consolidate_counter:
+        return False  # restored checkpoint already includes this pass
+    sess.consolidate(strategy=rec.aux.get("strategy"), chunk=rec.aux.get("chunk"))
+    return True
+
+
+def _replay_grow(sess: Any, rec: Any) -> bool:
+    target = int(rec.aux["new_capacity"])
+    if target <= sess.state.capacity:
+        return False  # restored checkpoint already grown past this
+    sess.grow(target)
+    return True
+
+
+def _replay_refine(sess: Any, rec: Any) -> bool:
+    if rec.cseq < sess._refine_counter:
+        return False
+    sess.refine(n=rec.aux.get("n"), chunk=rec.aux.get("chunk"))
+    return True
+
+
+def _replay_merge(sess: Any, rec: Any) -> bool:
+    if rec.cseq < sess._merges_done:
+        return False
+    sess.merge()
+    return True
+
+
+# --- the registry ---------------------------------------------------------
+
+CONSOLIDATE = MaintOp(
+    name="consolidate",
+    tier="session",
+    journal_code=JR_CONSOLIDATE,
+    replay=_replay_consolidate,
+    op_code=OP_CONSOLIDATE,
+    key_stream=CONSOLIDATE_KEY_STREAM,
+    counter_attr="_consolidate_counter",
+    extra_key="consolidate_counter",
+    crash_points=("pre-consolidate", "post-consolidate"),
+    sharded_crash_points=("sharded-consolidate-pass",),
+    time_field="consolidate_s",
+    count_field="n_consolidations",
+)
+
+GROW = MaintOp(
+    name="grow",
+    tier="session",
+    journal_code=JR_GROW,
+    replay=_replay_grow,
+    # no op_code / key_stream: growth is pure pytree padding, draws no keys;
+    # no counter: replay dedups on the capacity recorded in the journal aux.
+    crash_points=("pre-grow", "post-grow"),
+    sharded_crash_points=("sharded-pre-grow", "sharded-post-grow"),
+    time_field="grow_s",
+    count_field="n_grows",
+)
+
+REFINE = MaintOp(
+    name="refine",
+    tier="session",
+    journal_code=JR_REFINE,
+    replay=_replay_refine,
+    op_code=OP_REFINE,
+    key_stream=REFINE_KEY_STREAM,
+    counter_attr="_refine_counter",
+    extra_key="refine_counter",
+    # _refine_wear (update rows dispatched since the last pass) must survive
+    # checkpoints so auto-trigger decisions replay deterministically.
+    state_attrs=(("_refine_wear", "refine_wear"),),
+    crash_points=("refine-begin", "refine-step"),
+    time_field="refine_s",
+    count_field="n_refines",
+)
+
+MERGE = MaintOp(
+    name="merge",
+    tier="tiered",
+    journal_code=JR_MERGE,
+    replay=_replay_merge,
+    key_stream=MERGE_KEY_STREAM,
+    counter_attr="_merges_done",
+    extra_key="merges_done",
+    crash_points=(
+        "merge-begin",
+        "merge-compact-step",
+        "merge-drain-step",
+        "pre-merge-swap",
+        "post-merge-swap",
+    ),
+    time_field="merge_s",
+    count_field="n_merges",
+)
+
+REGISTRY: tuple[MaintOp, ...] = (CONSOLIDATE, GROW, REFINE, MERGE)
+SESSION_OPS: tuple[MaintOp, ...] = tuple(o for o in REGISTRY if o.tier == "session")
+TIERED_OPS: tuple[MaintOp, ...] = tuple(o for o in REGISTRY if o.tier == "tiered")
+
+_BY_JOURNAL_CODE = {o.journal_code: o for o in REGISTRY}
+
+
+def by_journal_code(code: int) -> MaintOp | None:
+    """The registered op that journals under ``code``, or None."""
+    return _BY_JOURNAL_CODE.get(code)
+
+
+def crash_points(tier: str) -> tuple[str, ...]:
+    """All crash points declared by ``tier``'s ops, in registry order."""
+    out: list[str] = []
+    for op in REGISTRY:
+        if op.tier == tier:
+            out.extend(op.crash_points)
+    return tuple(out)
+
+
+def sharded_crash_points() -> tuple[str, ...]:
+    """Crash points declared for per-shard variants, in registry order."""
+    out: list[str] = []
+    for op in REGISTRY:
+        out.extend(op.sharded_crash_points)
+    return tuple(out)

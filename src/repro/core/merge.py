@@ -40,9 +40,12 @@ of the acknowledged mutation stream (auto-start gate + one pump per
 insert/delete), which is what lets crash recovery replay a journal suffix
 and land bit-exactly in the middle of a merge.
 
-Crash points (``repro.testing.faults.TIERED_CRASH_POINTS``): ``merge-begin``,
-``merge-compact-step``, ``merge-drain-step``, ``pre-merge-swap``,
-``post-merge-swap``.
+The merge's cross-layer wiring — its key stream, JR_MERGE journal code and
+cseq dedup counter, checkpoint-counter contract, and the crash points fired
+below (``merge-begin``, ``merge-compact-step``, ``merge-drain-step``,
+``pre-merge-swap``, ``post-merge-swap``) — is declared once on the MERGE
+entry of the maintenance-op registry (``core/maint.py``, DESIGN.md §14);
+``faults.TIERED_CRASH_POINTS`` is generated from it.
 """
 from __future__ import annotations
 

@@ -18,12 +18,16 @@ Op codes::
     OP_CONSOLIDATE (4)  no operands — compacts up to B tombstones (the
                         lowest-id masked slots at this stream position,
                         DESIGN.md §8); consolidated ids ride in ids[:, 0].
-                        Static-dispatch only: consolidation is always
-                        host-initiated (a maintenance pass, never a
-                        data-dependent stream op), so it is excluded from
-                        the traced switch — mixed-stream programs stay at
-                        four branches and sessions that never consolidate
-                        never compile the repair machinery
+    OP_REFINE      (5)  no operands — re-wires up to B of the stalest alive
+                        slots at construction quality (DESIGN.md §15);
+                        refined ids ride in ids[:, 0].
+
+    The maintenance codes (OP_CONSOLIDATE, OP_REFINE — declared in
+    ``core/maint.py``) are static-dispatch only: maintenance passes are
+    always host-initiated (never a data-dependent stream op), so they are
+    excluded from the traced switch — mixed-stream programs stay at four
+    branches and sessions that never consolidate/refine never compile the
+    repair machinery.
 
 ``valid`` masks the padded lanes of a ragged final micro-batch; ``offset``
 is the micro-batch's global item offset within its op, which keys the
@@ -64,44 +68,52 @@ import numpy as np
 from repro.core import consolidate as consolidate_mod
 from repro.core import delete as delete_mod
 from repro.core import insert as insert_mod
+from repro.core import maint
+from repro.core import refine as refine_mod
 from repro.core import search
 from repro.core.graph import NULL, GraphState, mask_to_slots
 from repro.core.params import IndexParams
+
+# Maintenance op codes, journal codes, and PRNG stream ids are declared in
+# the maintenance-op registry (core/maint.py) and re-exported here under
+# their historical names — values are frozen for journal/checkpoint
+# bit-compatibility. Maintenance keys are folded from
+# fold_in(base_key, <op>.key_stream) + the op's own counter, NEVER from the
+# op-key chain: auto-triggered maintenance must not shift the keys (and
+# therefore the results) of subsequent stream ops.
+from repro.core.maint import (  # noqa: F401  (re-exports)
+    CONSOLIDATE_KEY_STREAM,
+    JR_CONSOLIDATE,
+    JR_GROW,
+    JR_MERGE,
+    JR_REFINE,
+    MERGE_KEY_STREAM,
+    OP_CONSOLIDATE,
+    OP_REFINE,
+    REFINE_KEY_STREAM,
+)
 
 OP_QUERY = 0
 OP_INSERT = 1
 OP_DELETE = 2
 OP_NOOP = 3
-OP_CONSOLIDATE = 4
 
 OP_NAMES = {OP_QUERY: "query", OP_INSERT: "insert", OP_DELETE: "delete",
-            OP_NOOP: "noop", OP_CONSOLIDATE: "consolidate"}
+            OP_NOOP: "noop", OP_CONSOLIDATE: "consolidate",
+            OP_REFINE: "refine"}
 
 # Journal-only record codes (checkpoint/journal.py, DESIGN.md §11) — never
 # dispatched to the device. Stream ops journal under their OP_* code above;
 # these mark host-initiated events that replay must reproduce: the journal
-# header, flush points (a consolidation trigger site), and *explicit*
-# consolidate/grow calls (auto-triggered maintenance is NOT journaled — the
-# replayed op stream re-derives it from the same device-exact state).
+# header, flush points (a maintenance trigger site), and *explicit*
+# maintenance calls (auto-triggered maintenance is NOT journaled — the
+# replayed op stream re-derives it from the same device-exact state). The
+# maintenance record codes come from the registry above.
 JR_META = 16
 JR_FLUSH = 17
-JR_CONSOLIDATE = 18
-JR_GROW = 19
-JR_MERGE = 20  # explicit TieredSession merge (core/merge.py, DESIGN.md §12)
 
 JR_NAMES = {JR_META: "meta", JR_FLUSH: "flush",
-            JR_CONSOLIDATE: "consolidate!", JR_GROW: "grow!",
-            JR_MERGE: "merge!"}
-
-# PRNG stream id of the consolidation key chain (DESIGN.md §8): maintenance
-# keys are folded from fold_in(base_key, CONSOLIDATE_KEY_STREAM) + their own
-# counter, NEVER from the op-key chain — auto-triggered consolidations must
-# not shift the keys (and therefore the results) of subsequent stream ops.
-CONSOLIDATE_KEY_STREAM = 0x7FFFFFFF
-# PRNG stream id of the tiered streaming-merge key chain (DESIGN.md §12):
-# same isolation contract as consolidation — merge timing must never shift
-# the key chains (hence the results) of either tier's logical op stream.
-MERGE_KEY_STREAM = 0x7FFFFFFE
+            **{op.journal_code: f"{op.name}!" for op in maint.REGISTRY}}
 
 
 @functools.partial(
@@ -207,10 +219,21 @@ def apply_ops(
         out_ids = empty_ids.at[:, 0].set(jnp.where(tv, tomb, NULL))
         return st2, out_ids, empty_scores
 
+    def _refine(st: GraphState):
+        # operand-free: the branch picks its own work — the B stalest alive
+        # slots at this stream position — so chunked dispatch sweeps the
+        # graph oldest-rows-first deterministically (DESIGN.md §15)
+        tgt, tv = refine_mod.stalest_slots(st, B)
+        st2, _ = refine_mod.refine_chunk_impl(st, tgt, tv, key, params)
+        out_ids = empty_ids.at[:, 0].set(jnp.where(tv, tgt, NULL))
+        return st2, out_ids, empty_scores
+
     if static_op == OP_CONSOLIDATE:
-        # maintenance op, host-initiated by definition: compiled on its own,
-        # only by sessions that actually consolidate (see module docstring)
+        # maintenance ops, host-initiated by definition: compiled on their
+        # own, only by sessions that actually fire them (module docstring)
         return _consolidate(state)
+    if static_op == OP_REFINE:
+        return _refine(state)
     branches = (_query, _insert, _delete, _noop)
     if static_op is not None:
         # Python-level selection: compiles only this branch (facade mode)

@@ -94,6 +94,15 @@ class MaintenanceParams:
     merge_fresh_threshold: float | None = None
     merge_tombstone_threshold: float | None = None
     merge_chunk: int | None = None
+    # background refinement trigger gate (OP_REFINE, DESIGN.md §15): a
+    # refine pass fires opportunistically at flush() boundaries once
+    # ``refine_threshold`` update rows (insert + delete lanes) have been
+    # dispatched since the last pass — "wear" is a pure function of the op
+    # stream, so replay re-derives auto passes deterministically. ``None``
+    # disables. ``refine_chunk`` is the slots-per-micro-batch width of one
+    # pass (None → insert_chunk — one shape family with the stream).
+    refine_threshold: int | None = None
+    refine_chunk: int | None = None
 
     def __post_init__(self):
         assert self.insert_chunk >= 1 and self.delete_chunk >= 1
@@ -110,6 +119,8 @@ class MaintenanceParams:
         assert (self.merge_tombstone_threshold is None
                 or 0.0 < self.merge_tombstone_threshold <= 1.0)
         assert self.merge_chunk is None or self.merge_chunk >= 1
+        assert self.refine_threshold is None or self.refine_threshold >= 1
+        assert self.refine_chunk is None or self.refine_chunk >= 1
 
 
 @dataclasses.dataclass(frozen=True)

@@ -84,6 +84,9 @@ def bulk_knn_build(
                       jnp.cumsum(valid.astype(jnp.int32)) - 1, -1)
         ),
         clock=jnp.sum(valid).astype(jnp.int32),
+        # all bulk-built rows are equally fresh (invariant I7)
+        touch=state.touch.at[:n].set(jnp.where(valid, 0, -1)),
+        tclock=jnp.asarray(1, jnp.int32),
     )
 
     # exact kNN (self + dead excluded)

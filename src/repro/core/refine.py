@@ -1,0 +1,105 @@
+"""OP_REFINE — continuous background refinement (DESIGN.md §15).
+
+Graphs built incrementally under churn drift away from fresh-build quality:
+early vertices selected their neighbors on a much smaller graph, and delete
+repair only patches the rows adjacent to each deletion. The Dynamic
+Exploration Graph (Hezel et al., PAPERS.md) shows that spending idle cycles
+re-running neighbor selection on *stale* vertices recovers fresh-build
+quality without downtime.
+
+:func:`refine_chunk_impl` is the device pass: given a chunk of slots, it
+re-searches each slot's own vector through the batched beam engine at
+construction quality (``IndexParams.eff_insert_search`` — the same budget an
+insert gets), re-runs SELECT-NEIGHBORS over the search pool *unioned with
+the slot's current out-row* (good existing edges stay eligible), and
+scatter-applies the winning rows through ``set_out_edges_batch``. Staleness
+is the per-slot ``touch`` stamp maintained by ``graph.apply_row_updates``
+(invariant I7): :func:`stalest_slots` picks the B lowest-touch alive slots,
+and refining a slot bumps its stamp, so successive chunks sweep the graph
+oldest-rows-first without any host bookkeeping.
+
+Refinement never changes the alive/present sets, ``size``, vectors, codes,
+or stamps — it rewires edges only. Its PRNG keys come from the dedicated
+``REFINE_KEY_STREAM`` chain (registered in ``core/maint.py``), so firing a
+refine pass never shifts the op-key chain of the logical stream (the same
+timing-invariance contract as consolidate/merge).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import search, select
+from repro.core.graph import NULL, GraphState, set_out_edges_batch
+from repro.core.params import IndexParams
+
+
+def stalest_slots(state: GraphState, n: int) -> tuple[jax.Array, jax.Array]:
+    """The ≤ n stalest alive slots, in a fixed-shape frame.
+
+    Returns (ids i32[n] NULL padded, valid bool[n]): alive slots ordered by
+    ascending ``touch`` stamp, ties broken by lowest id (a -1 stamp — rows
+    never written through the batched appliers — is maximally stale). The
+    refine twin of ``graph.mask_to_slots``: one stable argsort over the
+    capacity-sized stamp vector bridges the data-dependent "stalest" set
+    into a jit-safe op frame.
+    """
+    cap = state.capacity
+    take = min(n, cap)
+    stale_key = jnp.where(state.alive, state.touch, jnp.int32(2**31 - 1))
+    order = jnp.argsort(stale_key, stable=True).astype(jnp.int32)
+    ids = order[:take]
+    valid = state.alive[ids]
+    ids = jnp.where(valid, ids, NULL)
+    if n > cap:
+        ids = jnp.concatenate([ids, jnp.full((n - cap,), NULL, jnp.int32)])
+        valid = jnp.concatenate([valid, jnp.zeros((n - cap,), bool)])
+    return ids, valid
+
+
+def refine_chunk_impl(
+    state: GraphState,
+    ids: jax.Array,       # i32[B]  slots to refine (NULL padded)
+    valid: jax.Array,     # bool[B]
+    key: jax.Array,
+    params: IndexParams,
+) -> tuple[GraphState, jax.Array]:
+    """Traceable refinement of one chunk of slots (the §15 device pass).
+
+    Lanes that are not alive are dropped, so the step is idempotent and safe
+    against stale frames. Phases (all batched, no per-item loops):
+
+      1. search — ONE ``beam_search`` call over the chunk's own vectors at
+         construction quality (``eff_insert_search``), exactly the budget an
+         insert of the same vector would get today.
+      2. select — vmapped SELECT-NEIGHBORS over (search pool ∪ current
+         out-row): the current neighbors compete with the fresh candidates,
+         so a refine can only keep or improve each edge under the pruning
+         rule; dead/masked neighbors lose their seat to alive ones.
+      3. apply — winning rows land in one ``set_out_edges_batch`` call
+         (single forward scatter + incremental reverse patch), which also
+         bumps the refined rows' ``touch`` stamps — the staleness sweep
+         advances on-device.
+
+    Returns (state, n_refined i32[]).
+    """
+    sp = params.eff_insert_search
+    valid = valid & (ids != NULL)
+    safe = jnp.where(valid, ids, 0)
+    valid = valid & state.alive[safe]
+    B = ids.shape[0]
+
+    vecs = state.vectors[safe]
+    starts = search.batch_entry_points(state, key, B, sp.num_starts)
+    res = search.beam_search(state, vecs, starts, sp)
+
+    cands = jnp.concatenate([res.ids, state.adj[safe]], axis=1)  # [B, K+d_out]
+    new_rows = jax.vmap(
+        lambda u, v, c: select.select_from_pool(
+            state, v, c, params.d_out, exclude=u[None]
+        )
+    )(safe, vecs, cands)
+    new_rows = jnp.where(valid[:, None], new_rows, NULL)
+
+    state = set_out_edges_batch(state, ids, new_rows, valid)
+    return state, jnp.sum(valid).astype(jnp.int32)

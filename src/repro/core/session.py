@@ -30,6 +30,21 @@ is set, the session auto-fires the jitted compaction pass
 flush boundaries once the tombstone share crosses it — which is what lets a
 MASK-strategy session survive an unbounded stream.
 
+Maintenance framework (DESIGN.md §14): every maintenance op — consolidate,
+grow, refine, (tiered) merge — is declared once in the registry of
+``core/maint.py``; the session's journal cseq snapshots, checkpoint
+counters, replay dispatch, ``stats()`` counters, and the fault harness's
+crash-point registry all iterate that registry instead of naming ops.
+
+Background refinement (DESIGN.md §15): when
+``MaintenanceParams.refine_threshold`` is set, the session opportunistically
+fires the jitted refinement pass (``refine()``, OP_REFINE micro-batches) at
+flush boundaries — the stream's natural idle points, where the op queue has
+just drained — once enough update rows ("wear") have been dispatched since
+the last pass. Each pass re-wires one chunk of the stalest alive slots at
+construction quality, pinning incremental graphs to fresh-build quality
+under churn.
+
 Capacity growth (DESIGN.md §9): when ``MaintenanceParams.max_capacity`` is
 set, the session auto-grows the state to a larger capacity tier
 (``graph.grow_state``, geometric ``growth_factor`` steps) at
@@ -65,7 +80,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import metrics, quantize, rebuild
+from repro.core import maint, metrics, quantize, rebuild
 from repro.core import delete as delete_mod
 from repro.core import ops as ops_mod
 from repro.core.graph import (
@@ -99,6 +114,7 @@ class PhaseTimers:
     consolidate_s: float = 0.0   # host dispatch + trigger sync of §8 passes
     grow_s: float = 0.0          # §9 capacity-tier moves (pad dispatch)
     merge_s: float = 0.0         # §12 tiered streaming-merge steps
+    refine_s: float = 0.0        # §15 background refinement passes
     flush_s: float = 0.0
     wall_s: float = 0.0
     n_queries: int = 0
@@ -112,12 +128,26 @@ class PhaseTimers:
     n_retries: int = 0           # transient dispatch failures absorbed (§11)
     n_merges: int = 0            # streaming merges completed (§12)
     n_merged: int = 0            # fresh-tier items drained into main (§12)
+    n_refines: int = 0           # background refinement passes run (§15)
+    n_refined: int = 0           # slots re-wired by refinement (§15)
     n_ops: int = 0
 
     def total(self) -> float:
         return (self.query_s + self.insert_s + self.delete_s
                 + self.rebuild_s + self.consolidate_s + self.grow_s
-                + self.merge_s + self.flush_s)
+                + self.merge_s + self.refine_s + self.flush_s)
+
+    def maintenance_counters(self) -> dict:
+        """Per-op (count, seconds) pairs, driven by the maint registry —
+        a new registered op surfaces here (and in ``Session.stats()`` /
+        ``run_workload`` summaries) without naming it anywhere."""
+        out: dict = {}
+        for op in maint.REGISTRY:
+            if op.count_field:
+                out[op.count_field] = getattr(self, op.count_field)
+            if op.time_field:
+                out[op.time_field] = getattr(self, op.time_field)
+        return out
 
     def to_dict(self) -> dict:
         d = dataclasses.asdict(self)
@@ -127,6 +157,17 @@ class PhaseTimers:
         wall = self.wall_s + self.rebuild_s
         d["ops_per_s"] = n_items / wall if wall > 0 else 0.0
         return d
+
+
+# registry contract: every registered maintenance op's timer fields must
+# exist on PhaseTimers — fail at import, not deep inside a stats() call
+_TIMER_FIELDS = {f.name for f in dataclasses.fields(PhaseTimers)}
+for _op in maint.REGISTRY:
+    for _f in (_op.time_field, _op.count_field):
+        assert _f is None or _f in _TIMER_FIELDS, (
+            f"maint op {_op.name!r} declares timer field {_f!r} "
+            "missing from PhaseTimers")
+del _TIMER_FIELDS, _op, _f
 
 
 class OpHandle:
@@ -168,6 +209,7 @@ class OpHandle:
         insert      → ids i32[n] (NULL where the index was full)
         delete      → None
         consolidate → ids i32[n] of the compacted tombstone slots
+        refine      → ids i32[n] of the re-wired slots
         """
         try:
             if self.op == "insert" and self.total_rows is not None:
@@ -181,7 +223,7 @@ class OpHandle:
                 if self.op == "query":
                     return (np.full((0, self.k), NULL, np.int32),
                             np.full((0, self.k), -np.inf, np.float32))
-                if self.op in ("insert", "consolidate"):
+                if self.op in ("insert", "consolidate", "refine"):
                     return np.zeros((0,), np.int32)
                 for ids, _, _ in self._chunks:
                     jax.block_until_ready(ids)
@@ -305,6 +347,16 @@ class Session:
         self._masked_hint = 0
         self._present_floor = 0
         self.last_consolidate_handle: OpHandle | None = None
+        # background-refinement bookkeeping (DESIGN.md §15): its own PRNG
+        # chain counter (same isolation contract as consolidation) plus the
+        # "wear" odometer — update rows dispatched since the last pass. Wear
+        # is a pure function of the op stream (never of pending-queue depth
+        # or wall-clock), which is what makes auto-refine decisions replay
+        # deterministically; it is checkpointed alongside the counter.
+        self._refine_counter = 0
+        self._refine_wear = 0
+        self._in_refine = False
+        self.last_refine_handle: OpHandle | None = None
         # growth engine bookkeeping (DESIGN.md §9): `_free_hint`
         # *underestimates* the free-slot count (every dispatched insert row
         # subtracts, hard-delete frees are ignored), so an insert the hint
@@ -377,15 +429,23 @@ class Session:
                         aux: dict | None = None) -> None:
         """Append one record *before* the action it describes (write-ahead).
 
-        ``seq``/``cseq`` snapshot the op and consolidate counters at append
-        time, which is what lets recovery skip records a later checkpoint
-        already subsumes (the crash window between checkpoint publish and
-        journal truncation would otherwise double-replay).
+        ``seq``/``cseq`` snapshot the op counter and the record's dedup
+        counter at append time, which is what lets recovery skip records a
+        later checkpoint already subsumes (the crash window between
+        checkpoint publish and journal truncation would otherwise
+        double-replay). The dedup counter is registry-driven: a maintenance
+        record snapshots its *own* op's counter (consolidate →
+        ``_consolidate_counter``, refine → ``_refine_counter``, ...); every
+        other record keeps the legacy consolidate-counter snapshot
+        byte-compatibly (stream-op replay only ever gates on ``seq``).
         """
         if self._journal is None:
             return
-        self._journal.append(code, seq=self._op_counter,
-                             cseq=self._consolidate_counter,
+        mop = maint.by_journal_code(code)
+        cseq = (getattr(self, mop.counter_attr)
+                if mop is not None and mop.counter_attr is not None
+                else self._consolidate_counter)
+        self._journal.append(code, seq=self._op_counter, cseq=cseq,
                              payload=payload, ids=ids, aux=aux)
         faults.crash_point("post-journal-append")
 
@@ -393,11 +453,14 @@ class Session:
     def _dispatch(self, op_code: int, arr, chunk: int, *,
                   fold_chunk_key: bool = False) -> OpHandle:
         """Chop one op into padded OpBatches and enqueue them (no sync)."""
-        if op_code == ops_mod.OP_CONSOLIDATE:
-            # static-only op (DESIGN.md §8): the traced switch would silently
-            # clip it to NOOP — route through consolidate() instead
-            raise ValueError("OP_CONSOLIDATE is not a stream op; "
-                             "use Session.consolidate()")
+        for mop in maint.SESSION_OPS:
+            if mop.op_code is not None and op_code == mop.op_code:
+                # static-only maintenance op: the traced switch would
+                # silently clip it to NOOP — route through the op's own
+                # session method instead
+                raise ValueError(
+                    f"OP_{mop.name.upper()} is not a stream op; "
+                    f"use Session.{mop.name}()")
         key = self._op_key()  # consumed even for empty ops: stable chain
         n = arr.shape[0]
         if n == 0:  # no device work: don't arm the busy-wall window
@@ -503,6 +566,7 @@ class Session:
         if keep is not None:
             h.row_map, h.total_rows = keep, total
         self._free_hint = max(self._free_hint - v.shape[0], 0)
+        self._refine_wear += v.shape[0]
         self.timers.insert_s += time.perf_counter() - t0
         self.timers.n_inserts += v.shape[0]
         return h
@@ -525,6 +589,7 @@ class Session:
                            fold_chunk_key=True)
         self.timers.delete_s += time.perf_counter() - t0
         self.timers.n_deletes += arr.shape[0]
+        self._refine_wear += arr.shape[0]
         if self.strategy == "mask":
             self._masked_hint += arr.shape[0]
             self._maybe_consolidate()
@@ -532,16 +597,14 @@ class Session:
             self._present_floor = max(self._present_floor - arr.shape[0], 0)
         return h
 
-    # -- consolidation engine (DESIGN.md §8) -------------------------------
-    def _consolidate_key(self) -> jax.Array:
-        """Next key of the consolidation chain — derived from the base key
-        but on its own stream, so firing (or not firing) a pass never
-        perturbs the op-key chain of the surrounding stream."""
-        base = jax.random.fold_in(self._base_key,
-                                  ops_mod.CONSOLIDATE_KEY_STREAM)
-        key = jax.random.fold_in(base, self._consolidate_counter)
-        self._consolidate_counter += 1
-        return key
+    # -- maintenance-op plumbing (DESIGN.md §14) ---------------------------
+    def _maint_key(self, mop: maint.MaintOp) -> jax.Array:
+        """Next key of ``mop``'s chain — derived from the base key but on
+        the op's own registered stream, so firing (or not firing) a pass
+        never perturbs the op-key chain of the surrounding stream."""
+        counter = getattr(self, mop.counter_attr)
+        setattr(self, mop.counter_attr, counter + 1)
+        return maint.maint_key(self._base_key, mop, counter)
 
     def _refresh_hints(self) -> None:
         """Replace the host hints with device-exact counts (synchronizes)."""
@@ -600,8 +663,8 @@ class Session:
         batch = ops_mod.make_op(ops_mod.OP_CONSOLIDATE, chunk, self.params.dim)
         for lo in range(0, n_masked, chunk):
             self._state, ids, scores = ops_mod.apply_ops_step(
-                self._state, batch, self._consolidate_key(), params,
-                self.strategy, static_op=static_op,
+                self._state, batch, self._maint_key(maint.CONSOLIDATE),
+                params, self.strategy, static_op=static_op,
             )
             chunks.append((ids, scores, min(chunk, n_masked - lo)))
         handle = OpHandle(
@@ -640,6 +703,84 @@ class Session:
             return self.consolidate(_n_masked=self._masked_hint, _auto=True)
         finally:
             self._in_consolidate = False
+
+    # -- background refinement engine (DESIGN.md §15) ----------------------
+    def refine(self, *, n: int | None = None, chunk: int | None = None,
+               _auto: bool = False) -> int:
+        """Re-wire the stalest alive slots at construction quality.
+
+        Dispatches ``ceil(n/chunk)`` OP_REFINE micro-batches — each picks
+        the chunk's worth of lowest-``touch`` alive slots at its stream
+        position (refined rows bump their stamp on-device, so successive
+        chunks sweep oldest-rows-first), re-searches their own vectors
+        through the batched beam engine at ``eff_insert_search`` quality,
+        re-selects over (pool ∪ current row) and scatter-applies. ``n``
+        defaults to one chunk — a bounded slice of background work.
+        Returns the number of slots submitted for refinement; the
+        dispatched work itself is async (settled by ``flush``/reads).
+
+        Refinement never changes the alive set, so it needs no hint
+        bookkeeping; its keys come from the registered REFINE chain, so
+        firing a pass never shifts the op-key chain (timing invariance).
+        Only *explicit* calls journal (JR_REFINE): auto-triggered passes
+        are a pure function of the replayed op stream (DESIGN.md §11).
+        """
+        if not _auto:
+            self._journal_append(
+                maint.REFINE.journal_code,
+                aux={"n": None if n is None else int(n),
+                     "chunk": None if chunk is None else int(chunk)})
+        faults.crash_point("refine-begin")
+        t0 = time.perf_counter()
+        mp = self.params.maintenance
+        chunk = int(chunk) if chunk else (mp.refine_chunk or mp.insert_chunk)
+        n_alive = int(jnp.sum(self._state.alive))
+        n_target = min(chunk if n is None else int(n), n_alive)
+        self._refine_wear = 0  # any pass resets the odometer (incl. replay)
+        if n_target <= 0:
+            self.timers.refine_s += time.perf_counter() - t0
+            return 0
+        if self._window_t0 is None:
+            self._window_t0 = time.perf_counter()
+        # static-dispatched like every maintenance op: host-initiated, so
+        # the mixed-stream switch never carries this branch and only
+        # refining sessions compile it. Operand-free: one encoded batch
+        # serves every step of the pass.
+        batch = ops_mod.make_op(ops_mod.OP_REFINE, chunk, self.params.dim)
+        chunks = []
+        for lo in range(0, n_target, chunk):
+            self._state, ids, scores = ops_mod.apply_ops_step(
+                self._state, batch, self._maint_key(maint.REFINE),
+                self.params, self.strategy, static_op=ops_mod.OP_REFINE,
+            )
+            chunks.append((ids, scores, min(chunk, n_target - lo)))
+            faults.crash_point("refine-step")
+        handle = OpHandle(
+            "refine", n_target, self.params.search.pool_size, chunks,
+            on_done=self._handle_done,
+        )
+        self.last_refine_handle = handle
+        self._pending.append(handle)
+        self.timers.n_ops += 1
+        self.timers.n_refines += 1
+        self.timers.n_refined += n_target
+        self.timers.refine_s += time.perf_counter() - t0
+        return n_target
+
+    def _maybe_refine(self) -> int:
+        """Opportunistic trigger: fire one bounded refinement pass at a
+        flush boundary (the op queue has just drained — the stream's idle
+        point) once ``refine_threshold`` update rows of wear accumulated.
+        The wear odometer is free host arithmetic; the only device read is
+        the alive count of the pass itself, paid when the gate crosses."""
+        thr = self.params.maintenance.refine_threshold
+        if thr is None or self._in_refine or self._refine_wear < thr:
+            return 0
+        self._in_refine = True
+        try:
+            return self.refine(_auto=True)
+        finally:
+            self._in_refine = False
 
     # -- capacity growth engine (DESIGN.md §9) -----------------------------
     def _ensure_room(self, n: int) -> None:
@@ -725,6 +866,7 @@ class Session:
         faults.crash_point("pre-flush")
         self._journal_append(ops_mod.JR_FLUSH)
         self._maybe_consolidate()
+        self._maybe_refine()
         self._sync()
         faults.crash_point("post-flush")
         return self.timers
@@ -813,7 +955,10 @@ class Session:
                for k, v in graph_stats(self._state).items()}
         out["capacity"] = self._state.capacity  # live tier, not params'
         out["n_refused"] = self.timers.n_refused
-        out["n_grows"] = self.timers.n_grows
+        # every registered maintenance op reports its count/time uniformly
+        # (n_consolidations/consolidate_s, n_grows/grow_s, n_refines/
+        # refine_s, n_merges/merge_s) — a new op's counters arrive for free
+        out.update(self.timers.maintenance_counters())
         return out
 
     # -- checkpointing (DESIGN.md §7) --------------------------------------
@@ -837,16 +982,20 @@ class Session:
         """
         mgr = self._require_ckpt()
         self.flush()
-        path = mgr.save(
-            step, self._ckpt_tree(),
-            extra={
-                "fingerprint": params_fingerprint(self.params, self.strategy),
-                "capacity": int(self._state.capacity),
-                "op_counter": self._op_counter,
-                "consolidate_counter": self._consolidate_counter,
-                "timers": self.timers.to_dict(),
-            },
-        )
+        extra = {
+            "fingerprint": params_fingerprint(self.params, self.strategy),
+            "capacity": int(self._state.capacity),
+            "op_counter": self._op_counter,
+            "timers": self.timers.to_dict(),
+        }
+        # checkpoint-counter contract (DESIGN.md §14): each registered
+        # maintenance op persists its dedup counter + declared state attrs
+        for mop in maint.SESSION_OPS:
+            if mop.extra_key is not None:
+                extra[mop.extra_key] = int(getattr(self, mop.counter_attr))
+            for attr, ekey in mop.state_attrs:
+                extra[ekey] = int(getattr(self, attr))
+        path = mgr.save(step, self._ckpt_tree(), extra=extra)
         # the published checkpoint subsumes the whole journal prefix; a crash
         # in this window (before truncation) is safe — recovery skips records
         # whose seq/cseq the restored counters already cover
@@ -920,7 +1069,14 @@ class Session:
         self._state = dataclasses.replace(state, capacity=saved_cap)
         self._base_key = tree["base_key"]
         self._op_counter = int(extra["op_counter"])
-        self._consolidate_counter = int(extra.get("consolidate_counter", 0))
+        # registry-driven counter restore; .get(..., 0) keeps checkpoints
+        # written before an op existed restorable (missing key = never fired)
+        for mop in maint.SESSION_OPS:
+            if mop.extra_key is not None:
+                setattr(self, mop.counter_attr,
+                        int(extra.get(mop.extra_key, 0)))
+            for attr, ekey in mop.state_attrs:
+                setattr(self, attr, int(extra.get(ekey, 0)))
         self._refresh_hints()
         if self._journal is not None:
             self._journal.reset(meta={
@@ -1012,20 +1168,17 @@ class Session:
                 sess.delete(rec.ids, chunk=rec.aux.get("chunk"))
             elif code == ops_mod.JR_FLUSH:
                 sess.flush()
-            elif code == ops_mod.JR_CONSOLIDATE:
-                if rec.cseq < sess._consolidate_counter:
-                    n_skipped += 1
-                    continue
-                sess.consolidate(strategy=rec.aux.get("strategy"),
-                                 chunk=rec.aux.get("chunk"))
-            elif code == ops_mod.JR_GROW:
-                target = int(rec.aux["new_capacity"])
-                if target <= sess._state.capacity:
-                    n_skipped += 1
-                    continue
-                sess.grow(target)
             else:
-                raise ValueError(f"unknown journal record code {code}")
+                # maintenance records dispatch through the registry: the
+                # op's replay hook re-executes the pass (or dedups it
+                # against the restored counters) — adding an op needs no
+                # new branch here (DESIGN.md §14)
+                mop = maint.by_journal_code(code)
+                if mop is None or mop.tier != "session":
+                    raise ValueError(f"unknown journal record code {code}")
+                if not mop.replay(sess, rec):
+                    n_skipped += 1
+                    continue
             n_replayed += 1
         sess._sync()  # settle WITHOUT the flush trigger (no extra compaction)
         # a gapped suffix is a dead timeline — it can never replay against

@@ -59,6 +59,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import maint
 from repro.core import merge as merge_mod
 from repro.core import metrics
 from repro.core import ops as ops_mod
@@ -391,16 +392,22 @@ class TieredSession:
             return
         # cseq carries the merge counter here: JR_MERGE records are deduped
         # against merges a later checkpoint already covers, exactly like
-        # Session's JR_CONSOLIDATE/cseq pairing (DESIGN.md §11)
+        # Session's JR_CONSOLIDATE/cseq pairing (DESIGN.md §11). The
+        # counter is the MERGE registry entry's ``counter_attr``
+        # (core/maint.py) — the tiered tier registers exactly one
+        # maintenance op, so every record snapshots it.
         self._journal.append(code, seq=self._op_counter,
-                             cseq=self._merges_done,
+                             cseq=getattr(self, maint.MERGE.counter_attr),
                              payload=payload, ids=ids, aux=aux)
         faults.crash_point("post-journal-append")
 
     # -- merge engine plumbing (DESIGN.md §12) -----------------------------
     def _merge_key(self) -> jax.Array:
-        base = jax.random.fold_in(self._base_key, ops_mod.MERGE_KEY_STREAM)
-        key = jax.random.fold_in(base, self._merge_counter)
+        # drawn from the MERGE op's registered key stream (DESIGN.md §14);
+        # _merge_counter advances per *draw* (several per merge), while
+        # _merges_done — the cseq dedup counter — advances per merge
+        key = maint.maint_key(self._base_key, maint.MERGE,
+                              self._merge_counter)
         self._merge_counter += 1
         return key
 
@@ -707,18 +714,22 @@ class TieredSession:
 
     def stats(self) -> dict:
         self.flush()
-        return {
+        out = {
             "n_alive": self.n_alive,
             "n_fresh": int(np.sum(self._fm.present)),
             "n_main": int(np.sum(self._mm.present & ~self._mm.masked)),
             "n_main_masked": int(np.sum(self._mm.masked)),
             "fresh_capacity": self._fresh.state.capacity,
             "main_capacity": self._main.state.capacity,
-            "n_merges": self.timers.n_merges,
             "n_merged": self.timers.n_merged,
             "n_refused": self.timers.n_refused,
             "merge_active": self._active_merge is not None,
         }
+        # registry-driven maintenance counters (n_merges/merge_s, plus the
+        # session-tier counters of this facade's own timers), like
+        # Session.stats (DESIGN.md §14)
+        out.update(self.timers.maintenance_counters())
+        return out
 
     def check_mirrors(self) -> None:
         """Assert the host mirrors match the device bitmaps bit-exactly."""
@@ -797,7 +808,8 @@ class TieredSession:
                 "fresh_op_counter": self._fresh._op_counter,
                 "main_op_counter": self._main._op_counter,
                 "merge_counter": self._merge_counter,
-                "merges_done": self._merges_done,
+                # the MERGE registry entry's checkpoint-counter contract
+                maint.MERGE.extra_key: getattr(self, maint.MERGE.counter_attr),
                 "next_ext": self._next_ext,
                 "timers": self.timers.to_dict(),
             },
@@ -864,7 +876,8 @@ class TieredSession:
         self._fresh._op_counter = int(extra["fresh_op_counter"])
         self._main._op_counter = int(extra["main_op_counter"])
         self._merge_counter = int(extra["merge_counter"])
-        self._merges_done = int(extra["merges_done"])
+        setattr(self, maint.MERGE.counter_attr,
+                int(extra[maint.MERGE.extra_key]))
         self._next_ext = int(extra["next_ext"])
         self._active_merge = None
         # rebuild mirrors + location table from the checkpointed state
@@ -969,13 +982,15 @@ class TieredSession:
                 sess.delete(rec.ids)
             elif code == ops_mod.JR_FLUSH:
                 sess.flush()
-            elif code == ops_mod.JR_MERGE:
-                if rec.cseq < sess._merges_done:
+            else:
+                # tiered maintenance records dispatch through the registry
+                # (core/maint.py), mirroring Session.recover
+                mop = maint.by_journal_code(code)
+                if mop is None or mop.tier != "tiered":
+                    raise ValueError(f"unknown journal record code {code}")
+                if not mop.replay(sess, rec):
                     n_skipped += 1
                     continue
-                sess._merge_to_completion()
-            else:
-                raise ValueError(f"unknown journal record code {code}")
             n_replayed += 1
         sess._fresh._sync()
         sess._main._sync()

@@ -290,6 +290,7 @@ def init_specs_tree(dp: DistParams) -> GraphState:
         adj=z(1, cap, dp.index.d_out), radj=z(1, cap, dp.index.eff_d_in),
         alive=z(1, cap), present=z(1, cap), size=z(1),
         stamps=z(1, cap), clock=z(1),
+        touch=z(1, cap), tclock=z(1),
         capacity=cap, dim=dim, d_out=dp.index.d_out,
         d_in=dp.index.eff_d_in, metric=dp.index.metric,
     )

@@ -32,34 +32,34 @@ import random
 import threading
 from typing import Iterator
 
+from repro.core import maint as _maint
+
 # Every name production code may pass to crash_point(). Grouped by tier;
 # tests/benchmarks import SESSION_CRASH_POINTS for the single-process
 # recovery matrix and SHARDED_CRASH_POINTS for the distributed tier.
+#
+# Maintenance-op kill sites are *generated* from the maintenance-op registry
+# (core/maint.py): an op declares its crash points once and they join the
+# closed registry — and thereby the recovery crash matrix — here, without
+# hand-listing. The infrastructure sites (journal/flush/dispatch/checkpoint)
+# are not maintenance ops and stay listed explicitly. For consolidate that
+# yields ("pre-consolidate", "post-consolidate"), grow ("pre-grow",
+# "post-grow"), refine ("refine-begin", "refine-step"), merge the five
+# merge-phase points — see each op's entry for per-point semantics.
 SESSION_CRASH_POINTS = (
     "post-journal-append",    # record durable, device never saw the op
     "pre-flush",              # flush requested, nothing synced yet
     "post-flush",             # host/device synced, timers not yet settled
-    "pre-consolidate",        # compaction about to start
-    "post-consolidate",       # compaction ran, caller not yet resumed
-    "pre-grow",               # capacity migration about to start
-    "post-grow",              # migrated state live, caller not yet resumed
+    *_maint.crash_points("session"),
     "mid-checkpoint-save",    # shards written, manifest/publish pending
     "post-checkpoint-save",   # checkpoint published, journal not truncated
 )
 SHARDED_CRASH_POINTS = (
     "sharded-pre-dispatch",   # per-shard op batch built, not dispatched
     "sharded-post-dispatch",  # mesh program ran, handles not retired
-    "sharded-consolidate-pass",  # between lockstep consolidation passes
-    "sharded-pre-grow",       # lockstep capacity migration about to start
-    "sharded-post-grow",      # migrated mesh state live
+    *_maint.sharded_crash_points(),
 )
-TIERED_CRASH_POINTS = (
-    "merge-begin",            # merge journaled/armed, snapshot not yet taken
-    "merge-compact-step",     # between main-tier tombstone compaction chunks
-    "merge-drain-step",       # between fresh→main drain chunks
-    "pre-merge-swap",         # drain done, fresh slots not yet released
-    "post-merge-swap",        # tier swap applied, caller not yet resumed
-)
+TIERED_CRASH_POINTS = _maint.crash_points("tiered")
 CRASH_POINTS = (SESSION_CRASH_POINTS + SHARDED_CRASH_POINTS
                 + TIERED_CRASH_POINTS)
 _CRASH_POINT_SET = frozenset(CRASH_POINTS)

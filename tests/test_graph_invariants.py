@@ -1,4 +1,12 @@
-"""Property tests: graph invariants survive arbitrary op sequences (I1–I4)."""
+"""Property tests: graph invariants survive arbitrary op sequences.
+
+The full-strength health check (:func:`assert_graph_healthy`) covers I1–I4
+via ``helpers.check_invariants``, degree bounds, the ``rebuild_radj_rows``
+reverse-adjacency oracle, codes↔vectors sync (I5), and the touch-stamp
+contract (I7) — and the maintenance-op harness at the bottom runs EVERY op
+registered in ``repro.core.maint`` through it, so a new maintenance op is
+invariant-tested by registering one scenario instead of copying the checks.
+"""
 import numpy as np
 import pytest
 
@@ -22,10 +30,62 @@ except ImportError:  # pragma: no cover - exercised on slim images only
     st = _AnyStrategy()
 
 from helpers import build_index, check_invariants, small_params
-from repro.core import IPGMIndex
+from repro.core import (
+    IPGMIndex,
+    IndexParams,
+    MaintenanceParams,
+    SearchParams,
+    Session,
+    TieredSession,
+    maint,
+)
 from repro.core.graph import NULL
 
 pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
+
+def assert_graph_healthy(state):
+    """The shared full-strength health check (module docstring).
+
+    One copy, used by every per-op test and the registry harness below —
+    this is what each maintenance op must leave behind.
+    """
+    import jax.numpy as jnp
+
+    from repro.core.graph import rebuild_radj_rows
+    from repro.core.quantize import quantize_rows
+
+    errs = check_invariants(state)  # I1–I4 incl. freed-slot edges
+    assert not errs, errs[:5]
+    adj = np.asarray(state.adj)
+    radj = np.asarray(state.radj)
+    # degree bounds
+    assert (np.sum(adj != NULL, axis=1) <= state.d_out).all()
+    assert (np.sum(radj != NULL, axis=1) <= state.d_in).all()
+    # radj oracle: a full recompute from adj must agree row-for-row as sets
+    # (incremental patches preserve hole positions, not entry order) and
+    # must not need to drop any forward edge
+    rebuilt = rebuild_radj_rows(state, jnp.ones((state.capacity,), bool))
+    assert np.array_equal(np.asarray(rebuilt.adj), adj), \
+        "recompute dropped forward edges — in-degree bound was violated"
+    reb = np.asarray(rebuilt.radj)
+    for v in range(state.capacity):
+        got = set(radj[v][radj[v] != NULL].tolist())
+        want = set(reb[v][reb[v] != NULL].tolist())
+        assert got == want, v
+    # I5: codes/scales re-check bit-exactly; freed slots are scrubbed
+    present = np.asarray(state.present)
+    codes, scales = quantize_rows(state.vectors)
+    np.testing.assert_array_equal(np.asarray(state.codes)[present],
+                                  np.asarray(codes)[present])
+    np.testing.assert_array_equal(np.asarray(state.scales)[present],
+                                  np.asarray(scales)[present])
+    assert (np.asarray(state.codes)[~present] == 0).all()
+    assert (np.asarray(state.scales)[~present] == 0.0).all()
+    # I7: freed slots carry no stamp; no stamp is from the future
+    touch = np.asarray(state.touch)
+    assert (touch[~present] == -1).all(), "freed slot kept a touch stamp"
+    assert (touch < int(state.tclock)).all(), "touch stamp >= tclock"
 
 
 @settings(max_examples=10, deadline=None)
@@ -142,39 +202,18 @@ def _consolidated_index(seed, consolidate_strategy, n_del):
 @pytest.mark.parametrize("consolidate_strategy", ["pure", "local", "global"])
 @pytest.mark.parametrize("seed", [0, 1, 2])
 def test_post_consolidation_invariants(seed, consolidate_strategy):
-    """After compaction: no edges into freed slots (I2), radj consistent
-    with adj via the ``rebuild_radj_rows`` oracle, degree bounds hold, and
-    the freed slots are genuinely reusable by subsequent inserts."""
-    import jax.numpy as jnp
-    from repro.core.graph import rebuild_radj_rows
-
+    """After compaction: full health (shared check), no edges into the freed
+    slots in either direction, and the freed slots genuinely reusable."""
     n_del = int(np.random.default_rng(seed).integers(5, 21))
     idx, victims, rng = _consolidated_index(seed, consolidate_strategy, n_del)
     state = idx.state
-    errs = check_invariants(state)  # covers I1–I4 incl. freed-slot edges
-    assert not errs, errs[:5]
+    assert_graph_healthy(state)
     adj = np.asarray(state.adj)
     radj = np.asarray(state.radj)
     # no edges touch the freed slots, in either direction
     assert not np.isin(adj, victims).any()
     assert not np.isin(radj, victims).any()
     assert (adj[victims] == NULL).all() and (radj[victims] == NULL).all()
-    # degree bounds
-    assert (np.sum(adj != NULL, axis=1) <= state.d_out).all()
-    assert (np.sum(radj != NULL, axis=1) <= state.d_in).all()
-    # radj oracle: a full recompute from adj must agree row-for-row as sets
-    # (the incremental patch preserves hole positions, not entry order) and
-    # must not need to drop any forward edge
-    rebuilt = rebuild_radj_rows(
-        state, jnp.ones((state.capacity,), bool)
-    )
-    assert np.array_equal(np.asarray(rebuilt.adj), adj), \
-        "recompute dropped forward edges — in-degree bound was violated"
-    for v in range(state.capacity):
-        got = set(radj[v][radj[v] != NULL].tolist())
-        want = set(np.asarray(rebuilt.radj)[v]
-                   [np.asarray(rebuilt.radj)[v] != NULL].tolist())
-        assert got == want, v
     # freed slots reusable: the allocator hands them out lowest-first
     n_new = len(victims)
     new_ids = np.asarray(
@@ -191,11 +230,9 @@ def test_post_consolidation_invariants(seed, consolidate_strategy):
 
 def test_grow_state_preserves_graph_and_adds_empty_slots():
     """After ``grow_state``: old slots byte-identical, new slots edge-free
-    and invisible (not present, zero vectors), radj consistent with the
-    ``rebuild_radj_rows`` oracle at the new tier, invariants clean."""
-    import jax.numpy as jnp
-
-    from repro.core.graph import grow_state, rebuild_radj_rows
+    and invisible (not present, zero vectors), full health (shared check) at
+    the new tier."""
+    from repro.core.graph import grow_state
 
     rng = np.random.default_rng(7)
     X = rng.normal(size=(40, 8)).astype(np.float32)
@@ -212,26 +249,18 @@ def test_grow_state_preserves_graph_and_adds_empty_slots():
     assert not np.asarray(grown.present)[48:].any()
     assert not np.asarray(grown.alive)[48:].any()
     assert (np.asarray(grown.vectors)[48:] == 0).all()
+    assert (np.asarray(grown.touch)[48:] == -1).all()
     assert int(np.asarray(grown.size)) == int(np.asarray(st.size))
-    errs = check_invariants(grown)
-    assert not errs, errs[:5]
-    rebuilt = rebuild_radj_rows(grown, jnp.ones((100,), bool))
-    assert np.array_equal(np.asarray(rebuilt.adj), np.asarray(grown.adj))
-    radj = np.asarray(grown.radj)
-    reb = np.asarray(rebuilt.radj)
-    for v in range(100):
-        assert (set(radj[v][radj[v] != NULL].tolist())
-                == set(reb[v][reb[v] != NULL].tolist())), v
+    assert_graph_healthy(grown)
     # no-op and shrink edges of the contract
-    from repro.core.graph import grow_state as gs
-    assert gs(st, 48) is st
+    assert grow_state(st, 48) is st
     with pytest.raises(ValueError, match="shrink"):
-        gs(st, 16)
+        grow_state(st, 16)
 
 
 def test_grown_index_keeps_invariants_under_updates():
     """Updates running at the grown tier (insert into the padded slots,
-    delete across the old/new boundary) keep I1–I4 and degree bounds."""
+    delete across the old/new boundary) keep full health."""
     from repro.core.graph import grow_state
 
     rng = np.random.default_rng(11)
@@ -242,12 +271,7 @@ def test_grown_index_keeps_invariants_under_updates():
     assert (np.asarray(ids) != NULL).all()
     alive_ids = np.flatnonzero(np.asarray(idx.state.alive))
     idx.delete(rng.choice(alive_ids, size=20, replace=False))
-    errs = check_invariants(idx.state)
-    assert not errs, errs[:5]
-    adj = np.asarray(idx.state.adj)
-    radj = np.asarray(idx.state.radj)
-    assert (np.sum(adj != NULL, axis=1) <= idx.state.d_out).all()
-    assert (np.sum(radj != NULL, axis=1) <= idx.state.d_in).all()
+    assert_graph_healthy(idx.state)
 
 
 def test_delete_then_reinsert_no_stale_edges():
@@ -259,3 +283,94 @@ def test_delete_then_reinsert_no_stale_edges():
     idx.insert(rng.normal(size=(15, 8)).astype(np.float32) + 100.0)
     errs = check_invariants(idx.state)
     assert not errs, errs[:5]
+
+
+# ---------------------------------------------------------------------------
+# the maintenance-op harness (DESIGN.md §14): every op registered in
+# repro.core.maint runs an end-to-end scenario and must leave every touched
+# GraphState passing the shared full-strength health check. Adding an op =
+# adding one scenario function here; forgetting one fails the completeness
+# assertion at the bottom.
+# ---------------------------------------------------------------------------
+
+def _stream_params(**maintenance_kw):
+    mkw = dict(strategy="mask", insert_chunk=16, delete_chunk=16)
+    mkw.update(maintenance_kw)
+    return IndexParams(
+        capacity=96, dim=8, d_out=6,
+        search=SearchParams(pool_size=16, max_steps=48, num_starts=2),
+        maintenance=MaintenanceParams(**mkw),
+    )
+
+
+def _churned_session(seed, **maintenance_kw):
+    """A Session with churn on it: insert, delete a third, insert again."""
+    rng = np.random.default_rng(seed)
+    sess = Session(_stream_params(**maintenance_kw), seed=0)
+    sess.insert(rng.normal(size=(48, 8)).astype(np.float32))
+    sess.delete(rng.choice(48, size=16, replace=False))
+    sess.insert(rng.normal(size=(8, 8)).astype(np.float32))
+    sess.flush()
+    return sess, rng
+
+
+def _scenario_consolidate(seed):
+    sess, _ = _churned_session(seed)
+    n = sess.consolidate()
+    assert n == 16
+    sess.flush()
+    return [sess.state]
+
+
+def _scenario_grow(seed):
+    sess, rng = _churned_session(seed, max_capacity=256)
+    sess.grow(192)
+    sess.insert(rng.normal(size=(20, 8)).astype(np.float32))
+    sess.flush()
+    assert sess.state.capacity == 192
+    return [sess.state]
+
+
+def _scenario_refine(seed):
+    sess, _ = _churned_session(seed, refine_chunk=8)
+    before = {f: np.asarray(getattr(sess.state, f)).copy()
+              for f in ("alive", "present", "size", "vectors", "stamps")}
+    n = sess.refine(n=24)
+    assert n == 24
+    sess.flush()
+    # refinement rewires edges ONLY (its §15 contract)
+    for f, want in before.items():
+        np.testing.assert_array_equal(
+            np.asarray(getattr(sess.state, f)), want, err_msg=f)
+    return [sess.state]
+
+
+def _scenario_merge(seed):
+    rng = np.random.default_rng(seed)
+    sess = TieredSession(_stream_params(max_capacity=384), fresh_capacity=32,
+                         seed=0)
+    sess.insert(rng.normal(size=(40, 8)).astype(np.float32))
+    sess.delete(np.arange(10))
+    sess.merge()
+    sess.insert(rng.normal(size=(12, 8)).astype(np.float32))
+    sess.flush()
+    return [sess._fresh.state, sess._main.state]
+
+
+_SCENARIOS = {
+    "consolidate": _scenario_consolidate,
+    "grow": _scenario_grow,
+    "refine": _scenario_refine,
+    "merge": _scenario_merge,
+}
+
+
+def test_every_registered_op_has_a_scenario():
+    assert set(_SCENARIOS) == {op.name for op in maint.REGISTRY}
+
+
+@pytest.mark.parametrize("op_name", sorted(_SCENARIOS))
+@pytest.mark.parametrize("seed", [0, 1])
+def test_maintenance_op_leaves_graph_healthy(op_name, seed):
+    for state in _SCENARIOS[op_name](seed):
+        assert_graph_healthy(state)

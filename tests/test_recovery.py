@@ -44,9 +44,14 @@ CHUNK = 16
 
 
 def _params(**maintenance_kw):
+    # every session-tier maintenance op is armed so the matrix stream
+    # reaches every registered crash point: auto-consolidate, auto-grow,
+    # and auto-refine (refine-begin/refine-step joined the registry with
+    # OP_REFINE — the stream accrues ~18 update rows per schedule cycle,
+    # so threshold 30 fires passes at several flush boundaries)
     mkw = dict(strategy="mask", insert_chunk=CHUNK, delete_chunk=CHUNK,
                consolidate_threshold=0.3, max_capacity=4 * CAP,
-               growth_factor=2.0)
+               growth_factor=2.0, refine_threshold=30, refine_chunk=8)
     mkw.update(maintenance_kw)
     return IndexParams(
         capacity=CAP, dim=DIM, d_out=6,
@@ -211,6 +216,8 @@ def _state_summary(sess, probe=True):
         "capacity": st.capacity,
         "op_counter": sess._op_counter,
         "consolidate_counter": sess._consolidate_counter,
+        "refine_counter": sess._refine_counter,
+        "refine_wear": sess._refine_wear,
     }
     if probe:
         ids, scores = sess.query(_probe_q(), k=10).result()
@@ -222,6 +229,8 @@ def _assert_bit_identical(a, b, label):
     assert a["capacity"] == b["capacity"], label
     assert a["op_counter"] == b["op_counter"], label
     assert a["consolidate_counter"] == b["consolidate_counter"], label
+    assert a["refine_counter"] == b["refine_counter"], label
+    assert a["refine_wear"] == b["refine_wear"], label
     for f, arr in a["arrays"].items():
         np.testing.assert_array_equal(
             arr, b["arrays"][f], err_msg=f"{label}: state.{f} diverged")
@@ -320,6 +329,75 @@ def test_explicit_consolidate_and_grow_are_journaled(tmp_path):
     assert info["step"] is None and info["n_replayed"] >= 5
     _assert_bit_identical(_state_summary(rec, probe=False), want,
                           "explicit maintenance")
+
+
+def test_explicit_refine_is_journaled(tmp_path):
+    """Explicit refine() journals JR_REFINE with its n/chunk aux, and a
+    crash afterwards replays the pass — the rewired edges and the refine
+    key-chain counter are bit-identical to the original timeline."""
+    p = _params(consolidate_threshold=None, refine_threshold=None)
+    sess = Session(p, seed=1, checkpoint_dir=tmp_path)
+    sess.insert(_vec(0))
+    sess.insert(_vec(1))
+    sess.delete(sess.insert(_vec(2)).result()[:3])
+    n = sess.refine(n=10, chunk=4)
+    assert n == 10
+    sess.insert(_vec(3))
+    sess.flush()
+    want = _state_summary(sess, probe=False)
+    assert want["refine_counter"] == 3  # ceil(10/4) key draws
+    del sess
+
+    rec = Session.recover(tmp_path, p, seed=1)
+    assert rec.recovery_info["step"] is None
+    _assert_bit_identical(_state_summary(rec, probe=False), want,
+                          "explicit refine replay")
+
+
+def test_pre_refactor_journal_replays_through_registry(tmp_path):
+    """Back-compat acceptance: a journal written with the *pre-registry*
+    literal record codes (JR_META=16, JR_FLUSH=17, JR_CONSOLIDATE=18,
+    JR_GROW=19) and the legacy cseq discipline must replay bit-exactly
+    through the registry dispatch path."""
+    from repro.core.session import params_fingerprint
+
+    p = _params(consolidate_threshold=None, refine_threshold=None)
+
+    # the control timeline, executed live (its own journal discarded)
+    sess = Session(p, seed=9)
+    sess.insert(_vec(30))
+    sess.delete(np.asarray([0, 2, 4], np.int32))
+    sess.flush()
+    sess.consolidate()
+    sess.grow(2 * CAP)
+    sess.insert(_vec(31))
+    sess.flush()
+    want = _state_summary(sess, probe=False)
+    del sess
+
+    # the same timeline as raw journal bytes, appended exactly as the
+    # pre-refactor writer did: literal numeric codes, seq = op counter,
+    # cseq = consolidate counter at append time
+    j = journal_mod.OpJournal(tmp_path / "journal.bin", fsync="always")
+    fp = params_fingerprint(p, p.maintenance.strategy)
+    j.append(16, seq=0, cseq=0, aux={"fingerprint": fp})           # META
+    j.append(ops_mod.OP_INSERT, seq=0, cseq=0, payload=_vec(30),
+             aux={"chunk": None})
+    j.append(ops_mod.OP_DELETE, seq=1, cseq=0,
+             ids=np.asarray([0, 2, 4], np.int32), aux={"chunk": None})
+    j.append(17, seq=2, cseq=0)                                    # FLUSH
+    j.append(18, seq=2, cseq=0, aux={"strategy": None, "chunk": None})
+    j.append(19, seq=2, cseq=1, aux={"new_capacity": 2 * CAP})     # GROW
+    j.append(ops_mod.OP_INSERT, seq=2, cseq=1, payload=_vec(31),
+             aux={"chunk": None})
+    j.append(17, seq=3, cseq=1)                                    # FLUSH
+    j.close()
+
+    rec = Session.recover(tmp_path, p, seed=9)
+    assert rec.recovery_info["step"] is None
+    assert rec.recovery_info["n_replayed"] == 7
+    _assert_bit_identical(_state_summary(rec, probe=False), want,
+                          "pre-refactor journal")
 
 
 def test_recover_without_checkpoint_replays_from_empty(tmp_path):

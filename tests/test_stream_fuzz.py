@@ -295,6 +295,58 @@ def test_consolidation_timing_invariance():
     assert len(ref_recalls) == len(outs[-1][0])
 
 
+def test_refine_timing_invariance():
+    """Background refinement must be invisible to the logical stream
+    (DESIGN.md §15): the same op sequence run with refinement disabled,
+    auto-triggered, or fired explicitly at different positions keeps the
+    identical acked insert ids, alive/present flags, size and op counter —
+    refine rewires edges only, and draws its keys from the registered
+    REFINE stream, never the op-key chain. Recall clears the floor and the
+    graph stays invariant-clean in every schedule."""
+    rng = np.random.default_rng(11)
+    base = rng.normal(size=(80, DIM)).astype(np.float32)
+    extra = [rng.normal(size=(10, DIM)).astype(np.float32) for _ in range(3)]
+    dele = [np.arange(12 * i, 12 * i + 12, dtype=np.int32) for i in range(3)]
+    Q = rng.normal(size=(24, DIM)).astype(np.float32)
+
+    def drive(maint_kw, explicit_at=()):
+        sess = Session(_params(**maint_kw), seed=4)
+        acked = [np.asarray(sess.insert(base).result())]
+        for i, (vs, ds) in enumerate(zip(extra, dele)):
+            sess.delete(ds)
+            acked.append(np.asarray(sess.insert(vs).result()))
+            sess.flush()
+            if i in explicit_at:
+                sess.refine(n=32)
+        sess.flush()
+        return acked, sess
+
+    runs = [
+        drive({}),                                            # never
+        drive({"refine_threshold": 25, "refine_chunk": 8}),   # auto
+        drive({}, explicit_at=(0, 2)),                        # explicit
+    ]
+    assert runs[1][1].timers.n_refines >= 1, "auto trigger never fired"
+    assert runs[2][1].timers.n_refines == 2
+    ref_acked, ref_sess = runs[0]
+    ref_alive = np.asarray(ref_sess.state.alive).copy()
+    ref_present = np.asarray(ref_sess.state.present).copy()
+    ref_size = int(np.asarray(ref_sess.state.size))
+    ref_ops = ref_sess._op_counter  # snapshot: recall() below issues queries
+    for acked, sess in runs:
+        for got, want in zip(acked, ref_acked):
+            np.testing.assert_array_equal(
+                got, want, err_msg="refine timing shifted assigned ids")
+        np.testing.assert_array_equal(np.asarray(sess.state.alive), ref_alive)
+        np.testing.assert_array_equal(
+            np.asarray(sess.state.present), ref_present)
+        assert int(np.asarray(sess.state.size)) == ref_size
+        assert sess._op_counter == ref_ops
+        errs = check_invariants(sess.state)
+        assert not errs, errs[:5]
+        assert sess.recall(Q, k=10) >= RECALL_FLOOR
+
+
 def test_auto_trigger_bounds_masked_fraction():
     """With consolidate_threshold set, the session auto-fires at delete and
     flush boundaries: the tombstone share stays bounded and freed slots are
